@@ -1,0 +1,95 @@
+"""Paper §3 complexity claims: K-factor inverse-update cost vs layer size.
+
+  K-FAC  — dense EVD                O(d³)
+  R-KFAC — RSVD                     O(d²(r+r_o))
+  B-KFAC — symmetric Brand update   O(d(r+n)² + (r+n)⁴)  → linear in d
+
+and inverse *application* (paper §5):
+  dense solve O(d³) / low-rank apply O(d²r·…) quadratic / Alg 8 linear.
+
+Measures wall time per call (jit-compiled, CPU), fits the log-log slope
+over the d-sweep, and asserts the ordering. Emits CSV rows.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import brand, rsvd, precond
+
+R, RO, NBS = 128, 10, 64
+
+
+def _timeit(fn, *args, reps=3, warmup=1):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def _fit_slope(ds, ts):
+    return float(np.polyfit(np.log(ds), np.log(ts), 1)[0])
+
+
+def run(quick: bool = False) -> List[dict]:
+    ds = [512, 1024, 2048] if quick else [512, 1024, 2048, 4096, 8192]
+    rows = []
+    times = {"kfac_evd": [], "rkfac_rsvd": [], "bkfac_brand": [],
+             "apply_dense": [], "apply_lowrank": [], "apply_linear": []}
+    key = jax.random.PRNGKey(0)
+    for d in ds:
+        r = min(R, d // 4)
+        X = jax.random.normal(key, (d, NBS)) / np.sqrt(NBS)
+        M = X @ X.T + 0.1 * jnp.eye(d)
+        U, D = brand.init_from_factor(X, r + NBS)
+
+        evd = jax.jit(lambda M: jnp.linalg.eigh(M))
+        rs = jax.jit(lambda M, k: rsvd.rsvd_psd(M, r, RO, k))
+        br = jax.jit(lambda U, D, X: brand.ea_brand_step(U, D, X, 0.95, r))
+        times["kfac_evd"].append(_timeit(evd, M))
+        times["rkfac_rsvd"].append(_timeit(rs, M, key))
+        times["bkfac_brand"].append(_timeit(br, U, D, X))
+
+        # inverse application to a gradient J = G Aᵀ of rank NBS
+        G = jax.random.normal(key, (d, NBS))
+        A = jax.random.normal(jax.random.fold_in(key, 1), (d, NBS))
+        J = G @ A.T
+        lam = jnp.asarray(0.1)
+        dense = jax.jit(lambda J, M: precond.dense_inv_apply(
+            J, M, lam, M, lam))
+        lowrank = jax.jit(lambda J, U, D: precond.kfac_precondition(
+            J, U, D, lam, U, D, lam))
+        linear = jax.jit(lambda G, A, U, D: precond.kfac_precondition_linear(
+            G, A, U, D, lam, U, D, lam))
+        if d <= 4096:
+            times["apply_dense"].append(_timeit(dense, J, M))
+        times["apply_lowrank"].append(_timeit(lowrank, J, U, D))
+        times["apply_linear"].append(_timeit(linear, G, A, U, D))
+
+    for name, ts in times.items():
+        dd = ds[: len(ts)]
+        slope = _fit_slope(dd, ts)
+        rows.append({"name": f"inverse_scaling/{name}",
+                     "us_per_call": ts[-1] * 1e6,
+                     "derived": f"loglog_slope={slope:.2f}"})
+    # ordering claim at the largest size: Brand < RSVD < EVD
+    rows.append({
+        "name": "inverse_scaling/ordering_at_max_d",
+        "us_per_call": 0.0,
+        "derived": "brand<rsvd<evd=%s" % (
+            times["bkfac_brand"][-1] < times["rkfac_rsvd"][-1] <
+            times["kfac_evd"][-1])})
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run(quick=True):
+        print(row)

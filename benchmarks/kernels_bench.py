@@ -1,0 +1,61 @@
+"""Pallas kernel micro-bench: per-kernel timing (interpret-validated; on
+CPU the oracle path is timed — the kernels are TPU-targeted) + allclose
+check against the ref oracle at bench shapes."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref, ops
+
+
+def _timeit(fn, *args, reps=5):
+    jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def run(quick: bool = False) -> List[dict]:
+    d, n, w, p = (1024, 256, 256, 512) if quick else (4096, 512, 768, 1024)
+    key = jax.random.PRNGKey(0)
+    M = jax.random.normal(key, (d, d)); M = (M + M.T) / 2
+    X = jax.random.normal(jax.random.fold_in(key, 1), (d, n))
+    U, _ = jnp.linalg.qr(jax.random.normal(jax.random.fold_in(key, 2),
+                                           (d, w)))
+    s = -jax.random.uniform(jax.random.fold_in(key, 3), (w,)) * 0.5
+    J = jax.random.normal(jax.random.fold_in(key, 4), (p, d))
+    lam = jnp.asarray(0.5)
+
+    rows = []
+    cases = [
+        ("ea_syrk", lambda: ops.ea_syrk(M, X, 0.95, False),
+         lambda: ref.ea_syrk(M, X, 0.95, False),
+         2.0 * d * d * n),
+        ("brand_panel", lambda: ops.brand_panel(U, X)[1],
+         lambda: ref.brand_panel(U, X)[1],
+         4.0 * d * w * n),
+        ("lowrank_apply", lambda: ops.lowrank_apply(J, U, s, lam),
+         lambda: ref.lowrank_apply(J, U, s, lam),
+         4.0 * p * d * w),
+    ]
+    for name, op_fn, ref_fn, flops in cases:
+        got = np.asarray(op_fn())
+        want = np.asarray(ref_fn())
+        np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+        t = _timeit(jax.jit(op_fn))
+        rows.append({"name": f"kernels/{name}", "us_per_call": t * 1e6,
+                     "derived": f"gflops={flops/t/1e9:.1f} allclose=True"})
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run(quick=True):
+        print(row)

@@ -1,0 +1,54 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  ``--full`` runs the paper-scale
+settings (slow on CPU); default is quick mode.  ``--only mod1,mod2``
+restricts modules.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import time
+
+MODULES = [
+    "inverse_scaling",    # §3 complexity claims (linear/quadratic/cubic)
+    "error_metrics",      # §4 Figures 1-2 + Table 1
+    "train_quality",      # §6 Table 2
+    "kernels_bench",      # Pallas hot-spot kernels vs oracle
+    "roofline",           # dry-run roofline table (§Roofline)
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", type=str, default="")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for modname in MODULES:
+        if only and modname not in only:
+            continue
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(f"benchmarks.{modname}")
+            rows = mod.run(quick=not args.full)
+            for row in rows:
+                derived = str(row.get("derived", "")).replace(",", ";")
+                print(f"{row['name']},{row['us_per_call']:.1f},{derived}")
+        except Exception as e:  # keep the harness going; report at the end
+            failures += 1
+            print(f"{modname}/ERROR,0.0,{type(e).__name__}: "
+                  f"{str(e)[:120]}".replace(",", ";"))
+        finally:
+            print(f"# {modname} took {time.time()-t0:.0f}s",
+                  file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,132 @@
+"""Brand's (2006) fast low-rank SVD/EVD modification — the paper's §2.3.
+
+Implements:
+  * ``brand_update``            — general (non-symmetric) Algorithm 2.
+  * ``sym_brand_update``        — symmetric Algorithm 3 (the one K-FAC uses).
+  * ``truncate``                — optimal rank-r truncation of a held (U, D).
+  * ``ea_brand_step``           — one B-KFAC K-factor step (Alg 4 lines 2-7):
+                                  truncate to r, then Brand-update with the
+                                  incoming EA term  ρ·M + (1-ρ)·X Xᵀ.
+
+Conventions
+-----------
+Eigenvalues are kept sorted *descending*.  A Brand state is a pair
+``(U, D)`` with ``U ∈ R[d, m]`` column-orthonormal and ``D ∈ R[m]`` so that
+the represented matrix is ``U @ diag(D) @ U.T``.  All functions are pure and
+jit/vmap friendly (static shapes; rank changes are expressed by zero modes).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _desc_eigh(M: Array) -> Tuple[Array, Array]:
+    """eigh with eigenvalues sorted descending. Returns (vals, vecs)."""
+    vals, vecs = jnp.linalg.eigh(M)
+    return vals[..., ::-1], vecs[..., :, ::-1]
+
+
+def truncate(U: Array, D: Array, r: int) -> Tuple[Array, Array]:
+    """Optimal rank-r truncation: keep the r strongest modes.
+
+    ``D`` is descending, so this is a slice. Shapes shrink — use only at
+    trace time with static ``r``.
+    """
+    return U[..., :, :r], D[..., :r]
+
+
+def brand_update(U: Array, D: Array, V: Array, A: Array, B: Array
+                 ) -> Tuple[Array, Array, Array]:
+    """General Brand update (paper Alg 2):  X̂ = U diag(D) Vᵀ + A Bᵀ.
+
+    U: (m, r), V: (d, r), D: (r,), A: (m, n), B: (d, n).
+    Returns (U', D', V') of ranks r+n (exact thin SVD of X̂).
+    """
+    r = U.shape[-1]
+    n = A.shape[-1]
+    # Project the update onto the current subspaces and their complements.
+    UtA = U.T @ A                                    # (r, n)
+    VtB = V.T @ B                                    # (r, n)
+    A_perp = A - U @ UtA
+    B_perp = B - V @ VtB
+    Qa, Ra = jnp.linalg.qr(A_perp)                   # (m, n), (n, n)
+    Qb, Rb = jnp.linalg.qr(B_perp)                   # (d, n), (n, n)
+    # M_S = [[I, UtA],[0, Ra]] @ diag(D, I) @ [[I, VtB],[0, Rb]]ᵀ  (eq. 7)
+    top = jnp.concatenate([jnp.diag(D) + UtA @ VtB.T, UtA @ Rb.T], axis=-1)
+    bot = jnp.concatenate([Ra @ VtB.T, Ra @ Rb.T], axis=-1)
+    Ms = jnp.concatenate([top, bot], axis=-2)        # (r+n, r+n)
+    Um, Dm, Vmt = jnp.linalg.svd(Ms)
+    U_new = jnp.concatenate([U, Qa], axis=-1) @ Um
+    V_new = jnp.concatenate([V, Qb], axis=-1) @ Vmt.T
+    del r, n
+    return U_new, Dm, V_new
+
+
+def sym_brand_update(U: Array, D: Array, A: Array) -> Tuple[Array, Array]:
+    """Symmetric Brand update (paper Alg 3):  X̂ = U diag(D) Uᵀ + A Aᵀ.
+
+    U: (d, r) column-orthonormal, D: (r,) descending, A: (d, n).
+    Returns (U', D') with U' (d, r+n), D' (r+n,) descending — the exact
+    EVD of X̂ (X̂ is symmetric psd when D ≥ 0).
+
+    Derivation: with C = UᵀA and A⊥ = A − UC = Q R,
+        X̂ = [U Q] [[diag(D)+CCᵀ, CRᵀ],[RCᵀ, RRᵀ]] [U Q]ᵀ
+    and the middle (r+n)² matrix is symmetric — one small eigh finishes it.
+    """
+    C = U.T @ A                                      # (r, n)
+    A_perp = A - U @ C                               # (d, n)
+    Q, R = jnp.linalg.qr(A_perp)                     # (d, n), (n, n)
+    top = jnp.concatenate([jnp.diag(D) + C @ C.T, C @ R.T], axis=-1)
+    bot = jnp.concatenate([R @ C.T, R @ R.T], axis=-1)
+    Ms = jnp.concatenate([top, bot], axis=-2)        # (r+n, r+n)
+    Dm, Wm = _desc_eigh(Ms)
+    U_new = jnp.concatenate([U, Q], axis=-1) @ Wm    # (d, r+n)
+    return U_new, Dm
+
+
+def ea_brand_step(U: Array, D: Array, X: Array, rho: float, r: int
+                  ) -> Tuple[Array, Array]:
+    """One B-KFAC K-factor inverse-representation step (paper Alg 4).
+
+    Held state (U, D) has rank r+n (from the previous step).  We truncate to
+    the r strongest modes (paper §3.1 "Controlling the size"), then apply the
+    symmetric Brand update with the incoming EA term:
+
+        M ← ρ · trunc_r(U diag(D) Uᵀ) + (1-ρ) · X Xᵀ
+
+    X: (d, n) — the incoming K-factor square root (activations or
+    output-gradients, already transposed to column-sample layout).
+    Returns (U', D') of rank r+n.
+    """
+    Ut, Dt = truncate(U, D, r)
+    return sym_brand_update(Ut, rho * Dt, jnp.sqrt(1.0 - rho) * X)
+
+
+def init_from_factor(X: Array, m: int) -> Tuple[Array, Array]:
+    """Initialize a Brand state from the first factor M₀ = X Xᵀ without ever
+    forming the d×d product (the low-memory property of §3.5).
+
+    X: (d, n).  Returns (U, D) padded with zero modes to width ``m`` so the
+    state shape is static across steps.
+    """
+    d, n = X.shape
+    # Thin SVD of X gives the EVD of X Xᵀ: eigvecs = left singular vectors,
+    # eigvals = singular values squared.
+    Ux, s, _ = jnp.linalg.svd(X, full_matrices=False)  # (d, n), (n,)
+    D = s * s
+    if n >= m:
+        return Ux[:, :m], D[:m]
+    pad_u = jnp.zeros((d, m - n), dtype=X.dtype)
+    pad_d = jnp.zeros((m - n,), dtype=X.dtype)
+    return jnp.concatenate([Ux, pad_u], axis=1), jnp.concatenate([D, pad_d])
+
+
+@functools.partial(jax.jit, static_argnames=("r",))
+def ea_brand_step_jit(U: Array, D: Array, X: Array, rho: float, r: int):
+    return ea_brand_step(U, D, X, rho, r)

@@ -1,0 +1,346 @@
+"""The K-FAC optimizer family (K-FAC / R-KFAC / B-KFAC / B-R-KFAC /
+B-KFAC-C) as a single policy-driven JAX optimizer.
+
+Model contract
+--------------
+A K-FAC-compatible model provides *taps*: for every preconditioned matmul
+``y = x @ W`` (W of shape (d_in, d_out), possibly stacked over scanned
+layers / experts) the model
+
+  * accepts a ``probes`` pytree — zeros of shape (*stack, n_stat, d_out)
+    added to the layer output on an ``n_stat``-token slice, and
+  * emits ``acts`` — the corresponding inputs, (*stack, n_stat, d_in).
+
+``jax.grad`` w.r.t. a probe is exactly ∂L/∂y on that slice, so
+(acts, probe-grads) are the paper's (A_k, G_k) K-factor square roots — the
+functional replacement for PyTorch's forward/backward hooks.
+
+Scheduling (paper §2.2/§6) is *static*: the trainer calls ``update`` with
+python-bool flags (do_stats / do_light / do_heavy) derived from the step
+number, so each step variant compiles to a lean HLO (production pattern;
+also keeps the dry-run rooflines honest).
+
+Step variants per paper variant, at step k:
+  do_stats  = k % T_updt == 0                      (EA absorb, all variants)
+  do_light  = k % T_brand == 0   (B-variants: Brand update;   else no-op)
+  do_heavy  = k % T_inv  == 0    (kfac: EVD, rkfac: RSVD)
+            = k % T_rsvd == 0    (brkfac: RSVD overwrite)
+            = k % T_corct == 0   (bkfacc: light correction)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kfactor, policy, precond
+from repro.optim import adamw as _adamw
+from repro.optim import base as optbase
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# tap descriptions
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TapInfo:
+    """Static description of one tapped matmul family."""
+    param_path: str                 # "/"-joined path to W inside params
+    d_in: int
+    d_out: int
+    stack: Tuple[int, ...] = ()     # leading stacked dims, e.g. (L,), (L, E)
+    n_stat: int = 512               # stats tokens per layer per stats step
+    linear_apply: bool = False      # Alg 8: step from factors, W stop-grad'd
+
+
+@dataclasses.dataclass(frozen=True)
+class KfacConfig:
+    policy: policy.PolicyConfig = policy.PolicyConfig()
+    lr: optbase.Schedule = optbase.constant(0.3)
+    damping_phi: optbase.Schedule = optbase.constant(0.1)
+    momentum: float = 0.0
+    weight_decay: float = 7e-4
+    clip: float = 0.07              # global-norm clip on the update
+    spectrum_continuation: bool = True
+    use_kernels: bool = False       # route hot matmuls via kernels/ops.py
+    T_updt: int = 25
+    T_inv: int = 250                # kfac / rkfac heavy period
+    T_brand: int = 25               # B-variants light period
+    T_rsvd: int = 250               # brkfac overwrite period
+    T_corct: int = 500              # bkfacc correction period
+    # fallback optimizer for non-tapped params
+    fallback_lr: optbase.Schedule = optbase.constant(1e-3)
+    fallback_wd: float = 0.0
+
+    def flags(self, step: int) -> Dict[str, bool]:
+        """Static step-variant flags for python-level dispatch."""
+        v = self.policy.variant
+        do_stats = step % self.T_updt == 0
+        if v in ("kfac", "rkfac"):
+            return dict(do_stats=do_stats, do_light=False,
+                        do_heavy=step % self.T_inv == 0)
+        do_light = step % self.T_brand == 0
+        if v == "brkfac":
+            return dict(do_stats=do_stats, do_light=do_light,
+                        do_heavy=step % self.T_rsvd == 0)
+        if v == "bkfacc":
+            return dict(do_stats=do_stats, do_light=do_light,
+                        do_heavy=step % self.T_corct == 0)
+        return dict(do_stats=do_stats, do_light=do_light, do_heavy=False)
+
+
+class TapState(NamedTuple):
+    A: kfactor.KFactorState      # forward factor  (stacked over tap.stack)
+    G: kfactor.KFactorState      # backward factor
+
+
+class KfacState(NamedTuple):
+    step: Array
+    n_stats: Array               # how many stats batches absorbed
+    factors: Dict[str, TapState]
+    momentum: Any                # tree over tapped params (or None)
+    fallback: Any                # AdamW state over non-tapped params
+
+
+# ---------------------------------------------------------------------------
+# param-tree path helpers
+# ---------------------------------------------------------------------------
+
+def get_path(tree, path: str):
+    node = tree
+    for part in path.split("/"):
+        node = node[part]
+    return node
+
+
+def set_path(tree, path: str, value):
+    parts = path.split("/")
+    def rec(node, i):
+        if i == len(parts) - 1:
+            new = dict(node)
+            new[parts[i]] = value
+            return new
+        new = dict(node)
+        new[parts[i]] = rec(node[parts[i]], i + 1)
+        return new
+    return rec(tree, 0)
+
+
+def _split_params(params, taps: Dict[str, TapInfo]):
+    """→ (tapped: {name: W}, rest: params-with-tapped-zeroed-out-paths)."""
+    tapped = {name: get_path(params, t.param_path) for name, t in taps.items()}
+    return tapped
+
+
+def _untapped_mask(params, taps):
+    """Boolean tree: True where the leaf is NOT owned by a tap."""
+    paths = {t.param_path for t in taps.values()}
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+
+    def leaf_path(kp):
+        return "/".join(str(k.key) for k in kp)
+
+    return {leaf_path(kp) for kp, _ in flat} - paths
+
+
+# ---------------------------------------------------------------------------
+# the optimizer
+# ---------------------------------------------------------------------------
+
+def _vmap_n(fn, n):
+    for _ in range(n):
+        fn = jax.vmap(fn)
+    return fn
+
+
+class Kfac:
+    """K-FAC optimizer over a tapped model. Not a pytree — holds statics."""
+
+    def __init__(self, cfg: KfacConfig, taps: Dict[str, TapInfo]):
+        self.cfg = cfg
+        self.taps = dict(taps)
+        self.specs = {}
+        for name, t in self.taps.items():
+            self.specs[name] = dict(
+                A=policy.make_factor_spec(cfg.policy, t.d_in, t.n_stat),
+                G=policy.make_factor_spec(cfg.policy, t.d_out, t.n_stat),
+            )
+        self._fallback = _adamw.adamw(cfg.fallback_lr,
+                                      weight_decay=cfg.fallback_wd)
+
+    # -- state ------------------------------------------------------------
+    def init(self, params) -> KfacState:
+        factors = {}
+        for name, t in self.taps.items():
+            def stacked(spec):
+                st = spec.init()
+                for dim in reversed(t.stack):
+                    st = jax.tree_util.tree_map(
+                        lambda x: jnp.broadcast_to(x, (dim,) + x.shape), st)
+                return st
+            factors[name] = TapState(A=stacked(self.specs[name]["A"]),
+                                     G=stacked(self.specs[name]["G"]))
+        mom = None
+        if self.cfg.momentum > 0:
+            mom = {n: jnp.zeros_like(get_path(params, t.param_path),
+                                     dtype=jnp.float32)
+                   for n, t in self.taps.items()}
+        # fallback adamw over the full tree (updates masked to untapped)
+        fb = self._fallback.init(params)
+        return KfacState(step=jnp.zeros((), jnp.int32),
+                         n_stats=jnp.zeros((), jnp.int32),
+                         factors=factors, momentum=mom, fallback=fb)
+
+    # -- per-tap pieces -----------------------------------------------------
+    def _stats_factors(self, name, acts, probe_grads, n_tokens):
+        """(X_A, X_G): K-factor square roots, (*stack, d, n_stat)."""
+        t = self.taps[name]
+        a = acts[name]                       # (*stack, n, d_in)
+        g = probe_grads[name]                # (*stack, n, d_out)
+        n = a.shape[-2]
+        scale = 1.0 / jnp.sqrt(jnp.asarray(n, jnp.float32))
+        X_A = jnp.swapaxes(a, -1, -2).astype(jnp.float32) * scale
+        # probe grads are w.r.t. the *mean* loss → per-token grads are
+        # O(1/n_tokens); rescale to per-token sum-loss grads (Martens-Grosse)
+        X_G = (jnp.swapaxes(g, -1, -2).astype(jnp.float32)
+               * jnp.asarray(n_tokens, jnp.float32) * scale)
+        return X_A, X_G
+
+    def _factor_update(self, name, side, st, X, key, first,
+                       do_stats, do_light, do_heavy):
+        spec = self.specs[name][side]
+        nstack = len(self.taps[name].stack)
+
+        def one(st, X, key):
+            out = st
+            if do_stats:
+                out = kfactor.stats_step(spec, out, X, first)
+            if do_light or do_heavy:
+                heavy = jnp.asarray(do_heavy)
+                out = kfactor.inverse_rep_step(spec, out, X, key, first, heavy)
+            return out
+
+        if nstack == 0:
+            return one(st, X, key)
+        # split keys across the stacked dims (static count)
+        stack = self.taps[name].stack
+        n_keys = 1
+        for dim in stack:
+            n_keys *= int(dim)
+        keys = jax.random.split(key, n_keys).reshape(stack + (2,))
+        fn = _vmap_n(lambda s, x, k: one(s, x, k), nstack)
+        return fn(st, X, keys)
+
+    def _precondition(self, name, st: TapState, grad_w, phi,
+                      g_factor=None, a_factor=None):
+        """Preconditioned step for W (same shape as grad_w)."""
+        t = self.taps[name]
+        use_k = self.cfg.use_kernels
+
+        def one(U_a, D_a, U_g, D_g, J, G=None, A=None):
+            lam_a = precond.damping_from_spectrum(D_a, phi)
+            lam_g = precond.damping_from_spectrum(D_g, phi)
+            if self.cfg.spectrum_continuation:
+                D_a, lam_a = precond.spectrum_continuation(D_a, lam_a)
+                D_g, lam_g = precond.spectrum_continuation(D_g, lam_g)
+            if G is not None:
+                S = precond.kfac_precondition_linear(
+                    G, A, U_g, D_g, lam_g, U_a, D_a, lam_a, use_k)
+            else:
+                S = precond.kfac_precondition(
+                    J, U_g, D_g, lam_g, U_a, D_a, lam_a, use_k)
+            return S
+
+        nstack = len(t.stack)
+        if t.linear_apply:
+            # Alg 8: step from gradient factors; grad_w is unused (stop-grad)
+            fn = _vmap_n(one, nstack) if nstack else one
+            J = jnp.swapaxes(grad_w, -1, -2)
+            S = _vmap_n(one, nstack)(st.A.U, st.A.D, st.G.U, st.G.D, J,
+                                     g_factor, a_factor) if nstack else \
+                one(st.A.U, st.A.D, st.G.U, st.G.D, J, g_factor, a_factor)
+        else:
+            J = jnp.swapaxes(grad_w, -1, -2).astype(jnp.float32)
+            fn = _vmap_n(lambda Ua, Da, Ug, Dg, JJ: one(Ua, Da, Ug, Dg, JJ),
+                         nstack)
+            S = fn(st.A.U, st.A.D, st.G.U, st.G.D, J) if nstack else \
+                one(st.A.U, st.A.D, st.G.U, st.G.D, J)
+        return jnp.swapaxes(S, -1, -2)       # back to (d_in, d_out) layout
+
+    # -- the update ---------------------------------------------------------
+    def update(self, grads, state: KfacState, params, *, acts, probe_grads,
+               n_tokens, rng, do_stats: bool, do_light: bool,
+               do_heavy: bool):
+        """One optimizer step.  Flags are PYTHON bools (static)."""
+        cfg = self.cfg
+        first = state.n_stats == 0
+        phi = cfg.damping_phi(state.step)
+        lr = cfg.lr(state.step)
+
+        # 1) factor updates -------------------------------------------------
+        factors = dict(state.factors)
+        any_factor_work = do_stats or do_light or do_heavy
+        if any_factor_work:
+            keys = jax.random.split(rng, 2 * len(self.taps))
+            for i, name in enumerate(sorted(self.taps)):
+                X_A, X_G = self._stats_factors(name, acts, probe_grads,
+                                               n_tokens)
+                stA = self._factor_update(name, "A", factors[name].A, X_A,
+                                          keys[2 * i], first,
+                                          do_stats, do_light, do_heavy)
+                stG = self._factor_update(name, "G", factors[name].G, X_G,
+                                          keys[2 * i + 1], first,
+                                          do_stats, do_light, do_heavy)
+                factors[name] = TapState(A=stA, G=stG)
+
+        # 2) preconditioned updates for tapped params -----------------------
+        updates = grads  # start from grads; overwrite tapped leaves
+        new_mom = dict(state.momentum) if state.momentum is not None else None
+        for name, t in self.taps.items():
+            W = get_path(params, t.param_path)
+            gW = get_path(grads, t.param_path)
+            gfac = afac = None
+            if t.linear_apply:
+                a = acts[name]
+                g = probe_grads[name]
+                afac = jnp.swapaxes(a, -1, -2).astype(jnp.float32)
+                gfac = jnp.swapaxes(g, -1, -2).astype(jnp.float32)
+            S = self._precondition(name, factors[name], gW, phi,
+                                   g_factor=gfac, a_factor=afac)
+            S = S + cfg.weight_decay * W.astype(jnp.float32)
+            if new_mom is not None:
+                m = cfg.momentum * new_mom[name] + S
+                new_mom[name] = m
+                S = m
+            updates = set_path(updates, t.param_path, S)
+
+        # 3) clip + lr for tapped; AdamW for the rest ------------------------
+        tapped_paths = {t.param_path for t in self.taps.values()}
+        fb_updates, fb_state = self._fallback.update(grads, state.fallback,
+                                                     params)
+
+        def finalize(path_keys, kfac_u, fb_u):
+            path = "/".join(str(k.key) for k in path_keys)
+            if path in tapped_paths:
+                return (-lr * kfac_u.astype(jnp.float32))
+            return fb_u
+
+        updates = jax.tree_util.tree_map_with_path(finalize, updates,
+                                                   fb_updates)
+        if cfg.clip > 0:
+            updates = optbase.clip_by_global_norm(updates,
+                                                  jnp.asarray(cfg.clip))
+
+        new_state = KfacState(
+            step=state.step + 1,
+            n_stats=state.n_stats + jnp.asarray(do_stats, jnp.int32),
+            factors=factors,
+            momentum=new_mom,
+            fallback=fb_state,
+        )
+        return updates, new_state

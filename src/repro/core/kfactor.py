@@ -1,0 +1,228 @@
+"""EA K-factor state and its update modes — the heart of the paper.
+
+A K-factor is the exponential average  M_k = ρ M_{k-1} + (1-ρ) X_k X_kᵀ
+(paper eq. 5/8).  Every optimizer variant in the paper is a choice of how the
+*inverse representation* of M is maintained:
+
+  mode        holds M?   update of (U, D)                         paper
+  ----------  ---------  ---------------------------------------  -------
+  EVD         yes        dense eigh of M every T_inv              K-FAC
+  RSVD        yes        rsvd_psd(M) every T_inv                  R-KFAC
+  BRAND       no         ea_brand_step every T_brand              B-KFAC
+  BRAND_RSVD  yes        Brand every T_brand + RSVD overwrite     B-R-KFAC
+                         every T_rsvd
+  BRAND_CORR  yes        Brand every T_brand + light correction   B-KFAC-C
+                         (Alg 6) every T_corct
+
+The state is a pytree with static shapes so it can live inside a jitted,
+sharded train step and be vmapped across scan-stacked layers / experts.
+``width`` (the number of held modes) is r + n_stat for Brand-family modes and
+r for RSVD/EVD modes — always static.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import brand, rsvd
+
+Array = jax.Array
+
+
+class Mode(enum.Enum):
+    EVD = "evd"                # K-FAC baseline
+    RSVD = "rsvd"              # R-KFAC (RS-KFAC of [3])
+    BRAND = "brand"            # B-KFAC  (pure; low-memory, M never formed)
+    BRAND_RSVD = "brand_rsvd"  # B-R-KFAC
+    BRAND_CORR = "brand_corr"  # B-KFAC-C
+
+
+# Modes that must materialize the dense d×d EA factor.
+_NEEDS_M = {Mode.EVD, Mode.RSVD, Mode.BRAND_RSVD, Mode.BRAND_CORR}
+# Modes that run the Brand online update.
+_HAS_BRAND = {Mode.BRAND, Mode.BRAND_RSVD, Mode.BRAND_CORR}
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class KFactorState:
+    """Inverse representation of one EA K-factor.
+
+    U: (d, width) column-orthonormal basis; D: (width,) descending eigvals.
+    M: (d, d) dense EA factor or a (1, 1) placeholder for pure-Brand.
+    """
+    U: Array
+    D: Array
+    M: Array
+
+
+def make_state(d: int, width: int, needs_m: bool, dtype=jnp.float32
+               ) -> KFactorState:
+    m_shape = (d, d) if needs_m else (1, 1)
+    return KFactorState(
+        U=jnp.zeros((d, width), dtype),
+        D=jnp.zeros((width,), dtype),
+        M=jnp.zeros(m_shape, dtype),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class KFactorSpec:
+    """Static description of one K-factor's update policy."""
+    d: int                      # side of the factor
+    r: int                      # truncation / target rank
+    n_stat: int                 # incoming factor columns per stats step
+    mode: Mode
+    rho: float = 0.95
+    r_o: int = 10               # RSVD oversampling
+    n_pwr_iter: int = 2
+    n_crc: int = 0              # correction subspace size (BRAND_CORR)
+
+    @property
+    def width(self) -> int:
+        if self.mode in _HAS_BRAND:
+            return min(self.r + self.n_stat, self.d)
+        return min(self.r, self.d)
+
+    @property
+    def needs_m(self) -> bool:
+        return self.mode in _NEEDS_M
+
+    def init(self, dtype=jnp.float32) -> KFactorState:
+        return make_state(self.d, self.width, self.needs_m, dtype)
+
+
+# ---------------------------------------------------------------------------
+# individual update operations (all pure; X is (d, n_stat))
+# ---------------------------------------------------------------------------
+
+def ea_update_m(M: Array, X: Array, rho: float, first: Array) -> Array:
+    """M ← ρ M + (1-ρ) X Xᵀ  (κ(0)=1 on the first-ever update, eq. 5)."""
+    upd = X @ X.T
+    coef = jnp.where(first, 1.0, 1.0 - rho)
+    keep = jnp.where(first, 0.0, rho)
+    return keep * M + coef * upd
+
+
+def ea_update_m_kernel(M: Array, X: Array, rho: float, first: Array) -> Array:
+    """Same as ea_update_m but routed through the Pallas EA-SYRK kernel when
+    shapes are MXU-aligned (ops.py decides; oracle fallback otherwise)."""
+    from repro.kernels import ops as kops
+    return kops.ea_syrk(M, X, rho, first)
+
+
+def brand_step(spec: KFactorSpec, st: KFactorState, X: Array, first: Array
+               ) -> KFactorState:
+    """B-update (Alg 4): truncate to r then symmetric Brand with the EA term.
+
+    On the first-ever stats batch the state is empty — initialize from the
+    factor directly (exact, low-memory)."""
+    def _init(_):
+        U0, D0 = brand.init_from_factor(X, spec.width)
+        return KFactorState(U=U0, D=D0, M=st.M)
+
+    def _update(_):
+        U, D = brand.ea_brand_step(st.U, st.D, X, spec.rho, spec.r)
+        if U.shape[1] > spec.width:   # r + n_stat exceeded d: re-truncate
+            U, D = U[:, :spec.width], D[:spec.width]
+        return KFactorState(U=U, D=D, M=st.M)
+
+    return jax.lax.cond(first, _init, _update, operand=None)
+
+
+def rsvd_overwrite(spec: KFactorSpec, st: KFactorState, key: Array
+                   ) -> KFactorState:
+    """RSVD of the dense EA factor → overwrite the low-rank state
+    (R-KFAC inverse update / B-R-KFAC overwrite)."""
+    U, D = rsvd.rsvd_psd(st.M, spec.r, spec.r_o, key, spec.n_pwr_iter,
+                         pad_to=spec.width)
+    return KFactorState(U=U, D=D, M=st.M)
+
+
+def evd_overwrite(spec: KFactorSpec, st: KFactorState) -> KFactorState:
+    """Dense EVD of the EA factor (K-FAC baseline inverse update)."""
+    U, D = rsvd.exact_evd(st.M, r=spec.width, pad_to=spec.width)
+    return KFactorState(U=U, D=D, M=st.M)
+
+
+def light_correction(spec: KFactorSpec, st: KFactorState, key: Array
+                     ) -> KFactorState:
+    """Alg 6: re-solve the eigenproblem of M in a random n_crc-column
+    subspace of U and patch those columns/eigenvalues in place.
+
+    Correction reads the *dense* M (needs_m mode).  Columns are chosen among
+    the first r (the post-truncation basis), uniformly without replacement —
+    the paper argues random beats top-modes (§3.4).
+    """
+    n_crc = spec.n_crc
+    idx = jax.random.choice(key, spec.r, shape=(n_crc,), replace=False)
+    Usub = st.U[:, idx]                               # (d, n_crc)
+    Ms = Usub.T @ (st.M @ Usub)                       # (n_crc, n_crc)
+    Ms = 0.5 * (Ms + Ms.T)
+    vals, vecs = jnp.linalg.eigh(Ms)
+    vals, vecs = vals[::-1], vecs[:, ::-1]
+    U_new = st.U.at[:, idx].set(Usub @ vecs)
+    D_new = st.D.at[idx].set(vals)
+    return KFactorState(U=U_new, D=D_new, M=st.M)
+
+
+# ---------------------------------------------------------------------------
+# fused per-step transition: stats step + (scheduled) inverse-rep step
+# ---------------------------------------------------------------------------
+
+def stats_step(spec: KFactorSpec, st: KFactorState, X: Array, first: Array
+               ) -> KFactorState:
+    """Absorb one incoming stats factor X into the EA (dense M if held)."""
+    if spec.needs_m:
+        M = ea_update_m_kernel(st.M, X, spec.rho, first)
+        return KFactorState(U=st.U, D=st.D, M=M)
+    return st
+
+
+def inverse_rep_step(spec: KFactorSpec, st: KFactorState, X: Array,
+                     key: Array, first: Array, heavy: Array) -> KFactorState:
+    """Scheduled inverse-representation update.
+
+    ``heavy`` selects the periodic heavy op for the mode (RSVD overwrite /
+    EVD / correction); the light op is the Brand update (Brand modes) or a
+    no-op (EVD/RSVD modes, matching the paper's T_inv > T_updt regime).
+    """
+    if spec.mode is Mode.EVD:
+        return jax.lax.cond(heavy, lambda s: evd_overwrite(spec, s),
+                            lambda s: s, st)
+    if spec.mode is Mode.RSVD:
+        return jax.lax.cond(heavy, lambda s: rsvd_overwrite(spec, s, key),
+                            lambda s: s, st)
+    if spec.mode is Mode.BRAND:
+        return brand_step(spec, st, X, first)
+    if spec.mode is Mode.BRAND_RSVD:
+        st = brand_step(spec, st, X, first)
+        return jax.lax.cond(heavy, lambda s: rsvd_overwrite(spec, s, key),
+                            lambda s: s, st)
+    if spec.mode is Mode.BRAND_CORR:
+        st = brand_step(spec, st, X, first)
+        return jax.lax.cond(heavy, lambda s: light_correction(spec, s, key),
+                            lambda s: s, st)
+    raise ValueError(spec.mode)
+
+
+# ---------------------------------------------------------------------------
+# reconstruction helpers (testing / error metrics)
+# ---------------------------------------------------------------------------
+
+def reconstruct(st: KFactorState) -> Array:
+    """Dense matrix represented by the low-rank state (tests only)."""
+    return (st.U * st.D) @ st.U.T
+
+
+def exact_ea(Xs, rho: float) -> Array:
+    """Ground-truth EA K-factor from a list of stats factors (tests only)."""
+    M = Xs[0] @ Xs[0].T
+    for X in Xs[1:]:
+        M = rho * M + (1 - rho) * (X @ X.T)
+    return M

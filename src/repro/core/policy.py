@@ -1,0 +1,66 @@
+"""Per-layer K-factor method selection — the paper's §3.5 "mixture of
+Randomized K-FACs and Brand New K-FACs" elevated to a policy engine.
+
+Rules (paper §3.5 + §5):
+  * the B-update only pays off when  d > r + n_stat  (wide layers);
+  * the dense EA factor can only be *formed* when d ≤ max_dense_dim
+    (memory gate — e.g. a 262k-vocab factor would need 275 GB);
+  * modes that require M (EVD / RSVD / B-R overwrite / correction)
+    therefore degrade to pure BRAND above the memory gate — this is the
+    paper's "B-KFAC is a low-memory K-FAC" property;
+  * below the B-threshold the factor is small: use the variant's dense-ish
+    mode (EVD for kfac, RSVD otherwise).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.kfactor import KFactorSpec, Mode
+
+#: optimizer variant → preferred mode for (wide, narrow) factors
+_VARIANT_MODES = {
+    "kfac":   (Mode.EVD, Mode.EVD),
+    "rkfac":  (Mode.RSVD, Mode.RSVD),
+    "bkfac":  (Mode.BRAND, Mode.RSVD),
+    "brkfac": (Mode.BRAND_RSVD, Mode.RSVD),
+    "bkfacc": (Mode.BRAND_CORR, Mode.RSVD),
+}
+
+VARIANTS = tuple(_VARIANT_MODES)
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyConfig:
+    variant: str = "bkfac"
+    r: int = 256                 # truncation / target rank
+    r_o: int = 10                # RSVD oversampling
+    n_pwr_iter: int = 2
+    rho: float = 0.95
+    phi_crc: float = 0.5         # n_crc = phi_crc * r  (B-KFAC-C)
+    max_dense_dim: int = 8192    # memory gate for forming the d×d factor
+
+
+def select_mode(cfg: PolicyConfig, d: int, n_stat: int) -> Mode:
+    if cfg.variant not in _VARIANT_MODES:
+        raise ValueError(f"unknown K-FAC variant {cfg.variant!r}; "
+                         f"one of {VARIANTS}")
+    wide_mode, narrow_mode = _VARIANT_MODES[cfg.variant]
+    r = min(cfg.r, d)
+    b_applicable = d > r + n_stat          # paper's applicability condition
+    mode = wide_mode if b_applicable else narrow_mode
+    # memory gate: cannot form M → must be pure Brand (low-memory property)
+    if d > cfg.max_dense_dim and mode in (Mode.EVD, Mode.RSVD,
+                                          Mode.BRAND_RSVD, Mode.BRAND_CORR):
+        mode = Mode.BRAND
+    # tiny factors: EVD is exact and cheapest of all
+    if d <= r + cfg.r_o:
+        mode = Mode.EVD
+    return mode
+
+
+def make_factor_spec(cfg: PolicyConfig, d: int, n_stat: int) -> KFactorSpec:
+    mode = select_mode(cfg, d, n_stat)
+    r = min(cfg.r, d)
+    n_crc = max(1, int(cfg.phi_crc * r)) if mode == Mode.BRAND_CORR else 0
+    return KFactorSpec(d=d, r=r, n_stat=n_stat, mode=mode, rho=cfg.rho,
+                       r_o=cfg.r_o, n_pwr_iter=cfg.n_pwr_iter, n_crc=n_crc)

@@ -1,0 +1,110 @@
+"""Inverse application of low-rank K-factor representations to gradients.
+
+Paper Alg 1 (lines 14-18) — quadratic application:
+    M = J V_A [(D_A+λI)⁻¹ − (1/λ)I] V_Aᵀ + (1/λ) J
+    S = V_Γ [(D_Γ+λI)⁻¹ − (1/λ)I] V_Γᵀ M + (1/λ) M
+i.e. (U diag(D) Uᵀ + λI)⁻¹ applied exactly on the span and as (1/λ)I off it.
+
+Paper Alg 8 (§5, left as future work there — implemented here) — linear
+application for layers where the per-step sample count n_M < d: precondition
+the gradient *factors* (A, G with Mat(g)=G Aᵀ) and only then multiply.
+
+Paper §3.5 spectrum continuation: before inverting, shift the retained
+spectrum down by its smallest retained eigenvalue and fold that amount into
+λ — overestimating the missing tail gives more conservative steps.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def spectrum_continuation(D: Array, lam: Array) -> Tuple[Array, Array]:
+    """λ ← λ + min D, D ← D − (min D)  (paper §3.5).
+
+    min is over the *retained* (positive) modes so zero-padded static-width
+    states (RSVD pad_to) get the same treatment as fully-populated Brand
+    states — otherwise the continuation would act on B-variants only and
+    bias the inverse comparison.
+    """
+    pos = D > 0
+    dmin = jnp.min(jnp.where(pos, D, jnp.inf))
+    dmin = jnp.where(jnp.isfinite(dmin), dmin, 0.0)
+    return jnp.maximum(D - dmin, 0.0), lam + dmin
+
+
+def damping_from_spectrum(D: Array, phi: Array) -> Array:
+    """Paper §6: λ = φ_λ · λ_max where λ_max is the largest (approximate)
+    eigenvalue of the represented K-factor."""
+    return phi * jnp.maximum(jnp.max(D), 1e-12)
+
+
+def lowrank_inv_diag(D: Array, lam: Array) -> Array:
+    """The diagonal (D+λ)⁻¹ − 1/λ used on the span (negative values —
+    it *removes* the over-counted 1/λ there)."""
+    return 1.0 / (D + lam) - 1.0 / lam
+
+
+def apply_inv_right(J: Array, U: Array, D: Array, lam: Array,
+                    use_kernel: bool = False) -> Array:
+    """J @ (U diag(D) Uᵀ + λI)⁻¹  — right application (A-side).
+
+    J: (p, d), U: (d, w).  O(p·d·w): two tall-skinny matmuls + rank-1 work.
+    """
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.lowrank_apply(J, U, lowrank_inv_diag(D, lam), lam)
+    T = J @ U                                   # (p, w)
+    T = T * lowrank_inv_diag(D, lam)            # scale modes
+    return T @ U.T + J / lam
+
+
+def apply_inv_left(J: Array, U: Array, D: Array, lam: Array,
+                   use_kernel: bool = False) -> Array:
+    """(U diag(D) Uᵀ + λI)⁻¹ @ J — left application (Γ-side). J: (d, p)."""
+    return apply_inv_right(J.T, U, D, lam, use_kernel).T
+
+
+def kfac_precondition(J: Array,
+                      U_g: Array, D_g: Array, lam_g: Array,
+                      U_a: Array, D_a: Array, lam_a: Array,
+                      use_kernel: bool = False) -> Array:
+    """Full quadratic application (Alg 1): S = Γ̄⁻¹ J Ā⁻¹.
+
+    J is the layer gradient in matrix form (d_out, d_in) = Mat(g);
+    Γ̄ is (d_out, d_out), Ā is (d_in, d_in).
+    """
+    M = apply_inv_right(J, U_a, D_a, lam_a, use_kernel)     # J Ā⁻¹
+    return apply_inv_left(M, U_g, D_g, lam_g, use_kernel)   # Γ̄⁻¹ (·)
+
+
+def kfac_precondition_linear(G: Array, A: Array,
+                             U_g: Array, D_g: Array, lam_g: Array,
+                             U_a: Array, D_a: Array, lam_a: Array,
+                             use_kernel: bool = False) -> Array:
+    """Alg 8 — linear-in-d application from gradient factors.
+
+    The layer gradient is Mat(g) = G Aᵀ with G (d_out, n), A (d_in, n)
+    (n = per-step samples).  Precondition each factor then contract:
+
+        S = (Γ̄⁻¹ G) (Aᵀ Ā⁻¹)        — O(r·d·n) instead of O(r·d²).
+
+    Only beneficial (and only used) when n < d (paper's applicability
+    condition; holds for FC layers with n = batch).
+    """
+    Gp = apply_inv_left(G, U_g, D_g, lam_g, use_kernel)     # (d_out, n)
+    Ap = apply_inv_right(A.T, U_a, D_a, lam_a, use_kernel)  # (n, d_in)
+    return Gp @ Ap
+
+
+def dense_inv_apply(J: Array, M_g: Array, lam_g: Array,
+                    M_a: Array, lam_a: Array) -> Array:
+    """O(d³) dense-solve application (K-FAC reference path, tests/bench)."""
+    d_out, d_in = J.shape
+    A = M_a + lam_a * jnp.eye(d_in, dtype=J.dtype)
+    Gm = M_g + lam_g * jnp.eye(d_out, dtype=J.dtype)
+    return jnp.linalg.solve(Gm, jnp.linalg.solve(A, J.T).T)

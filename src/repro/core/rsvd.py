@@ -1,0 +1,104 @@
+"""Randomized low-rank decompositions (Halko-Martinsson-Tropp) — the
+R-KFAC / SRE-KFAC substrate the paper builds on and compares against.
+
+* ``rsvd_psd``        — randomized symmetric EVD of a formed psd matrix
+                        (the paper's RSVD/SREVD of a K-factor), O(d²(r+r_o)).
+* ``rsvd_from_factor``— randomized EVD of X Xᵀ given only X (never forms the
+                        d×d product; used for low-memory overwrites).
+* ``range_finder``    — subspace/power iteration; shared with the PowerSGD
+                        style gradient compressor in distributed/compress.py.
+
+Target rank ``r`` plus oversampling ``r_o`` columns are sampled; the top-r
+modes are returned (descending), padded to a static width on request.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def range_finder(matvec, d: int, k: int, key: Array, n_iter: int,
+                 dtype=jnp.float32) -> Array:
+    """Orthonormal basis Q (d, k) approximately spanning range(M).
+
+    ``matvec`` maps (d, k) → (d, k) (i.e. right-multiplication by M).
+    Power/subspace iteration with QR re-orthonormalization each pass —
+    the paper uses n_pwr-it = 4.
+    """
+    omega = jax.random.normal(key, (d, k), dtype=dtype)
+    Y = matvec(omega)
+    Q, _ = jnp.linalg.qr(Y)
+    for _ in range(n_iter):
+        Q, _ = jnp.linalg.qr(matvec(Q))
+    return Q
+
+
+def rsvd_psd(M: Array, r: int, r_o: int, key: Array, n_iter: int = 2,
+             pad_to: int | None = None) -> Tuple[Array, Array]:
+    """Randomized EVD of a symmetric psd matrix M (d, d), target rank r.
+
+    Returns (U, D): U (d, r) orthonormal, D (r,) descending. If ``pad_to`` is
+    given, zero modes pad the state to that static width.
+    """
+    d = M.shape[0]
+    k = min(r + r_o, d)
+    Q = range_finder(lambda Y: M @ Y, d, k, key, n_iter, M.dtype)
+    B = Q.T @ (M @ Q)                                   # (k, k) small
+    B = 0.5 * (B + B.T)
+    vals, vecs = jnp.linalg.eigh(B)
+    vals, vecs = vals[::-1], vecs[:, ::-1]
+    U = Q @ vecs[:, :r]                                 # (d, r)
+    D = jnp.maximum(vals[:r], 0.0)
+    if pad_to is not None and pad_to > r:
+        U = jnp.concatenate([U, jnp.zeros((d, pad_to - r), M.dtype)], axis=1)
+        D = jnp.concatenate([D, jnp.zeros((pad_to - r,), M.dtype)])
+    return U, D
+
+
+def rsvd_from_factor(X: Array, r: int, r_o: int, key: Array, n_iter: int = 2,
+                     pad_to: int | None = None) -> Tuple[Array, Array]:
+    """Randomized EVD of M = X Xᵀ given only the factor X (d, n).
+
+    Never materializes the d×d matrix — O(d·n·(r+r_o)) work — usable for
+    vocab-sized factors where d² storage is impossible (paper §3.5
+    low-memory property carried over to the randomized path).
+    """
+    d = X.shape[0]
+    k = min(r + r_o, d)
+    mv = lambda Y: X @ (X.T @ Y)
+    Q = range_finder(mv, d, k, key, n_iter, X.dtype)
+    B = Q.T @ mv(Q)
+    B = 0.5 * (B + B.T)
+    vals, vecs = jnp.linalg.eigh(B)
+    vals, vecs = vals[::-1], vecs[:, ::-1]
+    U = Q @ vecs[:, :r]
+    D = jnp.maximum(vals[:r], 0.0)
+    if pad_to is not None and pad_to > r:
+        U = jnp.concatenate([U, jnp.zeros((d, pad_to - r), X.dtype)], axis=1)
+        D = jnp.concatenate([D, jnp.zeros((pad_to - r,), X.dtype)])
+    return U, D
+
+
+def exact_evd(M: Array, r: int | None = None, pad_to: int | None = None
+              ) -> Tuple[Array, Array]:
+    """Dense EVD (the K-FAC baseline inverse path), descending, optionally
+    truncated to rank r and zero-padded to a static width."""
+    vals, vecs = jnp.linalg.eigh(0.5 * (M + M.T))
+    vals, vecs = vals[::-1], vecs[:, ::-1]
+    if r is not None:
+        vals, vecs = vals[:r], vecs[:, :r]
+    if pad_to is not None and pad_to > vecs.shape[1]:
+        d, w = M.shape[0], vecs.shape[1]
+        vecs = jnp.concatenate([vecs, jnp.zeros((d, pad_to - w), M.dtype)], 1)
+        vals = jnp.concatenate([vals, jnp.zeros((pad_to - w,), M.dtype)])
+    return vecs, vals
+
+
+@functools.partial(jax.jit, static_argnames=("r", "r_o", "n_iter", "pad_to"))
+def rsvd_psd_jit(M, r, r_o, key, n_iter=2, pad_to=None):
+    return rsvd_psd(M, r, r_o, key, n_iter, pad_to)

@@ -1,0 +1,210 @@
+"""Parameter / optimizer-state / batch sharding rules.
+
+Path-pattern → PartitionSpec rules, applied to the param pytree (and
+mirrored onto K-FAC factor states).  Conventions on the (pod, data, model)
+mesh:
+
+  * embeddings & LM head : vocab on "model"
+  * attention q/kv/o     : head (fused out) dim on "model"
+  * FFN wi / wo          : hidden dim on "model"
+  * MoE expert stacks    : expert dim on "model" (EP)
+  * K-FAC low-rank U     : factor rows (d) on "model" — each model shard
+                           owns the rows of its weight shard's factor
+  * small vectors (norms, biases, D/A_log/…) : replicated
+  * batch                : ("pod", "data")
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import kfac as kfac_lib
+
+
+def _key_str(k) -> str:
+    for attr in ("key", "name", "idx"):
+        if hasattr(k, attr):
+            return str(getattr(k, attr))
+    return str(k)
+
+
+def _leaf_path(kp) -> str:
+    return "/".join(_key_str(k) for k in kp)
+
+
+#: (regex, trailing-dims builder); first match wins.  Builders describe the
+#: trailing two dims (d_in, d_out); leading scan-stack dims get None.
+_RULES = [
+    # fan-in on model (output projections)
+    (re.compile(r"mix/(wo|x_wo|out_proj)$"), lambda tp: (tp, None)),
+    # fan-out on model (input/qkv/gate projections)
+    (re.compile(r"mix/(wq|wkv|x_wq|x_wkv|wq_a|wq_b|wkv_a|wkv_b|in_proj|"
+                r"wi|wg)$"), lambda tp: (None, tp)),
+    (re.compile(r"ffn/wo_f$"), lambda tp: (tp, None)),
+    (re.compile(r"ffn/shared_wi$"), lambda tp: (None, tp)),
+    (re.compile(r"ffn/shared_wo$"), lambda tp: (tp, None)),
+    (re.compile(r"ffn/router$"), lambda tp: (None, None)),
+    # embeddings / head: vocab on model
+    (re.compile(r"^embed$"), lambda tp: (tp, None)),
+    (re.compile(r"^head/w$"), lambda tp: (None, tp)),
+    (re.compile(r"^mtp/w$"), lambda tp: (None, tp)),
+]
+
+_FFN_WI_WO = re.compile(r"ffn/(wi|wo)$")
+
+
+def param_spec(path: str, ndim: int, mesh: Mesh) -> P:
+    tp = "model" if "model" in mesh.axis_names else None
+    m = _FFN_WI_WO.search(path)
+    if m:
+        if ndim >= 4:
+            # MoE experts (…, E, d_in, d_out): expert dim on model (EP)
+            return P(*((None,) * (ndim - 3) + (tp, None, None)))
+        # dense FFN (…, d_in, d_out): hidden dim on model
+        dims = (None, tp) if m.group(1) == "wi" else (tp, None)
+        return P(*((None,) * (ndim - 2) + dims))
+    for rx, fn in _RULES:
+        if rx.search(path):
+            dims = fn(tp)
+            n_lead = ndim - len(dims)
+            if n_lead < 0:      # rank-1 target (bias-like): replicate
+                return P()
+            return P(*((None,) * n_lead + tuple(dims)))
+    return P()                   # norms, biases, scalars: replicated
+
+
+def fit_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Drop spec axes that do not divide the corresponding dim (e.g. a
+    51865-entry vocab on a 16-way model axis — production systems pad the
+    vocab; here the exact assigned dims are kept and the offending axis is
+    replicated instead)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def axis_size(entry):
+        if entry is None:
+            return 1
+        names = entry if isinstance(entry, tuple) else (entry,)
+        n = 1
+        for a in names:
+            n *= sizes.get(a, 1)
+        return n
+
+    fitted = []
+    for i, entry in enumerate(tuple(spec)):
+        if i >= len(shape) or shape[i] % axis_size(entry) != 0:
+            fitted.append(None)
+        else:
+            fitted.append(entry)
+    return P(*fitted)
+
+
+def params_sharding(params, mesh: Mesh):
+    """NamedSharding pytree for a param tree."""
+    def one(kp, leaf):
+        spec = param_spec(_leaf_path(kp), leaf.ndim, mesh)
+        return NamedSharding(mesh, fit_spec(spec, leaf.shape, mesh))
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def params_sharding_fsdp(params, mesh: Mesh):
+    """FSDP/ZeRO-3 plan: every ≥2D leaf fully sharded over ALL mesh axes on
+    its largest divisible dim; weights are all-gathered transiently per
+    layer during compute.  The right plan for ≤8B models where tensor
+    parallelism is collective-bound (EXPERIMENTS.md §Perf, train cells)."""
+    axes = tuple(mesh.axis_names)
+    n = mesh.devices.size
+
+    def one(kp, leaf):
+        if leaf.ndim >= 2:
+            order = sorted(range(leaf.ndim), key=lambda i: -leaf.shape[i])
+            for i in order:
+                if leaf.shape[i] % n == 0 and leaf.shape[i] >= n:
+                    spec = [None] * leaf.ndim
+                    spec[i] = axes
+                    return NamedSharding(mesh, P(*spec))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def kfac_state_sharding(opt_state, mesh: Mesh):
+    """K-FAC optimizer state: factor U/M rows on "model", D replicated;
+    AdamW fallback mirrors the param sharding; scalars replicated."""
+    tp = "model" if "model" in mesh.axis_names else None
+
+    def one(kp, leaf):
+        path = _leaf_path(kp)
+        if "/factors/" in "/" + path + "/" or path.startswith("factors"):
+            # KFactorState leaves: U (…, d, w), M (…, d, d), D (…, w)
+            field = path.rsplit("/", 1)[-1]
+            if field in ("U", "M") and leaf.ndim >= 2 and \
+                    leaf.shape[-1] > 1:
+                spec = P(*((None,) * (leaf.ndim - 2) + (tp, None)))
+                return NamedSharding(mesh, fit_spec(spec, leaf.shape, mesh))
+            return NamedSharding(mesh, P())
+        if path.startswith("fallback") or path.startswith("momentum"):
+            # mirror param sharding where shapes allow
+            sub = re.sub(r"^(fallback/(mu|nu)|momentum)/", "", path)
+            spec = param_spec(sub, leaf.ndim, mesh)
+            return NamedSharding(mesh, fit_spec(spec, leaf.shape, mesh))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(one, opt_state)
+
+
+def batch_sharding(batch, mesh: Mesh):
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+
+    def one(leaf):
+        spec = (dp,) + (None,) * (leaf.ndim - 1)
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree_util.tree_map(one, batch)
+
+
+#: cache leaves with a sequence axis at position 2 (stacked: (reps, B, S, …))
+_SEQ_CACHE_LEAVES = {"k", "v", "xk", "xv", "c_kv", "k_rope"}
+
+
+def cache_sharding(cache, mesh: Mesh, shard_seq: bool = False,
+                   layout: str = "seq", small_seq_threshold: int = 0):
+    """KV/state caches.  Default: batch on the data axes + seq on the model
+    axis.  layout="heads": KV heads (replicated to the model-axis size by
+    the model) go on the model axis — cache writes stay local.
+    Long-context (B=1): shard the *sequence* axis of KV-like leaves
+    instead; recurrent states (tiny) replicate."""
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+
+    tp = "model" if "model" in mesh.axis_names else None
+
+    def one(kp, leaf):
+        name = _leaf_path(kp).rsplit("/", 1)[-1]
+        if name in _SEQ_CACHE_LEAVES and leaf.ndim >= 3:
+            # stacked (reps, B, S, …): seq on model (flash-decoding style),
+            # matching ShardPolicy.kv_cache; long-context shards seq on all
+            if shard_seq:
+                spec = (None, None, dp + ((tp,) if tp else ()))
+            elif leaf.shape[2] <= small_seq_threshold:
+                spec = (None, dp, None)
+            elif layout == "heads" and leaf.ndim >= 5:
+                spec = (None, dp, None, tp)
+            else:
+                spec = (None, dp, tp)
+            sh = P(*(spec + (None,) * (leaf.ndim - len(spec))))
+            return NamedSharding(mesh, fit_spec(sh, leaf.shape, mesh))
+        if shard_seq:               # B == 1: states replicate
+            return NamedSharding(mesh, P())
+        if leaf.ndim >= 2:          # (reps, B, ...): batch on data axes
+            spec = (None, dp) + (None,) * (leaf.ndim - 2)
+            return NamedSharding(mesh, P(*spec))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def replicated(tree, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda _: NamedSharding(mesh, P()), tree)

@@ -1,0 +1,80 @@
+"""Public kernel entry points with automatic dispatch.
+
+Each op routes to its Pallas kernel when (a) kernels are enabled for the
+backend and (b) shapes are tile-aligned; otherwise it falls back to the
+pure-jnp oracle in ``ref.py`` (identical semantics, asserted by tests).
+
+Dispatch policy:
+  * TPU backend            → Pallas (compiled).
+  * ``REPRO_PALLAS=interpret`` env  → Pallas interpret mode (CPU validation).
+  * otherwise (CPU/GPU)    → oracle.  CPU interpret mode is orders of
+    magnitude slower than jnp and is only meant for correctness tests.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels import ea_syrk as _ea
+from repro.kernels import brand_panel as _bp
+from repro.kernels import lowrank_apply as _la
+
+Array = jax.Array
+
+_LANE = 128  # TPU lane width; all tile dims must divide by this
+
+
+def _mode() -> str:
+    env = os.environ.get("REPRO_PALLAS", "auto")
+    if env == "off":
+        return "ref"
+    if env == "interpret":
+        return "interpret"
+    try:
+        backend = jax.default_backend()
+    except Exception:  # pragma: no cover
+        backend = "cpu"
+    return "pallas" if backend == "tpu" else "ref"
+
+
+def _aligned(*dims: int) -> bool:
+    return all(d % _LANE == 0 for d in dims)
+
+
+def ea_syrk(M: Array, X: Array, rho, first) -> Array:
+    """M ← keep·M + coef·X Xᵀ (EA update, paper eq. 5)."""
+    mode = _mode()
+    d, n = X.shape
+    if mode == "ref" or not _aligned(d, n):
+        return ref.ea_syrk(M, X, rho, first)
+    rho = jnp.asarray(rho, jnp.float32)
+    firstf = jnp.asarray(first, jnp.float32)
+    keep = rho * (1.0 - firstf)
+    coef = 1.0 - keep
+    return _ea.ea_syrk_pallas(M, X, keep, coef,
+                              interpret=(mode == "interpret"))
+
+
+def brand_panel(U: Array, A: Array):
+    """(C, A⊥) = (UᵀA, A − U(UᵀA))."""
+    mode = _mode()
+    d, r = U.shape
+    n = A.shape[1]
+    if mode == "ref" or not _aligned(d) or r % 8 or n % _LANE:
+        return ref.brand_panel(U, A)
+    return _bp.brand_panel_pallas(U, A, interpret=(mode == "interpret"))
+
+
+def lowrank_apply(X: Array, U: Array, s: Array, lam) -> Array:
+    """Y = (X U) diag(s) Uᵀ + X/λ."""
+    mode = _mode()
+    p, d = X.shape
+    w = U.shape[1]
+    if mode == "ref" or not _aligned(d) or p % _LANE or w % 8:
+        return ref.lowrank_apply(X, U, s, lam)
+    lam = jnp.asarray(lam, X.dtype)
+    return _la.lowrank_apply_pallas(X, U, s, lam,
+                                    interpret=(mode == "interpret"))

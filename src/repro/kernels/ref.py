@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These define the semantics; the kernels must match them (tests sweep shapes
+and dtypes in interpret mode and assert allclose against these).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def ea_syrk(M: Array, X: Array, rho, first) -> Array:
+    """EA K-factor update:  M ← keep·M + coef·X Xᵀ with
+    keep = ρ·(1-first), coef = 1-ρ·(1-first)   (paper eq. 5, κ(0)=1)."""
+    rho = jnp.asarray(rho, M.dtype)
+    firstf = jnp.asarray(first, M.dtype)
+    keep = rho * (1.0 - firstf)
+    coef = 1.0 - keep
+    return keep * M + coef * (X @ X.T).astype(M.dtype)
+
+
+def brand_panel(U: Array, A: Array):
+    """The O(d·r·n) panel of Brand's update:  C = UᵀA,  A⊥ = A − U C."""
+    C = U.T @ A
+    return C, A - U @ C
+
+
+def lowrank_apply(X: Array, U: Array, s: Array, lam) -> Array:
+    """Fused low-rank inverse application:
+    Y = (X U) diag(s) Uᵀ + X/λ   (paper Alg 1 lines 15-17 in factored form).
+    """
+    lam = jnp.asarray(lam, X.dtype)
+    T = (X @ U) * s[None, :]
+    return T @ U.T + X / lam

@@ -1,0 +1,276 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run (assignment §MULTI-POD DRY-RUN).
+
+For every (architecture × input-shape) cell, lower + compile the relevant
+step on the production mesh (16×16 single-pod and 2×16×16 multi-pod),
+record memory_analysis / cost_analysis / collective bytes, and — single-pod
+only — lower *unrolled probe models* (1 and 2 pattern-repeats per segment)
+to recover the scan-body costs that XLA's cost analysis counts only once
+(while-loop bodies are visited once; measured in this repo: a 10-step scan
+reports 1/10 the flops of its unrolled equivalent).  Corrected totals:
+
+    X_corrected = X_full + Σ_seg (reps_seg − 1) · (X_probe2_seg − X_probe1)
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen2_72b --shape train_4k
+    python -m repro.launch.dryrun --all [--multi-pod-only]
+Results land in results/dryrun/<arch>__<shape>__<mesh>.json (cached).
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+
+from repro.configs import base as cfg_base
+from repro.configs.base import ARCH_NAMES, SHAPES, cell_applicable, get_arch
+from repro.launch import hlo_analysis, steps
+from repro.launch.mesh import make_production_mesh
+from repro.launch.param_count import count_params, model_flops_per_token
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+# v5e hardware model (assignment constants)
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+
+def _scale_segments(arch, reps_map):
+    """arch with segment repeats overridden: reps_map[i] (enc = 'enc')."""
+    segs = tuple(
+        dataclasses.replace(seg, repeats=reps_map.get(i, 1))
+        for i, seg in enumerate(arch.segments))
+    enc = reps_map.get("enc", 1) if arch.is_encdec else arch.n_enc_layers
+    return dataclasses.replace(arch, segments=segs,
+                               n_enc_layers=enc if arch.is_encdec else
+                               arch.n_enc_layers)
+
+
+def _segment_ids(arch):
+    ids = list(range(len(arch.segments)))
+    if arch.is_encdec:
+        ids.append("enc")
+    return ids
+
+
+def _lower_cell(arch, shape_name, mesh, unroll=False, opt=""):
+    cell = SHAPES[shape_name]
+    with mesh:
+        return _lower_cell_inner(arch, cell, mesh, unroll, opt)
+
+
+def _lower_cell_inner(arch, cell, mesh, unroll, opt=""):
+    if cell.kind == "train":
+        built = steps.build_train_step(arch, mesh, cell=cell, unroll=unroll,
+                                       plan="fsdp" if opt == "fsdp" else
+                                       "tp")
+        fn = jax.jit(built.step_fn, in_shardings=built.in_shardings,
+                     out_shardings=built.out_shardings,
+                     donate_argnums=(0, 1))
+        args = (built.abstract_params, built.abstract_opt,
+                built.batch_specs, jax.ShapeDtypeStruct((2,), jax.numpy.uint32))
+        lowered = fn.lower(*args)
+    elif cell.kind == "prefill":
+        built = steps.build_prefill_step(arch, mesh, cell=cell,
+                                         unroll=unroll)
+        fn = jax.jit(built.step_fn, in_shardings=built.in_shardings,
+                     out_shardings=built.out_shardings)
+        lowered = fn.lower(built.abstract_params, *built.arg_specs)
+    else:
+        kv = dict(cache_layout="heads", window_caches=True) \
+            if opt == "kvopt" else {}
+        built = steps.build_decode_step(arch, mesh, cell=cell,
+                                        unroll=unroll, **kv)
+        fn = jax.jit(built.step_fn, in_shardings=built.in_shardings,
+                     out_shardings=built.out_shardings,
+                     donate_argnums=(1,))
+        lowered = fn.lower(built.abstract_params, *built.arg_specs)
+    return lowered
+
+
+def _analyse(lowered, n_devices):
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    mem = compiled.memory_analysis()
+    text = compiled.as_text()
+    coll, by_kind = hlo_analysis.collective_bytes(text)
+    out = {
+        "flops": float(cost.get("flops", 0.0)),
+        "dot_flops": float(hlo_analysis.dot_flops(text)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "collective_bytes": float(coll),
+        "collectives": by_kind,
+        "n_devices": n_devices,
+    }
+    for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "generated_code_size_in_bytes"):
+        try:
+            out[attr] = int(getattr(mem, attr))
+        except Exception:
+            pass
+    return out
+
+
+def _probe_costs(arch, shape_name, mesh, opt=""):
+    """Per-segment scan-body costs via unrolled 1- vs 2-repeat lowerings."""
+    base_arch = _scale_segments(arch, {})
+    base = _analyse(_lower_cell(base_arch, shape_name, mesh, unroll=True,
+                                opt=opt), mesh.size)
+    seg_costs = {}
+    for sid in _segment_ids(arch):
+        arch2 = _scale_segments(arch, {sid: 2})
+        two = _analyse(_lower_cell(arch2, shape_name, mesh, unroll=True,
+                                   opt=opt), mesh.size)
+        seg_costs[str(sid)] = {
+            k: max(two[k] - base[k], 0.0)
+            for k in ("flops", "dot_flops", "bytes", "collective_bytes")}
+    return base, seg_costs
+
+
+def _corrected(full: Dict, base: Dict, seg_costs: Dict, arch) -> Dict:
+    out = {}
+    reps = {str(i): seg.repeats for i, seg in enumerate(arch.segments)}
+    if arch.is_encdec:
+        reps["enc"] = arch.n_enc_layers
+    for key in ("flops", "dot_flops", "bytes", "collective_bytes"):
+        extra = sum((reps[sid] - 1) * seg_costs[sid][key]
+                    for sid in seg_costs)
+        out[key + "_corrected"] = full[key] + extra
+    return out
+
+
+def roofline_terms(rec: Dict, n_devices: int) -> Dict:
+    """Three roofline terms (seconds).  cost_analysis runs on the SPMD-
+    partitioned module, so flops/bytes are PER-DEVICE (verified in-repo:
+    a (1024³) matmul on 64 devices reports 2·1024³/64) — no further
+    division by chip count.
+
+    compute term — parsed dot FLOPs (MXU work; cost_analysis 'flops' is
+      polluted by CPU-backend bf16→f32 legalization converts);
+    memory term — per-device buffer-traffic estimate: argument + output +
+      temp sizes from memory_analysis (each buffer read/written ≈ once per
+      step under fusion; 'bytes accessed' double-counts legalization
+      copies);
+    collective term — parsed per-device collective volume (HLO text),
+      scan-corrected like the FLOPs."""
+    f = rec.get("dot_flops_corrected", rec.get("dot_flops", rec["flops"]))
+    b = (rec.get("argument_size_in_bytes", 0) +
+         rec.get("output_size_in_bytes", 0) +
+         rec.get("temp_size_in_bytes", 0)) or rec["bytes"]
+    c = rec.get("collective_bytes_corrected", rec["collective_bytes"])
+    t_comp = f / PEAK_FLOPS
+    t_mem = b / HBM_BW
+    t_coll = c / ICI_BW
+    dom = max((t_comp, "compute"), (t_mem, "memory"), (t_coll, "collective"))
+    return {"t_compute_s": t_comp, "t_memory_s": t_mem,
+            "t_collective_s": t_coll, "bottleneck": dom[1],
+            "roofline_fraction": (max(t_comp, 1e-30) /
+                                  max(t_comp, t_mem, t_coll))}
+
+
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
+             probes: bool = True, force: bool = False, opt: str = "") -> Dict:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
+    suffix = f"__{opt}" if opt else ""
+    out_path = os.path.join(
+        RESULTS_DIR, f"{arch_name}__{shape_name}__{mesh_tag}{suffix}.json")
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            return json.load(f)
+    arch = get_arch(arch_name)
+    ok, reason = cell_applicable(arch, shape_name)
+    rec: Dict = {"arch": arch_name, "shape": shape_name, "mesh": mesh_tag,
+                 "opt": opt, "time": time.time()}
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        t0 = time.time()
+        lowered = _lower_cell(arch, shape_name, mesh, opt=opt)
+        rec["lower_s"] = time.time() - t0
+        t0 = time.time()
+        rec.update(_analyse(lowered, mesh.size))
+        rec["compile_s"] = time.time() - t0
+        rec["status"] = "ok"
+        if probes and not multi_pod:
+            t0 = time.time()
+            base, seg_costs = _probe_costs(arch, shape_name, mesh, opt=opt)
+            rec["probe_base"] = {k: base[k] for k in
+                                 ("flops", "dot_flops", "bytes",
+                                  "collective_bytes")}
+            rec["probe_segments"] = seg_costs
+            rec.update(_corrected(rec, base, seg_costs, arch))
+            rec["probe_s"] = time.time() - t0
+            rec["roofline"] = roofline_terms(rec, mesh.size)
+            # analytic model flops (6·N_active·D) for the waste ratio
+            cellk = SHAPES[shape_name].kind
+            n_tok = (steps.n_tokens_of(arch, SHAPES[shape_name])
+                     if cellk == "train" else
+                     SHAPES[shape_name].global_batch *
+                     (SHAPES[shape_name].seq_len if cellk == "prefill"
+                      else 1))
+            mf = model_flops_per_token(arch, train=(cellk == "train"))
+            rec["model_flops"] = mf * n_tok
+            fc = rec.get("dot_flops_corrected", rec["dot_flops"])
+            rec["useful_flops_ratio"] = rec["model_flops"] / max(
+                fc * rec["n_devices"], 1.0)
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--no-probes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--opt", default="", choices=("", "kvopt", "fsdp"))
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for a in ARCH_NAMES:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+    meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+    for a, s in cells:
+        for mp in meshes:
+            t0 = time.time()
+            try:
+                rec = run_cell(a, s, mp, probes=not args.no_probes,
+                               force=args.force, opt=args.opt)
+                status = rec.get("status")
+                extra = (f" bottleneck={rec['roofline']['bottleneck']}"
+                         if "roofline" in rec else "")
+                print(f"[dryrun] {a} {s} multi_pod={mp}: {status} "
+                      f"({time.time()-t0:.0f}s){extra}", flush=True)
+                if status == "ok":
+                    print(f"  dot_flops={rec['dot_flops']:.3e} "
+                          f"corrected={rec.get('dot_flops_corrected', 0):.3e} "
+                          f"coll={rec['collective_bytes']:.3e} "
+                          f"temp_bytes={rec.get('temp_size_in_bytes', 0):,}",
+                          flush=True)
+            except Exception as e:
+                print(f"[dryrun] {a} {s} multi_pod={mp}: FAILED {e}",
+                      flush=True)
+                traceback.print_exc()
+
+
+if __name__ == "__main__":
+    main()

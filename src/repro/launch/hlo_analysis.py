@@ -1,0 +1,114 @@
+"""HLO post-processing for the roofline: collective-bytes accounting.
+
+``collective_bytes`` parses the optimized HLO text of a compiled module and
+sums the data volume moved by every collective op.  Method (documented per
+assignment):
+
+  * all-gather / all-to-all / collective-permute / all-reduce: the output
+    tensor size is the per-device moved volume (ring all-reduce moves ~2×
+    the tensor — we report the tensor size; the 2× is folded into the
+    link-bandwidth model notes);
+  * reduce-scatter: output is the shard — scaled by the replica-group size
+    to recover the operand volume;
+  * ops inside `while` bodies appear once in the text — the dry-run scales
+    them by the scan trip count via the probe-lowering diffs
+    (launch/dryrun.py), exactly like the FLOP correction.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+    "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.:  %ag = bf16[2,1024,512]{2,1,0} all-gather(bf16[2,64,512] %x), ...
+_OP_RE = re.compile(
+    r"=\s*(?:\()?\s*((?:f|bf|s|u|pred|c)\d*)\[([\d,]*)\][^ ]*\s+"
+    r"(" + "|".join(_COLLECTIVES) + r")(?:-start|-done)?\(")
+
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+_DEF_RE = re.compile(r"%([\w.-]+)\s*=\s*((?:f|bf|s|u|pred|c)\d*)"
+                     r"\[([\d,]*)\]")
+_DOT_RE = re.compile(
+    r"%[\w.-]+\s*=\s*(?:f|bf|s|u|c)\d*\[([\d,]*)\][^ ]*\s+dot\("
+    r"[^%]*%([\w.-]+)[^%]*%([\w.-]+)\)")
+_LHS_C_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def dot_flops(hlo_text: str) -> float:
+    """Matmul FLOPs from the partitioned HLO: Σ over dot ops of
+    2 · |output| · Π(lhs contracting dims).
+
+    Rationale: XLA:CPU legalizes bf16 through f32 converts, so
+    ``cost_analysis()['flops']`` is polluted by elementwise legalization
+    traffic that a TPU would never execute; MXU work (dots) is the
+    meaningful compute-roofline numerator and parses exactly.
+    """
+    shapes: Dict[str, Tuple[int, ...]] = {}
+    total = 0.0
+    for line in hlo_text.splitlines():
+        d = _DEF_RE.search(line)
+        if d:
+            name, _, dims = d.groups()
+            shapes[name] = tuple(int(x) for x in dims.split(",") if x)
+        m = _DOT_RE.search(line)
+        if not m:
+            continue
+        out_dims, lhs_name, _ = m.groups()
+        out_n = 1
+        for x in out_dims.split(","):
+            if x:
+                out_n *= int(x)
+        lc = _LHS_C_RE.search(line)
+        contract = 1
+        lhs_shape = shapes.get(lhs_name, ())
+        if lc and lhs_shape:
+            for idx in lc.group(1).split(","):
+                if idx and int(idx) < len(lhs_shape):
+                    contract *= lhs_shape[int(idx)]
+        total += 2.0 * out_n * contract
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Tuple[int, Dict[str, int]]:
+    """→ (total_bytes, per-kind breakdown). 'start' ops only (async pairs
+    would double-count); sync ops have no suffix and count once."""
+    total = 0
+    by_kind: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    counts: Dict[str, int] = {k + "_count": 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        dtype, dims, kind = m.groups()
+        nbytes = _shape_bytes(dtype, dims)
+        if kind == "reduce-scatter":
+            g = _GROUPS_RE.search(line)
+            if g:
+                group_size = len([x for x in g.group(1).split(",") if x])
+                nbytes *= max(group_size, 1)
+        total += nbytes
+        by_kind[kind] += nbytes
+        counts[kind + "_count"] += 1
+    by_kind.update(counts)
+    return total, by_kind

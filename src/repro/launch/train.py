@@ -1,0 +1,137 @@
+"""Production trainer entry point.
+
+    PYTHONPATH=src python -m repro.launch.train --arch gemma3_4b \
+        --steps 100 [--variant bkfac] [--mesh 16x16|2x16x16|none] \
+        [--ckpt-dir /path] [--compress] [--reduced]
+
+On real hardware the mesh comes from the actual devices; ``--reduced``
+trains the CPU-scale config of the same family (CI / this container).
+Composes: model zoo + K-FAC optimizer + deterministic data + async
+checkpointing + straggler detector + (optional) gradient compression.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ARCH_NAMES, SHAPES, get_arch
+from repro.core import kfac as kfac_lib
+from repro.core import policy as policy_lib
+from repro.data.synthetic import TokenStream
+from repro.distributed import compress as compress_lib
+from repro.distributed import sharding as shd
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_production_mesh, make_mesh
+from repro.models import layers
+from repro.models.lm import LM
+from repro.optim import base as optbase
+from repro.train import checkpoint as ckpt
+from repro.train import loop as loop_lib
+from repro.train import straggler as strag_lib
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3_4b", choices=ARCH_NAMES)
+    ap.add_argument("--variant", default="bkfac",
+                    choices=list(policy_lib.VARIANTS))
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--mesh", default="none",
+                    help="none | 16x16 | 2x16x16 | AxB (custom)")
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-scale config of the same family")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--compress", action="store_true",
+                    help="PowerSGD-style DP gradient compression")
+    args = ap.parse_args()
+
+    arch = get_arch(args.arch)
+    if args.reduced:
+        arch = arch.reduced()
+    mesh = None
+    if args.mesh == "16x16":
+        mesh = make_production_mesh()
+    elif args.mesh == "2x16x16":
+        mesh = make_production_mesh(multi_pod=True)
+    elif args.mesh not in ("none", ""):
+        dims = tuple(int(x) for x in args.mesh.split("x"))
+        names = ("data", "model")[: len(dims)]
+        mesh = make_mesh(dims, names)
+
+    sp = steps_lib.shard_policy_for(mesh)
+    lm = LM(arch, sp, remat=not args.reduced)
+    kcfg = steps_lib.default_kfac_config(arch, args.variant)
+    if args.reduced:
+        kcfg = kfac_lib.KfacConfig(
+            policy=policy_lib.PolicyConfig(variant=args.variant, r=32,
+                                           max_dense_dim=1024),
+            lr=optbase.constant(0.02), damping_phi=optbase.constant(0.1),
+            weight_decay=1e-4, clip=0.5, T_updt=2, T_inv=10, T_brand=2,
+            T_rsvd=10, T_corct=10, fallback_lr=optbase.constant(3e-3))
+    opt = kfac_lib.Kfac(kcfg, lm.taps)
+
+    n_tokens = args.batch * args.seq
+    stream = TokenStream(vocab=arch.vocab, batch=args.batch,
+                         seq_len=args.seq, seed=0)
+    params = lm.init(jax.random.PRNGKey(0))
+    state = loop_lib.TrainState(params=params, opt=opt.init(params),
+                                rng=jax.random.PRNGKey(1))
+    if mesh is not None:
+        p_sh = shd.params_sharding(params, mesh)
+        o_sh = shd.kfac_state_sharding(state.opt, mesh)
+        state = loop_lib.TrainState(
+            params=jax.device_put(params, p_sh),
+            opt=jax.device_put(state.opt, o_sh), rng=state.rng)
+
+    errors = compress_lib.init_errors(params) if args.compress else None
+    ccfg = compress_lib.CompressConfig(rank=8)
+
+    def loss_with_compress(p, probes, batch):
+        return lm.loss_fn(p, probes, batch)
+
+    step_fn = jax.jit(loop_lib.make_kfac_step(loss_with_compress, opt,
+                                              n_tokens),
+                      static_argnames=("do_stats", "do_light", "do_heavy"))
+
+    checkpointer = (ckpt.AsyncCheckpointer(args.ckpt_dir, keep=3)
+                    if args.ckpt_dir else None)
+    start = ckpt.latest_step(args.ckpt_dir) if args.ckpt_dir else None
+    if start is not None:
+        state, _ = ckpt.restore(args.ckpt_dir, state)
+        print(f"[train] resumed at step {start}")
+    k0 = 0 if start is None else start + 1
+
+    det = strag_lib.StragglerDetector()
+    t_start = time.time()
+    losses = []
+    for k in range(k0, args.steps):
+        t0 = time.time()
+        flags = kcfg.flags(k)
+        actions = det.observe_step(k, {"host0": time.time() - t0 + 1e-6})
+        flags = strag_lib.apply_to_flags(actions.get("host0",
+                                                     strag_lib.Action.NONE),
+                                         flags)
+        batch = stream.batch_at(k)
+        state, loss = step_fn(state, batch, **flags)
+        losses.append(float(loss))
+        if checkpointer is not None and k % args.ckpt_every == 0:
+            checkpointer.submit(k, state)
+        if k % 5 == 0:
+            print(f"[train] step {k:5d} loss {float(loss):8.4f} "
+                  f"({time.time()-t_start:.0f}s)", flush=True)
+    if checkpointer is not None:
+        checkpointer.close()
+    print(f"[train] done: loss {losses[0]:.4f} -> "
+          f"{float(np.mean(losses[-3:])):.4f} "
+          f"({(time.time()-t_start)/max(len(losses),1):.2f}s/step)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,234 @@
+"""Attention flavors for the assigned architectures.
+
+All variants are memory-efficient (blockwise online-softmax over KV blocks —
+the TPU-native adaptation of flash attention in pure JAX; a Pallas kernel is
+a hillclimb option, see EXPERIMENTS.md §Perf) and support:
+
+  * GQA / MQA / MHA        (n_kv_heads ≤ n_heads)
+  * causal + sliding-window (local) masking, logit softcap (gemma2/3)
+  * MLA (deepseek-v3): latent-compressed KV with decoupled RoPE dims;
+    decode uses the *absorbed* formulation (attention in latent space)
+  * decode with a KV cache (one new token), including sequence-sharded
+    caches for the 500k cells.
+
+Shapes: q (B, Tq, H, hd); k, v (B, Tk, Hk, hd). Masks are computed from
+absolute positions so chunked prefill / offset decode are consistent.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+def _scores_mask(q_pos: Array, k_pos: Array, causal: bool, window: int):
+    """(Tq, Tk) boolean validity mask from absolute positions."""
+    valid = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        valid &= q_pos[:, None] >= k_pos[None, :]
+    if window > 0:
+        valid &= q_pos[:, None] - k_pos[None, :] < window
+    return valid
+
+
+def _sdp_block(q, k, v, valid, softcap: float):
+    """One (q-block × kv-block) online-softmax partial.
+
+    q: (B, Tq, Hk, G, hd), k/v: (B, Tk, Hk, hd), valid: (Tq, Tk).
+    Returns (scores_max, exp_scores@v, exp_sum) for combination.
+    """
+    scale = 1.0 / jnp.sqrt(q.shape[-1])
+    s = jnp.einsum("bqkgh,bskh->bqkgs", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap > 0:
+        s = layers.softcap(s, softcap)
+    s = jnp.where(valid[None, :, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1)                               # (B,Tq,Hk,G)
+    # guard fully-masked rows
+    m_safe = jnp.maximum(m, -1e29)
+    p = jnp.exp(s - m_safe[..., None])
+    p = jnp.where(valid[None, :, None, None, :], p, 0.0)
+    o = jnp.einsum("bqkgs,bskh->bqkgh", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    l = jnp.sum(p, axis=-1)
+    return m_safe, o, l
+
+
+def _combine(m1, o1, l1, m2, o2, l2):
+    m = jnp.maximum(m1, m2)
+    a1 = jnp.exp(m1 - m)
+    a2 = jnp.exp(m2 - m)
+    return m, o1 * a1[..., None] + o2 * a2[..., None], l1 * a1 + l2 * a2
+
+
+def blockwise_attention(q: Array, k: Array, v: Array, *,
+                        causal: bool = True, window: int = 0,
+                        softcap: float = 0.0, q_block: int = 1024,
+                        kv_block: int = 1024, q_offset=0,
+                        k_offset=0) -> Array:
+    """Memory-efficient attention; O(q_block·kv_block) live scores.
+
+    GQA grouping handled internally; Tq % q_block == Tk % kv_block == 0
+    is arranged by the callers (all assigned shapes are powers of two).
+    """
+    B, Tq, H, hd = q.shape
+    _, Tk, Hk, _ = k.shape
+    hd_v = v.shape[-1]          # MLA: value head dim may differ from q/k
+    G = H // Hk
+    q = q.reshape(B, Tq, Hk, G, hd)
+    q_block = min(q_block, Tq)
+    kv_block = min(kv_block, Tk)
+    nq, nk = Tq // q_block, Tk // kv_block
+    q_blocks = q.reshape(B, nq, q_block, Hk, G, hd)
+    k_blocks = k.reshape(B, nk, kv_block, Hk, hd)
+    v_blocks = v.reshape(B, nk, kv_block, Hk, hd_v)
+    q_pos = jnp.arange(Tq) + q_offset
+    k_pos = jnp.arange(Tk) + k_offset
+
+    def per_q_block(i):
+        qb = q_blocks[:, i]
+        qp = jax.lax.dynamic_slice_in_dim(q_pos, i * q_block, q_block)
+
+        def kv_step(carry, j):
+            m, o, l = carry
+            kb = k_blocks[:, j]
+            vb = v_blocks[:, j]
+            kp = jax.lax.dynamic_slice_in_dim(k_pos, j * kv_block, kv_block)
+            valid = _scores_mask(qp, kp, causal, window)
+            m2, o2, l2 = _sdp_block(qb, kb, vb, valid, softcap)
+            return _combine(m, o, l, m2, o2, l2), None
+
+        init = (jnp.full((B, q_block, Hk, G), NEG_INF, jnp.float32),
+                jnp.zeros((B, q_block, Hk, G, hd_v), jnp.float32),
+                jnp.zeros((B, q_block, Hk, G), jnp.float32))
+        (m, o, l), _ = jax.lax.scan(kv_step, init, jnp.arange(nk))
+        return o / jnp.maximum(l, 1e-30)[..., None]
+
+    out = jax.lax.map(per_q_block, jnp.arange(nq))       # (nq,B,qb,Hk,G,hdv)
+    out = jnp.moveaxis(out, 0, 1).reshape(B, Tq, H, hd_v)
+    return out.astype(v.dtype)
+
+
+def decode_attention(q: Array, k_cache: Array, v_cache: Array, *,
+                     window: int = 0, softcap: float = 0.0,
+                     t: Optional[Array] = None) -> Array:
+    """One-token attention over a cache.  q: (B, 1, H, hd);
+    k/v_cache: (B, S, Hk, hd); t = current absolute position (for masking
+    unwritten cache slots and the sliding window)."""
+    B, S, Hk, hd = k_cache.shape
+    H = q.shape[2]
+    G = H // Hk
+    qg = q.reshape(B, Hk, G, hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", qg.astype(k_cache.dtype), k_cache,
+                   preferred_element_type=jnp.float32) / jnp.sqrt(hd)
+    if softcap > 0:
+        s = layers.softcap(s, softcap)
+    pos = jnp.arange(S)
+    valid = jnp.ones((S,), bool) if t is None else pos <= t
+    if window > 0 and t is not None:
+        valid &= pos > t - window
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskh->bkgh", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, 1, H, hd).astype(v_cache.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLA (deepseek-v3) — latent-compressed attention
+# ---------------------------------------------------------------------------
+
+class MlaDims(NamedTuple):
+    n_heads: int
+    q_lora: int = 1536
+    kv_lora: int = 512
+    qk_nope: int = 128
+    qk_rope: int = 64
+    v_head: int = 128
+
+
+def mla_train_attention(x, p, dims: MlaDims, probes, acts, tag, n_stat,
+                        positions):
+    """Training-path MLA: materialize per-head K/V from the latent.
+
+    Params p: wq_a (d, q_lora), wq_b (q_lora, H*(nope+rope)),
+    wkv_a (d, kv_lora + rope), wkv_b (kv_lora, H*(nope+v)), wo (H*v, d).
+    """
+    B, T, d = x.shape
+    H, dn, dr, dv = dims.n_heads, dims.qk_nope, dims.qk_rope, dims.v_head
+
+    def mm(name, W, inp):
+        y, act = layers.tapped_matmul(W, inp, probes.get(f"{tag}/{name}"),
+                                      n_stat)
+        acts[f"{tag}/{name}"] = act
+        return y
+
+    q = mm("wq_b", p["wq_b"], mm("wq_a", p["wq_a"], x))
+    q = q.reshape(B, T, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    kv = mm("wkv_a", p["wkv_a"], x)                       # (B,T,kv_lora+dr)
+    c_kv, k_rope = kv[..., :dims.kv_lora], kv[..., dims.kv_lora:]
+    kvu = mm("wkv_b", p["wkv_b"], c_kv).reshape(B, T, H, dn + dv)
+    k_nope, v = kvu[..., :dn], kvu[..., dn:]
+    q_rope = layers.rope(q_rope, positions)
+    k_rope = layers.rope(k_rope[..., None, :], positions)  # (B,T,1,dr)
+    k = jnp.concatenate([k_nope,
+                         jnp.broadcast_to(k_rope, (B, T, H, dr))], axis=-1)
+    qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+    o = blockwise_attention(qf, k, v, causal=True)
+    o = o.reshape(B, T, H * dv)
+    return mm("wo", p["wo"], o)
+
+
+def mla_decode_attention(x_t, p, dims: MlaDims, cache, t):
+    """Absorbed-MLA decode: attention runs in the kv_lora latent space, so
+    the cache stores only (c_kv, k_rope) — the paper('s arch)'s memory win.
+
+    cache: dict(c_kv (B,S,kv_lora), k_rope (B,S,dr)). x_t: (B,1,d).
+    """
+    B = x_t.shape[0]
+    H, dn, dr, dv = dims.n_heads, dims.qk_nope, dims.qk_rope, dims.v_head
+    L = dims.kv_lora
+    q = (x_t @ p["wq_a"]) @ p["wq_b"]
+    q = q.reshape(B, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    kv = x_t @ p["wkv_a"]                                 # (B,1,L+dr)
+    c_new, kr_new = kv[..., :L], kv[..., L:]
+    pos_t = jnp.full((B, 1), t)
+    q_rope = layers.rope(q_rope[:, None, :, :], pos_t)[:, 0]
+    kr_new = layers.rope(kr_new[:, :, None, :], pos_t)[:, :, 0]
+    c_kv = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"],
+                                               c_new.astype(cache["c_kv"].dtype),
+                                               t, axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"],
+                                                 kr_new.astype(
+                                                     cache["k_rope"].dtype),
+                                                 t, axis=1)
+    # absorb W_uk into q: wkv_b reshaped (L, H, dn+dv)
+    wkv_b = p["wkv_b"].reshape(L, H, dn + dv)
+    w_uk = wkv_b[..., :dn]                                # (L,H,dn)
+    w_uv = wkv_b[..., dn:]                                # (L,H,dv)
+    q_lat = jnp.einsum("bhn,lhn->bhl", q_nope, w_uk.astype(q_nope.dtype),
+                       preferred_element_type=jnp.float32)  # (B,H,L)
+    s = (jnp.einsum("bhl,bsl->bhs", q_lat.astype(c_kv.dtype), c_kv,
+                    preferred_element_type=jnp.float32) +
+         jnp.einsum("bhr,bsr->bhs", q_rope.astype(k_rope.dtype), k_rope,
+                    preferred_element_type=jnp.float32))
+    s = s / jnp.sqrt(dn + dr)
+    S = c_kv.shape[1]
+    valid = jnp.arange(S) <= t
+    s = jnp.where(valid[None, None, :], s, NEG_INF)
+    pattn = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhs,bsl->bhl", pattn.astype(c_kv.dtype), c_kv,
+                       preferred_element_type=jnp.float32)
+    o = jnp.einsum("bhl,lhv->bhv", o_lat.astype(w_uv.dtype), w_uv,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(B, 1, H * dv).astype(x_t.dtype)
+    return o @ p["wo"], dict(c_kv=c_kv, k_rope=k_rope)

@@ -1,0 +1,586 @@
+"""Per-LayerSpec transformer blocks: init, train apply, decode apply,
+cache init, and K-FAC tap enumeration.
+
+A *block* = (norm → mixer → residual) [→ norm → FFN → residual].  Mixers:
+GQA attention (global / sliding-window / non-causal / cross), MLA, Mamba-2
+SSD, RG-LRU.  FFNs: gated-SiLU dense, MoE, or none.  All matmuls are
+K-FAC-tapped; tap names are local to the block ("attn_q", "ffn_wi", …) and
+prefixed by the caller ("seg0/p1/attn_q").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, LayerSpec
+from repro.core.kfac import TapInfo
+from repro.models import attention as attn_lib
+from repro.models import layers, moe as moe_lib, ssm as ssm_lib
+from repro.models.sharding_policy import ShardPolicy, NO_SHARD
+
+Array = jax.Array
+
+
+def tap_dims(d_in: int, d_out: int, extra: tuple = ()):
+    """(d_in, d_out, extra_stack) for one tapped matmul family."""
+    return (d_in, d_out, extra)
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+class TapCtx:
+    """Carries probes in / activations out through a block application."""
+
+    def __init__(self, probes: Dict, n_stat: int, prefix: str = ""):
+        self.probes = probes or {}
+        self.acts: Dict[str, Array] = {}
+        self.n_stat = n_stat
+        self.prefix = prefix
+
+    def mm(self, name: str, W: Array, x: Array) -> Array:
+        full = f"{self.prefix}{name}"
+        y, act = layers.tapped_matmul(W, x, self.probes.get(full),
+                                      self.n_stat)
+        self.acts[full] = act
+        return y
+
+
+def _mixer_dims(arch: ArchConfig):
+    H, Hk, hd = arch.n_heads, arch.n_kv_heads, arch.hd
+    return H, Hk, hd
+
+
+# ---------------------------------------------------------------------------
+# GQA attention sub-block
+# ---------------------------------------------------------------------------
+
+def init_gqa(key, arch: ArchConfig, cross: bool = False, dtype=jnp.float32):
+    H, Hk, hd = _mixer_dims(arch)
+    d = arch.d_model
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": layers.dense_init(ks[0], d, H * hd, dtype=dtype),
+        "wkv": layers.dense_init(ks[1], d, 2 * Hk * hd, dtype=dtype),
+        "wo": layers.dense_init(ks[2], H * hd, d, dtype=dtype),
+        "ln": jnp.zeros((d,), jnp.float32),
+    }
+    if arch.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), jnp.float32)
+        p["bkv"] = jnp.zeros((2 * Hk * hd,), jnp.float32)
+    if cross:
+        p["x_wq"] = layers.dense_init(ks[3], d, H * hd, dtype=dtype)
+        p["x_wkv"] = layers.dense_init(jax.random.fold_in(key, 9), d,
+                                       2 * Hk * hd, dtype=dtype)
+        p["x_wo"] = layers.dense_init(jax.random.fold_in(key, 10), H * hd, d,
+                                      dtype=dtype)
+        p["x_ln"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def gqa_taps(arch: ArchConfig, cross: bool = False) -> Dict[str, dict]:
+    H, Hk, hd = _mixer_dims(arch)
+    d = arch.d_model
+    t = {"attn_q": tap_dims(d, H * hd), "attn_kv": tap_dims(d, 2 * Hk * hd),
+         "attn_o": tap_dims(H * hd, d)}
+    if cross:
+        t.update({"x_attn_q": tap_dims(d, H * hd),
+                  "x_attn_kv": tap_dims(d, 2 * Hk * hd),
+                  "x_attn_o": tap_dims(H * hd, d)})
+    return t
+
+
+def _qkv(p, arch, tc: TapCtx, x, positions):
+    H, Hk, hd = _mixer_dims(arch)
+    B, T, _ = x.shape
+    q = tc.mm("attn_q", p["wq"], x)
+    kv = tc.mm("attn_kv", p["wkv"], x)
+    if arch.qkv_bias:
+        q = q + p["bq"].astype(q.dtype)
+        kv = kv + p["bkv"].astype(kv.dtype)
+    q = q.reshape(B, T, H, hd)
+    k, v = jnp.split(kv.reshape(B, T, 2 * Hk, hd), 2, axis=2)
+    if positions is not None:
+        q = layers.rope(q, positions, arch.rope_theta)
+        k = layers.rope(k, positions, arch.rope_theta)
+    return q, k, v
+
+
+def apply_gqa(spec: LayerSpec, arch: ArchConfig, p, h, tc: TapCtx,
+              positions, sp: ShardPolicy, memory: Optional[Array] = None):
+    """Self-attention (+ optional cross-attention when memory given)."""
+    B, T, d = h.shape
+    H, Hk, hd = _mixer_dims(arch)
+    x = layers.rms_norm(h, p["ln"])
+    x = sp.full_seq(x)
+    q, k, v = _qkv(p, arch, tc, x, positions)
+    q, k, v = sp.heads(q), sp.heads(k), sp.heads(v)
+    o = attn_lib.blockwise_attention(
+        q, k, v, causal=spec.causal, window=spec.window,
+        softcap=arch.attn_softcap, q_block=512, kv_block=512)
+    o = tc.mm("attn_o", p["wo"], o.reshape(B, T, H * hd))
+    h = sp.residual(h + o.astype(h.dtype))
+    if memory is not None:
+        x = layers.rms_norm(h, p["x_ln"])
+        q = tc.mm("x_attn_q", p["x_wq"], x).reshape(B, T, H, hd)
+        Tm = memory.shape[1]
+        kvm = tc.mm("x_attn_kv", p["x_wkv"], memory)
+        km, vm = jnp.split(kvm.reshape(B, Tm, 2 * Hk, hd), 2, axis=2)
+        o = attn_lib.blockwise_attention(q, km, vm, causal=False,
+                                         q_block=512, kv_block=512)
+        o = tc.mm("x_attn_o", p["x_wo"], o.reshape(B, T, H * hd))
+        h = sp.residual(h + o.astype(h.dtype))
+    return h
+
+
+def gqa_cache_init(arch: ArchConfig, B: int, S: int, dtype,
+                   cross_len: int = 0, spec: Optional[LayerSpec] = None,
+                   window_caches: bool = False, kv_rep: int = 1):
+    """KV cache.  Hillclimb options (EXPERIMENTS.md §Perf):
+    * window_caches — sliding-window layers keep only a `window`-slot ring
+      buffer instead of the full sequence;
+    * kv_rep — replicate KV heads ×kv_rep so the head dim matches the
+      model-axis size ("heads" cache layout: local writes, no permutes)."""
+    H, Hk, hd = _mixer_dims(arch)
+    Hc = Hk * kv_rep
+    S_eff = S
+    if window_caches and spec is not None and spec.window > 0:
+        S_eff = min(S, spec.window)
+    c = {"k": jnp.zeros((B, S_eff, Hc, hd), dtype),
+         "v": jnp.zeros((B, S_eff, Hc, hd), dtype)}
+    if cross_len:
+        c["xk"] = jnp.zeros((B, cross_len, Hc, hd), dtype)
+        c["xv"] = jnp.zeros((B, cross_len, Hc, hd), dtype)
+    return c
+
+
+def decode_gqa(spec: LayerSpec, arch: ArchConfig, p, h_t, cache, t,
+               sp: ShardPolicy):
+    """One-token step. h_t: (B, 1, d)."""
+    B = h_t.shape[0]
+    H, Hk, hd = _mixer_dims(arch)
+    x = layers.rms_norm(h_t, p["ln"])
+    pos = jnp.broadcast_to(t, (B, 1))
+    q = (x @ p["wq"].astype(x.dtype))
+    kv = (x @ p["wkv"].astype(x.dtype))
+    if arch.qkv_bias:
+        q = q + p["bq"].astype(q.dtype)
+        kv = kv + p["bkv"].astype(kv.dtype)
+    q = layers.rope(q.reshape(B, 1, H, hd), pos, arch.rope_theta)
+    k_new, v_new = jnp.split(kv.reshape(B, 1, 2 * Hk, hd), 2, axis=2)
+    k_new = layers.rope(k_new, pos, arch.rope_theta)
+    S_cache, Hc = cache["k"].shape[1], cache["k"].shape[2]
+    if Hc != Hk:        # "heads" layout: KV heads replicated to Hc
+        rep = Hc // Hk
+        k_new = jnp.repeat(k_new, rep, axis=2)
+        v_new = jnp.repeat(v_new, rep, axis=2)
+    # ring-buffer write: for full caches t < S_cache so this is identity
+    write_t = t % S_cache
+    k = sp.kv_cache(jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k_new.astype(cache["k"].dtype), write_t, axis=1))
+    v = sp.kv_cache(jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v_new.astype(cache["v"].dtype), write_t, axis=1))
+    if spec.window > 0 and S_cache <= spec.window:
+        # ring buffer: every written slot is within the window by
+        # construction; mask only unwritten slots (t < S_cache)
+        o = attn_lib.decode_attention(q, k, v,
+                                      softcap=arch.attn_softcap,
+                                      t=jnp.minimum(t, S_cache - 1))
+    else:
+        o = attn_lib.decode_attention(q, k, v, window=spec.window,
+                                      softcap=arch.attn_softcap, t=t)
+    o = (o.reshape(B, 1, H * hd) @ p["wo"].astype(h_t.dtype))
+    h_t = h_t + o.astype(h_t.dtype)
+    new_cache = dict(cache, k=k, v=v)
+    if "xk" in cache:  # cross-attention over a precomputed memory cache
+        x = layers.rms_norm(h_t, p["x_ln"])
+        q = (x @ p["x_wq"].astype(x.dtype)).reshape(B, 1, H, hd)
+        o = attn_lib.decode_attention(q, cache["xk"], cache["xv"], t=None)
+        o = o.reshape(B, 1, H * hd) @ p["x_wo"].astype(h_t.dtype)
+        h_t = h_t + o.astype(h_t.dtype)
+    return h_t, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA sub-block (deepseek)
+# ---------------------------------------------------------------------------
+
+def init_mla(key, arch: ArchConfig, dtype=jnp.float32):
+    d = arch.d_model
+    dims = attn_lib.MlaDims(arch.n_heads, arch.mla_q_lora, arch.mla_kv_lora,
+                            arch.mla_qk_nope, arch.mla_qk_rope,
+                            arch.mla_v_head)
+    H = dims.n_heads
+    ks = jax.random.split(key, 5)
+    return {
+        "ln": jnp.zeros((d,), jnp.float32),
+        "wq_a": layers.dense_init(ks[0], d, dims.q_lora, dtype=dtype),
+        "wq_b": layers.dense_init(ks[1], dims.q_lora,
+                                  H * (dims.qk_nope + dims.qk_rope),
+                                  dtype=dtype),
+        "wkv_a": layers.dense_init(ks[2], d, dims.kv_lora + dims.qk_rope,
+                                   dtype=dtype),
+        "wkv_b": layers.dense_init(ks[3], dims.kv_lora,
+                                   H * (dims.qk_nope + dims.v_head),
+                                   dtype=dtype),
+        "wo": layers.dense_init(ks[4], H * dims.v_head, d, dtype=dtype),
+    }
+
+
+def mla_taps(arch: ArchConfig) -> Dict[str, tuple]:
+    d = arch.d_model
+    H = arch.n_heads
+    dn, dr, dv = arch.mla_qk_nope, arch.mla_qk_rope, arch.mla_v_head
+    ql, kl = arch.mla_q_lora, arch.mla_kv_lora
+    return {"wq_a": tap_dims(d, ql), "wq_b": tap_dims(ql, H * (dn + dr)),
+            "wkv_a": tap_dims(d, kl + dr),
+            "wkv_b": tap_dims(kl, H * (dn + dv)),
+            "wo": tap_dims(H * dv, d)}
+
+
+def apply_mla(spec, arch: ArchConfig, p, h, tc: TapCtx, positions,
+              sp: ShardPolicy):
+    dims = attn_lib.MlaDims(arch.n_heads, arch.mla_q_lora, arch.mla_kv_lora,
+                            arch.mla_qk_nope, arch.mla_qk_rope,
+                            arch.mla_v_head)
+    x = sp.full_seq(layers.rms_norm(h, p["ln"]))
+    probes = {"mla/" + k[len(tc.prefix):]: v for k, v in tc.probes.items()
+              if k.startswith(tc.prefix)}
+    acts: Dict[str, Array] = {}
+    o = attn_lib.mla_train_attention(x, p, dims, probes, acts, "mla",
+                                     tc.n_stat, positions)
+    # re-prefix the acts recorded by the mla helper
+    for k, v in acts.items():
+        tc.acts[f"{tc.prefix}{k.split('/', 1)[1]}"] = v
+    return sp.residual(h + o.astype(h.dtype))
+
+
+def mla_cache_init(arch: ArchConfig, B: int, S: int, dtype):
+    return {"c_kv": jnp.zeros((B, S, arch.mla_kv_lora), dtype),
+            "k_rope": jnp.zeros((B, S, arch.mla_qk_rope), dtype)}
+
+
+def decode_mla(spec, arch: ArchConfig, p, h_t, cache, t, sp: ShardPolicy):
+    dims = attn_lib.MlaDims(arch.n_heads, arch.mla_q_lora, arch.mla_kv_lora,
+                            arch.mla_qk_nope, arch.mla_qk_rope,
+                            arch.mla_v_head)
+    x = layers.rms_norm(h_t, p["ln"])
+    o, new_cache = attn_lib.mla_decode_attention(x, p, dims, cache, t)
+    return h_t + o.astype(h_t.dtype), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 SSD sub-block
+# ---------------------------------------------------------------------------
+
+def _ssd_dims(arch: ArchConfig):
+    d_inner = arch.ssm_expand * arch.d_model
+    H = d_inner // arch.ssm_head_dim
+    G, N = arch.ssm_groups, arch.ssm_state
+    conv_dim = d_inner + 2 * G * N
+    in_dim = 2 * d_inner + 2 * G * N + H
+    return d_inner, H, G, N, conv_dim, in_dim
+
+
+def init_ssm(key, arch: ArchConfig, dtype=jnp.float32):
+    d = arch.d_model
+    d_inner, H, G, N, conv_dim, in_dim = _ssd_dims(arch)
+    ks = jax.random.split(key, 3)
+    return {
+        "ln": jnp.zeros((d,), jnp.float32),
+        "in_proj": layers.dense_init(ks[0], d, in_dim, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (arch.conv_k, conv_dim))
+                   * 0.1).astype(jnp.float32),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.full((H,), -2.0, jnp.float32),
+        "out_norm": jnp.zeros((d_inner,), jnp.float32),
+        "out_proj": layers.dense_init(ks[2], d_inner, d, dtype=dtype),
+    }
+
+
+def ssm_taps(arch: ArchConfig) -> Dict[str, tuple]:
+    d = arch.d_model
+    d_inner, H, G, N, conv_dim, in_dim = _ssd_dims(arch)
+    return {"ssm_in": tap_dims(d, in_dim), "ssm_out": tap_dims(d_inner, d)}
+
+
+def _ssd_split(arch, xz):
+    d_inner, H, G, N, conv_dim, _ = _ssd_dims(arch)
+    z = xz[..., :d_inner]
+    xBC = xz[..., d_inner: d_inner + conv_dim]
+    dt = xz[..., d_inner + conv_dim:]
+    return z, xBC, dt
+
+
+def apply_ssm(spec, arch: ArchConfig, p, h, tc: TapCtx, positions,
+              sp: ShardPolicy):
+    B, T, d = h.shape
+    d_inner, H, G, N, conv_dim, _ = _ssd_dims(arch)
+    P_dim = arch.ssm_head_dim
+    x = sp.full_seq(layers.rms_norm(h, p["ln"]))
+    xz = tc.mm("ssm_in", p["in_proj"], x)
+    z, xBC, dt = _ssd_split(arch, xz)
+    xBC = jax.nn.silu(ssm_lib.causal_conv1d(xBC, p["conv_w"]))
+    xs = xBC[..., :d_inner].reshape(B, T, H, P_dim)
+    Bm = xBC[..., d_inner: d_inner + G * N].reshape(B, T, G, N)
+    Cm = xBC[..., d_inner + G * N:].reshape(B, T, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y = ssm_lib.ssd_chunked(xs.astype(jnp.float32), dt, A,
+                            Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+                            chunk=min(arch.ssm_chunk, T))
+    y = y + p["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, T, d_inner)
+    y = layers.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)),
+                        p["out_norm"]).astype(h.dtype)
+    o = tc.mm("ssm_out", p["out_proj"], y)
+    return sp.residual(h + o.astype(h.dtype))
+
+
+def ssm_cache_init(arch: ArchConfig, B: int, S: int, dtype):
+    d_inner, H, G, N, conv_dim, _ = _ssd_dims(arch)
+    return {"conv": jnp.zeros((B, arch.conv_k - 1, conv_dim), dtype),
+            "state": jnp.zeros((B, H, N, arch.ssm_head_dim), jnp.float32)}
+
+
+def decode_ssm(spec, arch: ArchConfig, p, h_t, cache, t, sp: ShardPolicy):
+    B = h_t.shape[0]
+    d_inner, H, G, N, conv_dim, _ = _ssd_dims(arch)
+    P_dim = arch.ssm_head_dim
+    x = layers.rms_norm(h_t, p["ln"])
+    xz = (x @ p["in_proj"].astype(x.dtype))[:, 0]
+    z, xBC, dt = _ssd_split(arch, xz)
+    xBC, conv_buf = ssm_lib.causal_conv1d_step(
+        xBC.astype(cache["conv"].dtype), cache["conv"], p["conv_w"])
+    xBC = jax.nn.silu(xBC)
+    xs = xBC[..., :d_inner].reshape(B, H, P_dim).astype(jnp.float32)
+    Bm = xBC[..., d_inner: d_inner + G * N].reshape(B, G, N)
+    Cm = xBC[..., d_inner + G * N:].reshape(B, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, state = ssm_lib.ssd_decode_step(xs, dt, A, Bm.astype(jnp.float32),
+                                       Cm.astype(jnp.float32),
+                                       cache["state"])
+    y = y + p["D"][None, :, None] * xs
+    y = y.reshape(B, d_inner)
+    y = layers.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)),
+                        p["out_norm"]).astype(h_t.dtype)
+    o = y[:, None, :] @ p["out_proj"].astype(h_t.dtype)
+    return h_t + o.astype(h_t.dtype), {"conv": conv_buf, "state": state}
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU sub-block (recurrentgemma)
+# ---------------------------------------------------------------------------
+
+def init_rglru(key, arch: ArchConfig, dtype=jnp.float32):
+    d, D = arch.d_model, arch.lru_width
+    ks = jax.random.split(key, 3)
+    return {
+        "ln": jnp.zeros((d,), jnp.float32),
+        "wi": layers.dense_init(ks[0], d, 2 * D, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (arch.conv_k, D))
+                   * 0.1).astype(jnp.float32),
+        "wg": layers.dense_init(ks[2], D, 2 * D, dtype=dtype),
+        "lam": jnp.full((D,), 0.5, jnp.float32),
+        "wo": layers.dense_init(jax.random.fold_in(key, 7), D, d,
+                                dtype=dtype),
+    }
+
+
+def rglru_taps(arch: ArchConfig) -> Dict[str, tuple]:
+    d, D = arch.d_model, arch.lru_width
+    return {"lru_in": tap_dims(d, 2 * D), "lru_gates": tap_dims(D, 2 * D),
+            "lru_out": tap_dims(D, d)}
+
+
+def apply_rglru(spec, arch: ArchConfig, p, h, tc: TapCtx, positions,
+                sp: ShardPolicy):
+    D = arch.lru_width
+    x0 = sp.full_seq(layers.rms_norm(h, p["ln"]))
+    xy = tc.mm("lru_in", p["wi"], x0)
+    x, y = xy[..., :D], xy[..., D:]
+    x = ssm_lib.causal_conv1d(x, p["conv_w"])
+    gates = tc.mm("lru_gates", p["wg"], x)
+    gx, ga = gates[..., :D], gates[..., D:]
+    hseq = ssm_lib.rglru(x, gx, ga, p["lam"])
+    out = tc.mm("lru_out", p["wo"], hseq * jax.nn.gelu(y))
+    return sp.residual(h + out.astype(h.dtype))
+
+
+def rglru_cache_init(arch: ArchConfig, B: int, S: int, dtype):
+    D = arch.lru_width
+    return {"conv": jnp.zeros((B, arch.conv_k - 1, D), dtype),
+            "h": jnp.zeros((B, D), jnp.float32)}
+
+
+def decode_rglru(spec, arch: ArchConfig, p, h_t, cache, t, sp: ShardPolicy):
+    D = arch.lru_width
+    x0 = layers.rms_norm(h_t, p["ln"])
+    xy = (x0 @ p["wi"].astype(x0.dtype))[:, 0]
+    x, y = xy[..., :D], xy[..., D:]
+    x, conv_buf = ssm_lib.causal_conv1d_step(x.astype(cache["conv"].dtype),
+                                             cache["conv"], p["conv_w"])
+    gates = x @ p["wg"].astype(x.dtype)
+    gx, ga = gates[..., :D], gates[..., D:]
+    hn, hstate = ssm_lib.rglru_step(x, gx, ga, p["lam"], cache["h"])
+    out = (hn * jax.nn.gelu(y))[:, None, :] @ p["wo"].astype(h_t.dtype)
+    return h_t + out.astype(h_t.dtype), {"conv": conv_buf, "h": hstate}
+
+
+# ---------------------------------------------------------------------------
+# FFN sub-blocks
+# ---------------------------------------------------------------------------
+
+def init_ffn(key, arch: ArchConfig, spec: LayerSpec, dtype=jnp.float32):
+    d = arch.d_model
+    if spec.ffn == "dense":
+        f = arch.d_ff
+        ks = jax.random.split(key, 2)
+        return {"ln2": jnp.zeros((d,), jnp.float32),
+                "wi": layers.dense_init(ks[0], d, 2 * f, dtype=dtype),
+                "wo_f": layers.dense_init(ks[1], f, d, dtype=dtype)}
+    if spec.ffn == "moe":
+        dims = _moe_dims(arch)
+        p = moe_lib.init_moe_params(key, dims, dtype)
+        p["ln2"] = jnp.zeros((d,), jnp.float32)
+        return p
+    return {}
+
+
+def _moe_dims(arch: ArchConfig) -> moe_lib.MoeDims:
+    return moe_lib.MoeDims(d_model=arch.d_model, d_ff=arch.d_ff_expert,
+                           n_experts=arch.n_experts, top_k=arch.top_k,
+                           n_shared=arch.n_shared_experts)
+
+
+def ffn_taps(arch: ArchConfig, spec: LayerSpec) -> Dict[str, tuple]:
+    d = arch.d_model
+    if spec.ffn == "dense":
+        return {"ffn_wi": tap_dims(d, 2 * arch.d_ff),
+                "ffn_wo": tap_dims(arch.d_ff, d)}
+    if spec.ffn == "moe":
+        f = arch.d_ff_expert
+        t = {"moe_wi": tap_dims(d, 2 * f, (arch.n_experts,)),
+             "moe_wo": tap_dims(f, d, (arch.n_experts,))}
+        if arch.n_shared_experts:
+            fs = f * arch.n_shared_experts
+            t["shared_wi"] = tap_dims(d, 2 * fs)
+            t["shared_wo"] = tap_dims(fs, d)
+        return t
+    return {}
+
+
+def apply_ffn(spec: LayerSpec, arch: ArchConfig, p, h, tc: TapCtx,
+              sp: ShardPolicy) -> Tuple[Array, Array]:
+    """Returns (h, aux_loss)."""
+    zero = jnp.zeros((), jnp.float32)
+    if spec.ffn == "none":
+        return h, zero
+    x = sp.full_seq(layers.rms_norm(h, p["ln2"]))
+    if spec.ffn == "dense":
+        u = tc.mm("ffn_wi", p["wi"], x)
+        gate, up = jnp.split(u, 2, axis=-1)
+        gate, up = sp.ffn_hidden(gate), sp.ffn_hidden(up)
+        y = tc.mm("ffn_wo", p["wo_f"], jax.nn.silu(gate) * up)
+        return sp.residual(h + y.astype(h.dtype)), zero
+    # MoE
+    dims = _moe_dims(arch)
+    probes = {"moe/" + k[len(tc.prefix):]: v for k, v in tc.probes.items()
+              if k.startswith(tc.prefix)}
+    acts: Dict[str, Array] = {}
+    y, aux = moe_lib.moe_block(x, p, dims, probes, acts, "moe",
+                               tc.n_stat)
+    for k, v in acts.items():
+        tc.acts[f"{tc.prefix}{k.split('/', 1)[1]}"] = v
+    return sp.residual(h + y.astype(h.dtype)), aux
+
+
+# ---------------------------------------------------------------------------
+# whole-block dispatch
+# ---------------------------------------------------------------------------
+
+_MIXERS = {
+    "gqa": (init_gqa, apply_gqa, decode_gqa, gqa_cache_init, gqa_taps),
+    "mla": (init_mla, apply_mla, decode_mla, mla_cache_init, mla_taps),
+    "ssm": (init_ssm, apply_ssm, decode_ssm, ssm_cache_init, ssm_taps),
+    "rglru": (init_rglru, apply_rglru, decode_rglru, rglru_cache_init,
+              rglru_taps),
+}
+
+
+def init_block(key, arch: ArchConfig, spec: LayerSpec, cross=False,
+               dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    init_fn = _MIXERS[spec.mixer][0]
+    mix = (init_fn(k1, arch, cross=cross, dtype=dtype)
+           if spec.mixer == "gqa" else init_fn(k1, arch, dtype=dtype))
+    return {"mix": mix, "ffn": init_ffn(k2, arch, spec, dtype=dtype)}
+
+
+def block_taps(arch: ArchConfig, spec: LayerSpec, cross=False
+               ) -> Dict[str, tuple]:
+    taps_fn = _MIXERS[spec.mixer][4]
+    t = dict(taps_fn(arch, cross=cross) if spec.mixer == "gqa"
+             else taps_fn(arch))
+    t.update(ffn_taps(arch, spec))
+    return t
+
+
+def apply_block(arch: ArchConfig, spec: LayerSpec, p, h, tc: TapCtx,
+                positions, sp: ShardPolicy, memory=None):
+    apply_fn = _MIXERS[spec.mixer][1]
+    if spec.mixer == "gqa":
+        h = apply_fn(spec, arch, p["mix"], h, tc, positions, sp,
+                     memory=memory)
+    else:
+        h = apply_fn(spec, arch, p["mix"], h, tc, positions, sp)
+    return apply_ffn(spec, arch, p["ffn"], h, tc, sp)
+
+
+def block_cache_init(arch: ArchConfig, spec: LayerSpec, B, S, dtype,
+                     cross_len=0, window_caches=False, kv_rep=1):
+    fn = _MIXERS[spec.mixer][3]
+    if spec.mixer == "gqa":
+        return fn(arch, B, S, dtype, cross_len=cross_len, spec=spec,
+                  window_caches=window_caches, kv_rep=kv_rep)
+    return fn(arch, B, S, dtype)
+
+
+def decode_block(arch: ArchConfig, spec: LayerSpec, p, h_t, cache, t,
+                 sp: ShardPolicy):
+    h_t, new_cache = _MIXERS[spec.mixer][2](spec, arch, p["mix"], h_t,
+                                            cache, t, sp)
+    p = p["ffn"]
+    if spec.ffn == "dense":
+        x = layers.rms_norm(h_t, p["ln2"])
+        u = x @ p["wi"].astype(x.dtype)
+        gate, up = jnp.split(u, 2, axis=-1)
+        y = (jax.nn.silu(gate) * up) @ p["wo_f"].astype(x.dtype)
+        h_t = h_t + y.astype(h_t.dtype)
+    elif spec.ffn == "moe":
+        dims = _moe_dims(arch)
+        B = h_t.shape[0]
+        x = layers.rms_norm(h_t, p["ln2"]).reshape(B, -1)
+        w, idx, _ = moe_lib.route(x, p["router"], dims)
+        # decode: tiny token count — dense "all experts" dispatch is cheapest
+        cap = max(8, min(B * dims.top_k, B))
+        buffers, info = moe_lib.dispatch(x, idx, dims, cap)
+        def one(buf, wi, wo):
+            u = buf @ wi.astype(buf.dtype)
+            g, up2 = jnp.split(u, 2, axis=-1)
+            return (jax.nn.silu(g) * up2) @ wo.astype(buf.dtype)
+        out = jax.vmap(one)(buffers, p["wi"], p["wo"])
+        y = moe_lib.combine(out, w, info, B)
+        if dims.n_shared:
+            u = x @ p["shared_wi"].astype(x.dtype)
+            g, up2 = jnp.split(u, 2, axis=-1)
+            y = y + ((jax.nn.silu(g) * up2)
+                     @ p["shared_wo"].astype(x.dtype)).astype(jnp.float32)
+        h_t = h_t + y.reshape(h_t.shape).astype(h_t.dtype)
+    return h_t, new_cache

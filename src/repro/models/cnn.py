@@ -1,0 +1,143 @@
+"""Conv nets with K-FAC taps — the paper's VGG16_bn experiment substrate.
+
+Convolutions are expressed as im2col patches × a tapped matmul, which IS
+the K-FAC conv approximation (Grosse & Martens 2016: A-factor over patch
+vectors, n_M = B·H'·W' spatial samples).  Because n_M ≫ d for conv layers,
+the policy engine automatically assigns them RSVD updates while wide FC
+layers get B-updates — the paper's §3.5 mixture, reproduced structurally.
+
+``make_vgg`` builds the paper's *modified* VGG16_bn: 2×1 pooling (instead
+of 2×2) so FC0 widens 32× — 16384-in × 2048-out — putting the FC inverse
+on the critical path exactly as in §6.  A ``depth`` knob scales the conv
+stack for CPU benchmarking.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kfac import TapInfo
+from repro.models import layers
+
+Array = jax.Array
+
+
+def im2col(x: Array, k: int, stride: int = 1, pad: str = "SAME") -> Array:
+    """(B, H, W, C) → (B, H', W', k*k*C) patch extraction."""
+    patches = jax.lax.conv_general_dilated_patches(
+        x, (k, k), (stride, stride), pad,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return patches
+
+
+def conv_tap(name, params, x, probes, acts, n_stat, k=3, stride=1):
+    """Tapped conv layer: im2col + matmul + bias."""
+    p = im2col(x, k, stride)
+    B, H, W, D = p.shape
+    flat = p.reshape(B * H * W, D)
+    y, act = layers.tapped_matmul(params[name]["w"], flat,
+                                  probes.get(name), n_stat)
+    acts[name] = act
+    y = y + params[name]["b"]
+    return y.reshape(B, H, W, -1)
+
+
+def batch_norm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=(0, 1, 2), keepdims=True)
+    var = jnp.var(x, axis=(0, 1, 2), keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+@dataclasses.dataclass(frozen=True)
+class VggConfig:
+    # channel plan per stage (paper VGG16: 64,128,256,512,512; scaled down
+    # by `width` for CPU benches), convs per stage = 2
+    stages: Tuple[int, ...] = (16, 32, 64)
+    n_classes: int = 10
+    fc_hidden: int = 512
+    n_stat: int = 256
+    pool: Tuple[int, int] = (2, 1)   # the paper's 2×1 pooling trick
+    img: int = 32
+
+
+def make_vgg(cfg: VggConfig):
+    """Returns (init_fn, loss_fn, taps)."""
+    conv_specs: List[Tuple[str, int, int]] = []   # (name, d_in_patch, c_out)
+    c_in = 3
+    for s, c in enumerate(cfg.stages):
+        for j in range(2):
+            conv_specs.append((f"conv{s}_{j}", 9 * c_in, c))
+            c_in = c
+    # spatial after pooling (2,1) per stage: H /= 2 each stage, W stays
+    h = cfg.img // (2 ** len(cfg.stages))
+    w = cfg.img
+    flat_dim = h * w * cfg.stages[-1]
+
+    taps: Dict[str, TapInfo] = {}
+    for name, d_in, c_out in conv_specs:
+        taps[name] = TapInfo(param_path=f"{name}/w", d_in=d_in, d_out=c_out,
+                             n_stat=cfg.n_stat)
+    taps["fc0"] = TapInfo(param_path="fc0/w", d_in=flat_dim,
+                          d_out=cfg.fc_hidden, n_stat=cfg.n_stat)
+    taps["fc1"] = TapInfo(param_path="fc1/w", d_in=cfg.fc_hidden,
+                          d_out=cfg.n_classes, n_stat=cfg.n_stat)
+
+    def init(key):
+        params = {}
+        ks = jax.random.split(key, len(conv_specs) + 2)
+        for i, (name, d_in, c_out) in enumerate(conv_specs):
+            params[name] = {
+                "w": layers.dense_init(ks[i], d_in, c_out),
+                "b": jnp.zeros((c_out,)),
+                "bn_s": jnp.ones((c_out,)), "bn_b": jnp.zeros((c_out,))}
+        params["fc0"] = {"w": layers.dense_init(ks[-2], flat_dim,
+                                                cfg.fc_hidden),
+                         "b": jnp.zeros((cfg.fc_hidden,))}
+        params["fc1"] = {"w": layers.dense_init(ks[-1], cfg.fc_hidden,
+                                                cfg.n_classes),
+                         "b": jnp.zeros((cfg.n_classes,))}
+        return params
+
+    def forward(params, probes, x):
+        acts: Dict[str, Array] = {}
+        h = x
+        i = 0
+        for s, c in enumerate(cfg.stages):
+            for j in range(2):
+                name = f"conv{s}_{j}"
+                h = conv_tap(name, params, h, probes, acts, cfg.n_stat)
+                h = batch_norm(h, params[name]["bn_s"], params[name]["bn_b"])
+                h = jax.nn.relu(h)
+                i += 1
+            # paper's modified pooling: 2×1 keeps width
+            h = jax.lax.reduce_window(
+                h, -jnp.inf, jax.lax.max,
+                (1, cfg.pool[0], cfg.pool[1], 1),
+                (1, cfg.pool[0], cfg.pool[1], 1), "VALID")
+        h = h.reshape(h.shape[0], -1)
+        h, act = layers.tapped_matmul(params["fc0"]["w"], h,
+                                      probes.get("fc0"), cfg.n_stat)
+        acts["fc0"] = act
+        h = jax.nn.relu(h + params["fc0"]["b"])
+        logits, act = layers.tapped_matmul(params["fc1"]["w"], h,
+                                           probes.get("fc1"), cfg.n_stat)
+        acts["fc1"] = act
+        logits = logits + params["fc1"]["b"]
+        return logits, acts
+
+    def loss_fn(params, probes, batch):
+        x, y = batch
+        logits, acts = forward(params, probes, x)
+        ll = jax.nn.log_softmax(logits)
+        loss = -jnp.mean(jnp.take_along_axis(ll, y[:, None], axis=1))
+        return loss, acts
+
+    def accuracy(params, batch):
+        x, y = batch
+        logits, _ = forward(params, {}, x)
+        return jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+
+    return init, loss_fn, accuracy, taps

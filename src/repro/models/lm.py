@@ -1,0 +1,314 @@
+"""The generic LM covering all 10 assigned architectures.
+
+Assembly: embed → [segments: scan over (pattern × repeats)] → final norm →
+tapped LM head (→ optional MTP head).  Enc-dec archs (whisper) run an
+encoder stack first and feed it as cross-attention memory.  VLM/audio
+frontends are stubs: precomputed embeddings enter as a sequence prefix /
+encoder input per the assignment.
+
+Train path: ``loss_fn(params, probes, batch) -> (loss, acts)`` — the K-FAC
+tap contract (core/kfac.py).  Serve path: ``decode_step`` (one token, KV /
+state caches) and ``forward`` (prefill-shaped logits).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, LayerSpec, Segment
+from repro.core.kfac import TapInfo
+from repro.models import blocks, layers
+from repro.models.sharding_policy import ShardPolicy, NO_SHARD
+
+Array = jax.Array
+
+#: local tap name → block param sub-path ("mix"/"ffn" namespaced)
+_TAP_PARAM = {
+    "attn_q": "mix/wq", "attn_kv": "mix/wkv", "attn_o": "mix/wo",
+    "x_attn_q": "mix/x_wq", "x_attn_kv": "mix/x_wkv",
+    "x_attn_o": "mix/x_wo",
+    "ffn_wi": "ffn/wi", "ffn_wo": "ffn/wo_f",
+    "moe_wi": "ffn/wi", "moe_wo": "ffn/wo",
+    "shared_wi": "ffn/shared_wi", "shared_wo": "ffn/shared_wo",
+    "wq_a": "mix/wq_a", "wq_b": "mix/wq_b", "wkv_a": "mix/wkv_a",
+    "wkv_b": "mix/wkv_b", "wo": "mix/wo",
+    "ssm_in": "mix/in_proj", "ssm_out": "mix/out_proj",
+    "lru_in": "mix/wi", "lru_gates": "mix/wg", "lru_out": "mix/wo",
+}
+
+
+def _ce_loss(logits: Array, targets: Array, mask: Optional[Array] = None
+             ) -> Array:
+    """Token-mean cross-entropy, f32 accumulation without materializing an
+    f32 logits copy (vocab can be 262k).
+
+    The target log-prob is extracted with a fused iota==target contraction
+    instead of take_along_axis: a vocab-sharded gather would force XLA to
+    all-gather the full logits (GBs/device); the masked sum reduces locally
+    per vocab shard and psums a scalar."""
+    m = jnp.max(logits, axis=-1, keepdims=True).astype(jnp.float32)
+    lse = m[..., 0] + jnp.log(
+        jnp.sum(jnp.exp(logits - m.astype(logits.dtype)),
+                axis=-1, dtype=jnp.float32))
+    vocab_iota = jnp.arange(logits.shape[-1], dtype=targets.dtype)
+    onehot = vocab_iota == targets[..., None]
+    ll = jnp.sum(jnp.where(onehot, logits, 0).astype(jnp.float32), axis=-1)
+    nll = lse - ll
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+class LM:
+    def __init__(self, arch: ArchConfig, sp: ShardPolicy = NO_SHARD,
+                 remat: bool = True, unroll: bool = False):
+        self.arch = arch
+        self.sp = sp
+        self.remat = remat
+        self.unroll = unroll     # python-loop layers (scan-FLOP probes)
+        self.dtype = (jnp.bfloat16 if arch.dtype == "bfloat16"
+                      else jnp.float32)
+        self._enc_segments: Tuple[Segment, ...] = ()
+        if arch.is_encdec:
+            enc_spec = LayerSpec(mixer="gqa", ffn="dense",
+                                 causal=arch.enc_causal)
+            self._enc_segments = (Segment((enc_spec,), arch.n_enc_layers),)
+        self.taps = self._build_taps()
+
+    # ------------------------------------------------------------------ taps
+    def _seg_taps(self, segments, base: str) -> Dict[str, TapInfo]:
+        arch = self.arch
+        out = {}
+        cross = arch.is_encdec and base == "segments"
+        for s, seg in enumerate(segments):
+            for i, spec in enumerate(seg.pattern):
+                for local, (d_in, d_out, extra) in blocks.block_taps(
+                        arch, spec, cross=cross).items():
+                    name = f"{base}/seg{s}/p{i}/{local}"
+                    pkey = _TAP_PARAM[local]
+                    out[name] = TapInfo(
+                        param_path=f"{base}/{s}/p{i}/{pkey}",
+                        d_in=d_in, d_out=d_out,
+                        stack=(seg.repeats,) + tuple(extra),
+                        n_stat=arch.n_stat)
+        return out
+
+    def _build_taps(self) -> Dict[str, TapInfo]:
+        arch = self.arch
+        taps = self._seg_taps(arch.segments, "segments")
+        if self._enc_segments:
+            taps.update(self._seg_taps(self._enc_segments, "enc"))
+        taps["head"] = TapInfo(param_path="head/w", d_in=arch.d_model,
+                               d_out=arch.vocab, n_stat=arch.n_stat)
+        if arch.mtp:
+            taps["mtp_proj"] = TapInfo(param_path="mtp/w",
+                                       d_in=arch.d_model,
+                                       d_out=arch.d_model,
+                                       n_stat=arch.n_stat)
+        return taps
+
+    # ------------------------------------------------------------------ init
+    def _init_segments(self, key, segments, cross: bool):
+        arch = self.arch
+        out = {}
+        for s, seg in enumerate(segments):
+            ks = jax.random.split(jax.random.fold_in(key, s),
+                                  seg.repeats * len(seg.pattern))
+            seg_params = {}
+            for i, spec in enumerate(seg.pattern):
+                kk = ks[i::len(seg.pattern)]
+                seg_params[f"p{i}"] = jax.vmap(
+                    lambda k: blocks.init_block(k, arch, spec, cross=cross,
+                                                dtype=jnp.float32))(
+                    jnp.stack(kk))
+            out[str(s)] = seg_params
+        return out
+
+    def init(self, key) -> Dict:
+        arch = self.arch
+        k_emb, k_seg, k_enc, k_head, k_mtp = jax.random.split(key, 5)
+        params = {
+            "embed": (jax.random.normal(k_emb, (arch.vocab, arch.d_model))
+                      * 0.01).astype(jnp.float32),
+            "segments": self._init_segments(
+                k_seg, arch.segments, cross=arch.is_encdec),
+            "final_ln": jnp.zeros((arch.d_model,), jnp.float32),
+            "head": {"w": layers.dense_init(k_head, arch.d_model, arch.vocab,
+                                            scale=0.01)},
+        }
+        if self._enc_segments:
+            params["enc"] = self._init_segments(k_enc, self._enc_segments,
+                                                cross=False)
+            params["enc_ln"] = jnp.zeros((arch.d_model,), jnp.float32)
+        if arch.mtp:
+            params["mtp"] = {"w": layers.dense_init(k_mtp, arch.d_model,
+                                                    arch.d_model)}
+        return params
+
+    # --------------------------------------------------------------- forward
+    def _run_segments(self, segments, seg_params, base, h, probes, positions,
+                      memory=None, train=True):
+        arch, sp = self.arch, self.sp
+        aux = jnp.zeros((), jnp.float32)
+        acts: Dict[str, Array] = {}
+        cross = memory is not None
+        for s, seg in enumerate(segments):
+            pattern = seg.pattern
+            names = [n for n in self.taps
+                     if n.startswith(f"{base}/seg{s}/")]
+            probes_seg = {n: probes[n] for n in names if n in probes}
+
+            def body(carry, xs):
+                hh, aux_c = carry
+                p_stack, probe_sl = xs
+                acts_l: Dict[str, Array] = {}
+                for i, spec in enumerate(pattern):
+                    tc = blocks.TapCtx(probe_sl, arch.n_stat,
+                                       prefix=f"{base}/seg{s}/p{i}/")
+                    hh, aux_i = blocks.apply_block(
+                        arch, spec, p_stack[f"p{i}"], hh, tc, positions, sp,
+                        memory=memory if cross else None)
+                    aux_c = aux_c + aux_i
+                    acts_l.update(tc.acts)
+                return (hh, aux_c), acts_l
+
+            fn = jax.checkpoint(body) if (train and self.remat) else body
+            if self.unroll:
+                carry = (h, aux)
+                acts_list = []
+                for r in range(seg.repeats):
+                    xs_r = jax.tree_util.tree_map(
+                        lambda x: x[r], (seg_params[str(s)], probes_seg))
+                    carry, acts_r = fn(carry, xs_r)
+                    acts_list.append(acts_r)
+                h, aux = carry
+                acts_s = jax.tree_util.tree_map(
+                    lambda *xs: jnp.stack(xs), *acts_list)
+            else:
+                (h, aux), acts_s = jax.lax.scan(
+                    fn, (h, aux), (seg_params[str(s)], probes_seg))
+            acts.update(acts_s)
+        return h, aux, acts
+
+    def _embed(self, params, tokens):
+        h = jnp.take(params["embed"], tokens, axis=0).astype(self.dtype)
+        return h * jnp.asarray(jnp.sqrt(self.arch.d_model), self.dtype)
+
+    def forward(self, params, batch, probes=None, train=True):
+        """Full-sequence forward. Returns (logits, aux, acts)."""
+        arch, sp = self.arch, self.sp
+        probes = probes or {}
+        acts: Dict[str, Array] = {}
+        memory = None
+        if arch.is_encdec:
+            mem = batch["frames"].astype(self.dtype)     # (B, Te, d) stub
+            pos_e = jnp.broadcast_to(jnp.arange(mem.shape[1]),
+                                     mem.shape[:2])
+            memory, _, acts_e = self._run_segments(
+                self._enc_segments, params["enc"], "enc", mem, probes,
+                pos_e, train=train)
+            memory = layers.rms_norm(memory, params["enc_ln"])
+            acts.update(acts_e)
+        tokens = batch["tokens"]
+        h = self._embed(params, tokens)
+        if arch.frontend == "vision":
+            h = jnp.concatenate([batch["embeds"].astype(self.dtype), h],
+                                axis=1)
+        B, T = h.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+        h = sp.residual(h)
+        h, aux, acts_m = self._run_segments(
+            arch.segments, params["segments"], "segments", h, probes,
+            positions, memory=memory, train=train)
+        acts.update(acts_m)
+        h = layers.rms_norm(h, params["final_ln"])
+        tc = blocks.TapCtx(probes, arch.n_stat, prefix="")
+        logits = tc.mm("head", params["head"]["w"], h)
+        acts.update(tc.acts)
+        if arch.logit_softcap > 0:
+            logits = layers.softcap(logits, arch.logit_softcap)
+        logits = sp.logits(logits)
+        if arch.mtp and train:
+            tcm = blocks.TapCtx(probes, arch.n_stat, prefix="")
+            h_mtp = tcm.mm("mtp_proj", params["mtp"]["w"], h)
+            acts.update(tcm.acts)
+            logits_mtp = jnp.einsum("...i,io->...o", h_mtp,
+                                    params["head"]["w"].astype(h_mtp.dtype))
+            logits_mtp = sp.logits(logits_mtp)
+            return logits, aux, acts, logits_mtp
+        return logits, aux, acts, None
+
+    def loss_fn(self, params, probes, batch):
+        arch = self.arch
+        logits, aux, acts, logits_mtp = self.forward(params, batch, probes,
+                                                     train=True)
+        targets = batch["targets"]
+        mask = None
+        if arch.frontend == "vision":       # loss only on the token span
+            logits = logits[:, arch.n_prefix:]
+        loss = _ce_loss(logits[:, :-1], targets[:, 1:])
+        if logits_mtp is not None:          # MTP: predict t+2 (depth-1)
+            if arch.frontend == "vision":
+                logits_mtp = logits_mtp[:, arch.n_prefix:]
+            loss = loss + 0.3 * _ce_loss(logits_mtp[:, :-2], targets[:, 2:])
+        loss = loss + arch.aux_loss_coef * aux
+        return loss, acts
+
+    # ----------------------------------------------------------------- serve
+    def init_cache(self, B: int, S: int, cross_len: int = 0,
+                   window_caches: bool = False, kv_rep: int = 1):
+        arch = self.arch
+        cache = {}
+        for s, seg in enumerate(arch.segments):
+            seg_cache = {}
+            for i, spec in enumerate(seg.pattern):
+                def one(_):
+                    return blocks.block_cache_init(
+                        arch, spec, B, S, self.dtype, cross_len=cross_len,
+                        window_caches=window_caches, kv_rep=kv_rep)
+                seg_cache[f"p{i}"] = jax.vmap(one)(jnp.arange(seg.repeats))
+            cache[str(s)] = seg_cache
+        return cache
+
+    def decode_step(self, params, cache, token, t):
+        """One decode step. token: (B, 1) int32; t: scalar position.
+        Returns (logits (B, 1, V), new_cache)."""
+        arch, sp = self.arch, self.sp
+        h_t = self._embed(params, token)
+        new_cache = {}
+        for s, seg in enumerate(arch.segments):
+            pattern = seg.pattern
+
+            def body(hh, xs):
+                p_stack, cache_sl = xs
+                ncs = {}
+                for i, spec in enumerate(pattern):
+                    hh, nc = blocks.decode_block(
+                        arch, spec, p_stack[f"p{i}"], hh,
+                        cache_sl[f"p{i}"], t, sp)
+                    ncs[f"p{i}"] = nc
+                return hh, ncs
+
+            if self.unroll:
+                ncs_list = []
+                for r in range(seg.repeats):
+                    xs_r = jax.tree_util.tree_map(
+                        lambda x: x[r],
+                        (params["segments"][str(s)], cache[str(s)]))
+                    h_t, ncs_r = body(h_t, xs_r)
+                    ncs_list.append(ncs_r)
+                ncs = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
+                                             *ncs_list)
+            else:
+                h_t, ncs = jax.lax.scan(
+                    body, h_t, (params["segments"][str(s)], cache[str(s)]))
+            new_cache[str(s)] = ncs
+        h_t = layers.rms_norm(h_t, params["final_ln"])
+        logits = h_t @ params["head"]["w"].astype(h_t.dtype)
+        if arch.logit_softcap > 0:
+            logits = layers.softcap(logits, arch.logit_softcap)
+        return logits, new_cache

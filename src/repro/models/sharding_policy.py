@@ -1,0 +1,121 @@
+"""Activation-sharding policy threaded through the models.
+
+Maps logical activation roles onto mesh axes; on CPU smoke tests the policy
+is inert (no constraints).  The residual stream is sequence-sharded over the
+model axis between blocks (Megatron-style sequence parallelism) — without
+it, scan-saved residuals for the backward pass of 70B+ configs exceed HBM
+(43 GB/device at train_4k for qwen2-72b; /16 with SP → 2.7 GB).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardPolicy:
+    dp: Tuple[str, ...] = ()          # data axes ("pod","data") or ("data",)
+    tp: Optional[str] = None          # model axis
+    seq_shard_residual: bool = True   # sequence parallelism on residuals
+    shard_kv_seq: bool = False        # long-context: shard cache seq over dp
+    axis_sizes: Tuple[Tuple[str, int], ...] = ()   # mesh axis → size
+    #: decode-cache layout: "seq" (baseline; S on model axis — dynamic
+    #: cache writes become collective-permutes of the cache shard) or
+    #: "heads" (hillclimb: KV heads replicated up to the model-axis size,
+    #: head-sharded cache, writes are local)
+    kv_cache_layout: str = "seq"
+    #: ring/window caches at or below this many slots use the "batch"
+    #: layout regardless (replication is cheap, writes become local)
+    kv_small_seq_threshold: int = 0
+
+    @property
+    def active(self) -> bool:
+        return bool(self.dp) or self.tp is not None
+
+    def _c(self, x: Array, spec: P) -> Array:
+        if not self.active:
+            return x
+        if self.axis_sizes:
+            # drop axes that don't divide the dim (odd vocab/head counts)
+            sizes = dict(self.axis_sizes)
+
+            def ax(entry):
+                if entry is None:
+                    return 1
+                names = entry if isinstance(entry, tuple) else (entry,)
+                n = 1
+                for a in names:
+                    n *= sizes.get(a, 1)
+                return n
+            fitted = []
+            for i, entry in enumerate(tuple(spec)):
+                if i < x.ndim and entry is not None and \
+                        x.shape[i] % ax(entry) == 0:
+                    fitted.append(entry)
+                else:
+                    fitted.append(None)
+            spec = P(*fitted)
+        return jax.lax.with_sharding_constraint(x, spec)
+
+    # --- activation roles --------------------------------------------------
+    def residual(self, h: Array) -> Array:
+        """(B, T, d) between blocks."""
+        seq = self.tp if self.seq_shard_residual else None
+        return self._c(h, P(self.dp or None, seq, None))
+
+    def full_seq(self, h: Array) -> Array:
+        """(B, T, d) inside blocks (sequence gathered)."""
+        return self._c(h, P(self.dp or None, None, None))
+
+    def heads(self, x: Array) -> Array:
+        """(B, T, H, hd) — heads on the model axis."""
+        return self._c(x, P(self.dp or None, None, self.tp, None))
+
+    def ffn_hidden(self, x: Array) -> Array:
+        """(B, T, f) — hidden on the model axis."""
+        return self._c(x, P(self.dp or None, None, self.tp))
+
+    def moe_buffers(self, x: Array) -> Array:
+        """(E, C, d) — experts on model, capacity on data."""
+        return self._c(x, P(self.tp, self.dp or None, None))
+
+    def logits(self, x: Array) -> Array:
+        """(B, T, V) — vocab on the model axis."""
+        return self._c(x, P(self.dp or None, None, self.tp))
+
+    def kv_cache(self, x: Array) -> Array:
+        """Cache with layout (…, B, S, *inner): batch on the data axes and
+        *sequence* on the model axis (flash-decoding style: XLA psums the
+        partial softmax stats across cache shards).  Sequence-sharding is
+        chosen over head-sharding because kv_heads (1–16) rarely divide the
+        model axis while S always does.  Long-context decode (B=1) shards
+        the sequence over every axis instead."""
+        n_inner = x.ndim - 3        # dims after (B, S): 2 for KV, 1 for MLA
+        S = x.shape[x.ndim - n_inner - 1]
+        if self.shard_kv_seq:
+            axes = tuple(self.dp) + ((self.tp,) if self.tp else ())
+            spec = (None, axes or None) + (None,) * n_inner
+        elif S <= self.kv_small_seq_threshold:
+            spec = (self.dp or None,) + (None,) * (n_inner + 1)
+        elif self.kv_cache_layout == "heads" and n_inner == 2:
+            spec = (self.dp or None, None, self.tp, None)
+        elif self.kv_cache_layout == "hd" and n_inner == 2:
+            # head_dim-sharded: writes local; attention pays one tiny
+            # scores-psum (contraction dim sharded)
+            spec = (self.dp or None, None, None, self.tp)
+        else:
+            spec = (self.dp or None, self.tp) + (None,) * n_inner
+        return self._c(x, P(*((None,) * (x.ndim - len(spec)) + spec)))
+
+    def state(self, x: Array) -> Array:
+        """Recurrent state (B, ...): batch over dp only."""
+        spec = P(self.dp or None, *([None] * (x.ndim - 1)))
+        return self._c(x, spec)
+
+
+NO_SHARD = ShardPolicy()

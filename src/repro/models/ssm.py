@@ -1,0 +1,182 @@
+"""State-space / linear-recurrence mixers: Mamba-2 SSD and RG-LRU.
+
+Mamba-2 (SSD, arXiv:2405.21060): chunked state-space-duality algorithm —
+intra-chunk quadratic term + inter-chunk recurrent state passing.  The
+chunked form is the TPU-native adaptation: each chunk's work is dense
+MXU-friendly einsums, the sequential part is an O(T/chunk) scan over small
+(H, hd, N) states.  Sub-quadratic in T; decode is O(1) per token.
+
+RG-LRU (RecurrentGemma / Griffin, arXiv:2402.19427): gated diagonal linear
+recurrence h_t = a_t ⊙ h_{t-1} + √(1−a_t²) ⊙ (i_t ⊙ x_t), implemented with
+an associative scan over T for training and a one-step update for decode.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# depthwise causal conv1d (both mixers use a short temporal conv)
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(x: Array, w: Array) -> Array:
+    """x: (B, T, C), w: (K, C) depthwise. Causal (pads left)."""
+    K = w.shape[0]
+    pads = [jnp.pad(x, ((0, 0), (K - 1 - i, i), (0, 0)))[:, : x.shape[1]]
+            for i in range(K)]
+    # y_t = Σ_i w[K-1-i] * x_{t-(K-1-i)} ; build explicitly (K is tiny)
+    y = sum(p * w[i][None, None, :] for i, p in enumerate(pads))
+    return y
+
+
+def causal_conv1d_step(x_t: Array, buf: Array, w: Array
+                       ) -> Tuple[Array, Array]:
+    """Decode step. x_t: (B, C); buf: (B, K-1, C) past inputs."""
+    K = w.shape[0]
+    window = jnp.concatenate([buf, x_t[:, None, :]], axis=1)   # (B,K,C)
+    y = jnp.einsum("bkc,kc->bc", window, w)
+    return y, window[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 SSD
+# ---------------------------------------------------------------------------
+
+class SsdDims(NamedTuple):
+    d_model: int
+    d_inner: int          # = expand * d_model (expand = 2)
+    n_heads: int          # = d_inner // head_dim
+    head_dim: int = 64
+    d_state: int = 128
+    n_groups: int = 1
+    conv_k: int = 4
+    chunk: int = 256
+
+
+def ssd_chunked(xh: Array, dt: Array, A: Array, Bm: Array, Cm: Array,
+                chunk: int) -> Array:
+    """Chunked SSD scan.
+
+    xh: (B, T, H, P) inputs; dt: (B, T, H) positive step sizes;
+    A: (H,) negative decay rates; Bm, Cm: (B, T, G, N) input/output maps
+    (G groups broadcast over H). Returns (B, T, H, P).
+    """
+    Bsz, T, H, P = xh.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    nc = T // chunk
+    rep = H // G
+    # per-step log decay
+    dA = dt * A[None, None, :]                          # (B,T,H) ≤ 0
+    xh = xh.reshape(Bsz, nc, chunk, H, P)
+    dt_c = dt.reshape(Bsz, nc, chunk, H)
+    dA_c = dA.reshape(Bsz, nc, chunk, H)
+    B_c = jnp.repeat(Bm.reshape(Bsz, nc, chunk, G, N), rep, axis=3)
+    C_c = jnp.repeat(Cm.reshape(Bsz, nc, chunk, G, N), rep, axis=3)
+
+    cum = jnp.cumsum(dA_c, axis=2)                      # (B,nc,c,H)
+    seg_end = cum[:, :, -1]                             # (B,nc,H) total decay
+
+    # ---- intra-chunk (quadratic within the chunk, causal) ----
+    # L[s, t] = exp(cum_s − cum_t) for s ≥ t
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]    # (B,nc,s,t,H)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    Lmat = jnp.where(causal[None, None, :, :, None], jnp.exp(diff), 0.0)
+    CB = jnp.einsum("bcshn,bcthn->bcsth", C_c, B_c)         # (B,nc,s,t,H)
+    y_intra = jnp.einsum("bcsth,bcsth,bcth,bcthp->bcshp",
+                         CB, Lmat, dt_c, xh)
+
+    # ---- chunk states + inter-chunk recurrence ----
+    decay_to_end = jnp.exp(seg_end[:, :, None, :] - cum)    # (B,nc,c,H)
+    states = jnp.einsum("bcthn,bcth,bcth,bcthp->bchnp",
+                        B_c, dt_c, decay_to_end, xh)        # (B,nc,H,N,P)
+
+    def chunk_step(carry, inp):
+        st_prev = carry                                     # (B,H,N,P)
+        st_c, g = inp                                       # g: (B,H)
+        st = st_prev * jnp.exp(g)[..., None, None] + st_c
+        return st, st_prev
+
+    init = jnp.zeros_like(states[:, 0])
+    _, prev_states = jax.lax.scan(
+        chunk_step, init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(seg_end, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)           # (B,nc,H,N,P)
+
+    y_inter = jnp.einsum("bcthn,bcth,bchnp->bcthp",
+                         C_c, jnp.exp(cum), prev_states)
+    y = (y_intra + y_inter).reshape(Bsz, T, H, P)
+    return y
+
+
+def ssd_decode_step(x_t: Array, dt_t: Array, A: Array, B_t: Array,
+                    C_t: Array, state: Array) -> Tuple[Array, Array]:
+    """One-token SSD update.  x_t: (B,H,P), dt_t: (B,H), B_t/C_t: (B,G,N),
+    state: (B,H,N,P) → (y_t, new_state)."""
+    H = x_t.shape[1]
+    G = B_t.shape[1]
+    rep = H // G
+    Bh = jnp.repeat(B_t, rep, axis=1)                       # (B,H,N)
+    Ch = jnp.repeat(C_t, rep, axis=1)
+    decay = jnp.exp(dt_t * A[None, :])                      # (B,H)
+    upd = jnp.einsum("bhn,bh,bhp->bhnp", Bh, dt_t, x_t)
+    state = state * decay[..., None, None] + upd
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, state)
+    return y, state
+
+
+def ssd_reference(xh, dt, A, Bm, Cm):
+    """O(T²) dense SSD oracle (tests only): y_s = Σ_{t≤s} C_s·exp(ΣdA)·B_t dt_t x_t."""
+    Bsz, T, H, P = xh.shape
+    G = Bm.shape[2]
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=2)
+    Ch = jnp.repeat(Cm, rep, axis=2)
+    dA = dt * A[None, None, :]
+    cum = jnp.cumsum(dA, axis=1)                            # (B,T,H)
+    diff = cum[:, :, None, :] - cum[:, None, :, :]          # (B,s,t,H)
+    L = jnp.where(jnp.tril(jnp.ones((T, T), bool))[None, :, :, None],
+                  jnp.exp(diff), 0.0)
+    CB = jnp.einsum("bshn,bthn->bsth", Ch, Bh)
+    return jnp.einsum("bsth,bsth,bth,bthp->bshp", CB, L, dt, xh)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+_C_RGLRU = 8.0
+
+
+def rglru(x: Array, gate_x: Array, gate_a: Array, lam: Array) -> Array:
+    """RG-LRU over a sequence.  x, gates: (B, T, D); lam: (D,) raw Λ.
+    a_t = exp(−c·softplus(Λ)·σ(gate_a)); h_t = a_t h_{t-1} + √(1−a_t²)·(σ(gate_x)⊙x)."""
+    log_a = -_C_RGLRU * jax.nn.softplus(lam)[None, None, :] * \
+        jax.nn.sigmoid(gate_a.astype(jnp.float32))
+    a = jnp.exp(log_a)
+    gated = jax.nn.sigmoid(gate_x.astype(jnp.float32)) * x.astype(jnp.float32)
+    inp = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * gated
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    a_s, h = jax.lax.associative_scan(combine, (a, inp), axis=1)
+    return h.astype(x.dtype)
+
+
+def rglru_step(x_t, gate_x, gate_a, lam, h_prev):
+    """One-token RG-LRU.  x_t, gates: (B, D); h_prev: (B, D)."""
+    log_a = -_C_RGLRU * jax.nn.softplus(lam)[None, :] * \
+        jax.nn.sigmoid(gate_a.astype(jnp.float32))
+    a = jnp.exp(log_a)
+    gated = jax.nn.sigmoid(gate_x.astype(jnp.float32)) * \
+        x_t.astype(jnp.float32)
+    h = a * h_prev + jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * gated
+    return h.astype(x_t.dtype), h

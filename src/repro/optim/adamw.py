@@ -1,0 +1,49 @@
+"""AdamW — the fallback optimizer for non-tapped parameters (embeddings,
+norms, biases) inside the K-FAC hybrid, and a standalone baseline."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import base
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: object
+    nu: object
+
+
+def adamw(lr: base.Schedule, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.0) -> base.Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          mu=jax.tree_util.tree_map(zeros, params),
+                          nu=jax.tree_util.tree_map(zeros, params))
+
+    def update(grads, state, params, **_):
+        step = state.step + 1
+        a = lr(state.step)
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m_new = b1 * m + (1 - b1) * g
+            v_new = b2 * v + (1 - b2) * g * g
+            mhat = m_new / c1
+            vhat = v_new / c2
+            d = mhat / (jnp.sqrt(vhat) + eps) + \
+                weight_decay * p.astype(jnp.float32)
+            return -a * d, m_new, v_new
+
+        istuple = lambda t: isinstance(t, tuple)
+        flat = jax.tree_util.tree_map(upd, grads, state.mu, state.nu, params)
+        pick = lambda i: jax.tree_util.tree_map(lambda t: t[i], flat,
+                                                is_leaf=istuple)
+        return pick(0), AdamWState(step=step, mu=pick(1), nu=pick(2))
+
+    return base.Optimizer(init=init, update=update)

@@ -1,0 +1,75 @@
+"""Optimizer interface + shared transforms (schedules, clipping, wd).
+
+All optimizers follow the (init, update) functional convention:
+
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params, **aux)
+    params = apply_updates(params, updates)
+
+``updates`` are *additive deltas* (already scaled by -lr).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+Schedule = Callable[[Array], Array]   # step -> value
+
+
+def constant(v: float) -> Schedule:
+    return lambda step: jnp.asarray(v, jnp.float32)
+
+
+def piecewise(boundaries, values) -> Schedule:
+    """Paper-style staircase schedules (α_k and φ_λ,k of §6)."""
+    bs = jnp.asarray(boundaries, jnp.float32)
+    vs = jnp.asarray(values, jnp.float32)
+
+    def sched(step):
+        idx = jnp.sum(jnp.asarray(step, jnp.float32) >= bs)
+        return vs[idx]
+    return sched
+
+
+def paper_lr_schedule(steps_per_epoch: int) -> Schedule:
+    """α_k = 0.3 − 0.1·[e≥2] − 0.1·[e≥3] − 0.07·[e≥13] − 0.02·[e≥18]
+                − 0.007·[e≥27] − 0.002·[e≥40]   (paper §6)."""
+    e = steps_per_epoch
+    vals = [0.3, 0.2, 0.1, 0.03, 0.01, 0.003, 0.001]
+    return piecewise([2 * e, 3 * e, 13 * e, 18 * e, 27 * e, 40 * e], vals)
+
+
+def paper_damping_schedule(steps_per_epoch: int) -> Schedule:
+    """φ_λ,k = 0.1 − 0.05·[e≥25] − 0.04·[e≥35]   (paper §6)."""
+    e = steps_per_epoch
+    return piecewise([25 * e, 35 * e], [0.1, 0.05, 0.01])
+
+
+def global_norm(tree) -> Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: Array):
+    """Scale the whole update tree so its global l2 norm ≤ max_norm
+    (the paper's "clip parameter" applied to the preconditioned step)."""
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree_util.tree_map(lambda x: (x * scale).astype(x.dtype), tree)
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(
+        lambda p, u: (p.astype(jnp.float32) + u.astype(jnp.float32)
+                      ).astype(p.dtype), params, updates)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[..., Any]   # (grads, state, params, **aux) -> (upd, st)

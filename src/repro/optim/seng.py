@@ -1,0 +1,126 @@
+"""SENG baseline (Yang et al., 2021 — "Sketchy Empirical Natural Gradient")
+— the paper's state-of-the-art comparison point (§6, benchmark 0).
+
+Layer-wise *empirical* Fisher with per-example gradient factors.  For a
+matmul layer, the per-example gradient is the rank-1 outer product
+dW_i = a_i g_iᵀ, so the empirical Fisher solve reduces — via Woodbury — to
+an n×n gram-matrix solve built from two small grams (no P×P matrix ever):
+
+    (λI + (1/n) Σ vec(dW_i)vec(dW_i)ᵀ)⁻¹ vec(Ḡ)
+      = (1/λ) [ Ḡ − (1/n) A diag(c) Gᵀ ],
+    c  = (λ n I + K)⁻¹ t,
+    K  = (AᵀA) ⊙ (GᵀG),        t_i = a_iᵀ Ḡ g_i,
+
+with A (d_in, n), G (d_out, n) the tapped activation / probe-grad factors.
+The "sketchy" part: n is a subsample of examples (the official impl's
+``fim_col_sample_size``), and the factors are refreshed only every
+``T_fim`` steps (``curvature_update_freq``) — between refreshes the cached
+factors precondition fresh gradients.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kfac as kfac_lib
+from repro.optim import adamw as _adamw
+from repro.optim import base as optbase
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SengConfig:
+    lr: optbase.Schedule = optbase.constant(0.05)
+    damping: float = 2.0
+    momentum: float = 0.9
+    weight_decay: float = 1e-2
+    T_fim: int = 200                 # curvature_update_freq
+    fallback_lr: optbase.Schedule = optbase.constant(1e-3)
+
+    def flags(self, step: int) -> Dict[str, bool]:
+        return dict(do_fim=step % self.T_fim == 0)
+
+
+class SengState(NamedTuple):
+    step: Array
+    factors: Dict[str, Any]          # name -> (A, G) cached factors
+    momentum: Any
+    fallback: Any
+
+
+def _precondition(A, G, J, lam):
+    """Woodbury empirical-NG solve; J = mean grad (d_in, d_out)."""
+    n = A.shape[-1]
+    K = (A.T @ A) * (G.T @ G)                     # (n, n)
+    t = jnp.einsum("in,io,on->n", A, J, G)        # a_iᵀ J g_i
+    c = jnp.linalg.solve(lam * n * jnp.eye(n, dtype=J.dtype) + K, t)
+    correction = jnp.einsum("in,n,on->io", A, c, G)
+    return (J - correction) / lam
+
+
+class Seng:
+    """Per-layer sketchy empirical NG over the same tap protocol as Kfac."""
+
+    def __init__(self, cfg: SengConfig, taps: Dict[str, kfac_lib.TapInfo]):
+        self.cfg = cfg
+        self.taps = dict(taps)
+        self._fallback = _adamw.adamw(cfg.fallback_lr)
+
+    def init(self, params) -> SengState:
+        factors = {}
+        for name, t in self.taps.items():
+            factors[name] = (
+                jnp.zeros(t.stack + (t.d_in, t.n_stat), jnp.float32),
+                jnp.zeros(t.stack + (t.d_out, t.n_stat), jnp.float32))
+        mom = {n: jnp.zeros((t.d_in, t.d_out), jnp.float32)
+               if not t.stack else
+               jnp.zeros(t.stack + (t.d_in, t.d_out), jnp.float32)
+               for n, t in self.taps.items()}
+        return SengState(step=jnp.zeros((), jnp.int32), factors=factors,
+                         momentum=mom, fallback=self._fallback.init(params))
+
+    def update(self, grads, state: SengState, params, *, acts, probe_grads,
+               n_tokens, rng=None, do_fim: bool = False):
+        cfg = self.cfg
+        lr = cfg.lr(state.step)
+        factors = dict(state.factors)
+        if do_fim:
+            for name in self.taps:
+                A = jnp.swapaxes(acts[name], -1, -2).astype(jnp.float32)
+                G = (jnp.swapaxes(probe_grads[name], -1, -2)
+                     .astype(jnp.float32) * jnp.asarray(n_tokens, jnp.float32))
+                factors[name] = (A, G)
+
+        updates = grads
+        new_mom = dict(state.momentum)
+        for name, t in self.taps.items():
+            W = kfac_lib.get_path(params, t.param_path)
+            J = kfac_lib.get_path(grads, t.param_path).astype(jnp.float32)
+            A, G = factors[name]
+            fn = _precondition
+            for _ in t.stack:
+                fn = jax.vmap(fn, in_axes=(0, 0, 0, None))
+            S = fn(A, G, J, jnp.asarray(cfg.damping, jnp.float32))
+            S = S + cfg.weight_decay * W.astype(jnp.float32)
+            m = cfg.momentum * new_mom[name] + S
+            new_mom[name] = m
+            updates = kfac_lib.set_path(updates, t.param_path, m)
+
+        tapped_paths = {t.param_path for t in self.taps.values()}
+        fb_updates, fb_state = self._fallback.update(grads, state.fallback,
+                                                     params)
+
+        def finalize(path_keys, seng_u, fb_u):
+            path = "/".join(str(k.key) for k in path_keys)
+            if path in tapped_paths:
+                return -lr * seng_u.astype(jnp.float32)
+            return fb_u
+
+        updates = jax.tree_util.tree_map_with_path(finalize, updates,
+                                                   fb_updates)
+        return updates, SengState(step=state.step + 1, factors=factors,
+                                  momentum=new_mom, fallback=fb_state)

@@ -1,0 +1,40 @@
+"""SGD with momentum + decoupled weight decay (baseline substrate)."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import base
+
+
+class SgdState(NamedTuple):
+    step: jax.Array
+    momentum: object
+
+
+def sgd(lr: base.Schedule, momentum: float = 0.9, weight_decay: float = 0.0,
+        nesterov: bool = False) -> base.Optimizer:
+    def init(params):
+        mom = jax.tree_util.tree_map(
+            lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        return SgdState(step=jnp.zeros((), jnp.int32), momentum=mom)
+
+    def update(grads, state, params, **_):
+        a = lr(state.step)
+
+        def upd(g, m, p):
+            g = g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
+            m_new = momentum * m + g
+            d = g + momentum * m_new if nesterov else m_new
+            return -a * d, m_new
+
+        flat = jax.tree_util.tree_map(upd, grads, state.momentum, params)
+        updates = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                         is_leaf=lambda t: isinstance(t, tuple))
+        mom = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                     is_leaf=lambda t: isinstance(t, tuple))
+        return updates, SgdState(step=state.step + 1, momentum=mom)
+
+    return base.Optimizer(init=init, update=update)

@@ -1,0 +1,176 @@
+"""Fault-tolerant checkpointing: sharded npz + JSON manifest, atomic
+rename, async writer thread, restore-with-resharding.
+
+Layout:
+    <dir>/step_000123/
+        manifest.json        {step, tree structure, mesh, timestamp, done}
+        arrays.npz           flat {escaped-path: np.ndarray}
+    <dir>/LATEST             atomic pointer file
+
+Restore never requires the original mesh: arrays land on host and are
+``device_put`` with the *new* sharding (elastic remesh path — see
+train/elastic.py).  A checkpoint is only visible once its manifest has
+``done: true`` and LATEST points at it (crash-consistent).
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+SEP = "|"
+
+
+def _key_str(k) -> str:
+    for attr in ("key", "name", "idx"):
+        if hasattr(k, attr):
+            return str(getattr(k, attr))
+    return str(k)
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for kp, leaf in flat:
+        key = SEP.join(_key_str(k) for k in kp)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def _unflatten_into(template, arrays: Dict[str, np.ndarray]):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for kp, leaf in flat:
+        key = SEP.join(_key_str(k) for k in kp)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = arrays[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save(directory: str, step: int, tree, extra: Optional[dict] = None
+         ) -> str:
+    """Synchronous checkpoint write with atomic publish."""
+    os.makedirs(directory, exist_ok=True)
+    name = f"step_{step:09d}"
+    tmp = os.path.join(directory, f".tmp_{name}_{os.getpid()}")
+    final = os.path.join(directory, name)
+    os.makedirs(tmp, exist_ok=True)
+    arrays = _flatten(tree)
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "time": time.time(),
+        "n_arrays": len(arrays),
+        "bytes": int(sum(a.nbytes for a in arrays.values())),
+        "extra": extra or {},
+        "done": True,
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)                      # atomic publish
+    latest_tmp = os.path.join(directory, ".LATEST.tmp")
+    with open(latest_tmp, "w") as f:
+        f.write(name)
+    os.replace(latest_tmp, os.path.join(directory, "LATEST"))
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    ptr = os.path.join(directory, "LATEST")
+    if not os.path.exists(ptr):
+        return None
+    with open(ptr) as f:
+        name = f.read().strip()
+    man = os.path.join(directory, name, "manifest.json")
+    if not os.path.exists(man):
+        return None
+    with open(man) as f:
+        m = json.load(f)
+    return m["step"] if m.get("done") else None
+
+
+def restore(directory: str, template, step: Optional[int] = None,
+            shardings=None) -> Tuple[Any, dict]:
+    """Load a checkpoint into the template's structure.  ``shardings`` (a
+    matching pytree of NamedSharding) re-lays the arrays onto any mesh."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {directory}")
+    path = os.path.join(directory, f"step_{step:09d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        arrays = {k: z[k] for k in z.files}
+    tree = _unflatten_into(template, arrays)
+    if shardings is not None:
+        tree = jax.tree_util.tree_map(
+            lambda x, s: jax.device_put(x, s), tree, shardings)
+    return tree, manifest
+
+
+def prune(directory: str, keep: int = 3) -> None:
+    if not os.path.isdir(directory):
+        return
+    ckpts = sorted(d for d in os.listdir(directory)
+                   if d.startswith("step_"))
+    for d in ckpts[:-keep]:
+        shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+
+
+class AsyncCheckpointer:
+    """Background writer: device→host copy happens on the caller thread
+    (cheap, avoids mutation races), serialization + IO on a worker."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._q: "queue.Queue" = queue.Queue(maxsize=2)
+        self._err: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, host_tree, extra = item
+            try:
+                save(self.directory, step, host_tree, extra)
+                prune(self.directory, self.keep)
+            except BaseException as e:      # surfaced on next submit/close
+                self._err = e
+            finally:
+                self._q.task_done()
+
+    def submit(self, step: int, tree, extra: Optional[dict] = None):
+        if self._err is not None:
+            raise RuntimeError("async checkpoint failed") from self._err
+        host_tree = jax.tree_util.tree_map(np.asarray, tree)
+        self._q.put((step, host_tree, extra))
+
+    def wait(self):
+        self._q.join()
+        if self._err is not None:
+            raise RuntimeError("async checkpoint failed") from self._err
+
+    def close(self):
+        self._q.join()
+        self._q.put(None)
+        self._thread.join(timeout=10)
+        if self._err is not None:
+            raise RuntimeError("async checkpoint failed") from self._err

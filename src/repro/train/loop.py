@@ -1,0 +1,91 @@
+"""Training-step factory: ties a tapped model, a loss, and an optimizer
+(K-FAC family or baseline) into jit-able step functions.
+
+The K-FAC step computes grads w.r.t. (params, probes) in one backward pass;
+probe-grads and tapped activations feed the curvature machinery.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kfac as kfac_lib
+from repro.models import layers
+from repro.optim import base as optbase
+
+Array = jax.Array
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Any
+    rng: Array
+
+
+def kfac_grads(loss_fn, params, probes, batch, rng=None):
+    """(loss, acts), grads w.r.t. params AND probes, one backward pass."""
+    args = (params, probes, batch) + ((rng,) if rng is not None else ())
+    (loss, acts), (gp, gprobe) = jax.value_and_grad(
+        loss_fn, argnums=(0, 1), has_aux=True)(*args)
+    return loss, acts, gp, gprobe
+
+
+def make_kfac_step(loss_fn: Callable, opt: kfac_lib.Kfac,
+                   n_tokens: int, probe_dtype=jnp.float32):
+    """Returns step(state, batch, *, do_stats, do_light, do_heavy) — flags
+    static; jit with static_argnames=("do_stats","do_light","do_heavy")."""
+
+    def step(state: TrainState, batch, do_stats: bool, do_light: bool,
+             do_heavy: bool):
+        rng, sub = jax.random.split(state.rng)
+        probes = layers.make_probes(opt.taps, probe_dtype)
+        loss, acts, gp, gprobe = kfac_grads(loss_fn, state.params, probes,
+                                            batch)
+        updates, opt_state = opt.update(
+            gp, state.opt, state.params, acts=acts, probe_grads=gprobe,
+            n_tokens=n_tokens, rng=sub, do_stats=do_stats,
+            do_light=do_light, do_heavy=do_heavy)
+        params = optbase.apply_updates(state.params, updates)
+        return TrainState(params=params, opt=opt_state, rng=rng), loss
+
+    return step
+
+
+def make_baseline_step(loss_fn: Callable, opt: optbase.Optimizer):
+    """Step for probe-free optimizers (SGD/AdamW/SENG uses its own maker)."""
+
+    def step(state: TrainState, batch):
+        rng, _ = jax.random.split(state.rng)
+        probes = {}
+        (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state.params, probes, batch)
+        updates, opt_state = opt.update(grads, state.opt, state.params)
+        params = optbase.apply_updates(state.params, updates)
+        return TrainState(params=params, opt=opt_state, rng=rng), loss
+
+    return step
+
+
+def run_kfac_training(loss_fn, opt: kfac_lib.Kfac, params, batches,
+                      n_tokens: int, seed: int = 0, jit: bool = True,
+                      callback=None):
+    """Python-level driver: dispatches the statically-flagged step variants
+    per the paper's T_* schedules. Returns (final TrainState, losses)."""
+    state = TrainState(params=params, opt=opt.init(params),
+                       rng=jax.random.PRNGKey(seed))
+    step_fn = make_kfac_step(loss_fn, opt, n_tokens)
+    if jit:
+        step_fn = jax.jit(step_fn,
+                          static_argnames=("do_stats", "do_light",
+                                           "do_heavy"))
+    losses = []
+    for k, batch in enumerate(batches):
+        flags = opt.cfg.flags(k)
+        state, loss = step_fn(state, batch, **flags)
+        losses.append(float(loss))
+        if callback is not None:
+            callback(k, state, loss)
+    return state, losses

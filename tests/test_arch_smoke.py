@@ -1,0 +1,123 @@
+"""Per-architecture smoke tests: reduced config of the same family, one
+forward + loss/grad step and one decode step on CPU; asserts shapes + no
+NaNs.  (Full configs are exercised only via the dry-run.)"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import ARCH_NAMES, get_arch
+from repro.models import layers
+from repro.models.lm import LM
+
+B, T = 2, 32
+
+
+def _batch(arch, key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    n_tok = T - (arch.n_prefix if arch.frontend == "vision" else 0)
+    batch = {
+        "tokens": jax.random.randint(k1, (B, n_tok), 0, arch.vocab),
+        "targets": jax.random.randint(k2, (B, n_tok), 0, arch.vocab),
+    }
+    if arch.is_encdec:
+        batch["frames"] = jax.random.normal(k3, (B, T, arch.d_model)) * 0.1
+        batch["tokens"] = batch["tokens"][:, : T // arch.dec_ratio]
+        batch["targets"] = batch["targets"][:, : T // arch.dec_ratio]
+    if arch.frontend == "vision":
+        batch["embeds"] = jax.random.normal(k3, (B, arch.n_prefix,
+                                                 arch.d_model)) * 0.1
+    return batch
+
+
+@pytest.fixture(scope="module")
+def built():
+    out = {}
+    for name in ARCH_NAMES:
+        arch = get_arch(name).reduced()
+        lm = LM(arch, remat=False)
+        params = lm.init(jax.random.PRNGKey(0))
+        out[name] = (arch, lm, params)
+    return out
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_forward_and_grad(name, built):
+    arch, lm, params = built[name]
+    batch = _batch(arch, jax.random.PRNGKey(1))
+    probes = layers.make_probes(lm.taps)
+
+    def loss(p, pr):
+        return lm.loss_fn(p, pr, batch)
+
+    (l, acts), (gp, gprobe) = jax.value_and_grad(
+        loss, argnums=(0, 1), has_aux=True)(params, probes)
+    assert np.isfinite(float(l)), f"{name}: loss={l}"
+    # activations recorded for every tap
+    for tname, tap in lm.taps.items():
+        assert tname in acts, f"{name}: missing act {tname}"
+        a = acts[tname]
+        assert a.shape == tap.stack + (tap.n_stat, tap.d_in), \
+            f"{name}/{tname}: {a.shape}"
+        g = gprobe[tname]
+        assert g.shape == tap.stack + (tap.n_stat, tap.d_out)
+        assert np.isfinite(np.asarray(g)).all(), f"{name}/{tname} probe grad"
+    # param grads finite
+    for leaf in jax.tree_util.tree_leaves(gp):
+        assert np.isfinite(np.asarray(leaf)).all(), name
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_decode_step(name, built):
+    arch, lm, params = built[name]
+    S = 16
+    cross_len = T if arch.is_encdec else 0
+    cache = lm.init_cache(B, S, cross_len=cross_len)
+    token = jnp.zeros((B, 1), jnp.int32)
+    logits, cache = lm.decode_step(params, cache, token, jnp.asarray(0))
+    assert logits.shape == (B, 1, arch.vocab)
+    assert np.isfinite(np.asarray(logits)).all(), name
+    logits, cache = lm.decode_step(params, cache, token, jnp.asarray(1))
+    assert np.isfinite(np.asarray(logits)).all(), name
+
+
+@pytest.mark.parametrize("name", ["gemma3_4b", "mamba2_2p7b",
+                                  "recurrentgemma_2b"])
+def test_decode_matches_forward(name, built):
+    """Greedy decode logits == full-forward logits position by position."""
+    arch, lm, params = built[name]
+    key = jax.random.PRNGKey(3)
+    n_tok = 8
+    tokens = jax.random.randint(key, (B, n_tok), 0, arch.vocab)
+    batch = {"tokens": tokens, "targets": tokens}
+    logits_full, _, _, _ = lm.forward(params, batch, train=False)
+    cache = lm.init_cache(B, n_tok)
+    outs = []
+    for t in range(n_tok):
+        lg, cache = lm.decode_step(params, cache, tokens[:, t: t + 1],
+                                   jnp.asarray(t))
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(logits_full),
+                               atol=2e-2, rtol=2e-2)
+
+
+def test_param_counts_full_configs():
+    """Full (non-reduced) configs must hit the advertised parameter scale."""
+    expected = {
+        "qwen2_72b": (60e9, 90e9),
+        "deepseek_v3_671b": (550e9, 750e9),
+        "gemma2_27b": (20e9, 34e9),
+        "mamba2_2p7b": (2.0e9, 3.5e9),
+        "llama4_scout_17b_a16e": (80e9, 130e9),  # total (17B active)
+        "recurrentgemma_2b": (2.0e9, 4.5e9),
+        "gemma3_4b": (3.0e9, 6e9),
+        "h2o_danube_3_4b": (3.0e9, 5e9),
+        "whisper_medium": (0.25e9, 1.2e9),
+        "internvl2_76b": (60e9, 90e9),
+    }
+    from repro.launch.param_count import count_params
+    for name, (lo, hi) in expected.items():
+        n = count_params(get_arch(name))
+        assert lo <= n <= hi, f"{name}: {n/1e9:.1f}B params not in " \
+                              f"[{lo/1e9:.0f}B, {hi/1e9:.0f}B]"

@@ -1,0 +1,97 @@
+"""Per-kernel allclose tests: Pallas (interpret mode) vs pure-jnp oracle,
+swept over shapes and dtypes, plus hypothesis property tests on ops dispatch.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ref, ops
+from repro.kernels.ea_syrk import ea_syrk_pallas
+from repro.kernels.brand_panel import brand_panel_pallas
+from repro.kernels.lowrank_apply import lowrank_apply_pallas
+
+
+def _tol(dtype):
+    return dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=2e-3, rtol=2e-3)
+
+
+@pytest.mark.parametrize("d,n", [(256, 128), (512, 256), (384, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("first", [False, True])
+def test_ea_syrk_vs_ref(d, n, dtype, first):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(d + n))
+    M = jax.random.normal(k1, (d, d), dtype=jnp.float32)
+    M = ((M + M.T) / 2).astype(dtype)
+    X = jax.random.normal(k2, (d, n), dtype=dtype)
+    rho = 0.95
+    keep = jnp.asarray(0.0 if first else rho, jnp.float32)
+    coef = 1.0 - keep
+    got = ea_syrk_pallas(M, X, keep, coef, bm=128, bn=128, bk=128,
+                         interpret=True)
+    want = ref.ea_syrk(M, X, rho, first)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("d,r,n", [(512, 64, 128), (1024, 256, 128),
+                                   (256, 8, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_brand_panel_vs_ref(d, r, n, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(d + r + n))
+    U, _ = jnp.linalg.qr(jax.random.normal(k1, (d, r)))
+    U = U.astype(dtype)
+    A = jax.random.normal(k2, (d, n), dtype=dtype)
+    C_got, P_got = brand_panel_pallas(U, A, bk=256, interpret=True)
+    C_want, P_want = ref.brand_panel(U, A)
+    np.testing.assert_allclose(np.asarray(C_got, np.float32),
+                               np.asarray(C_want, np.float32), **_tol(dtype))
+    np.testing.assert_allclose(np.asarray(P_got, np.float32),
+                               np.asarray(P_want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("p,d,w", [(256, 512, 64), (128, 1024, 256),
+                                   (384, 256, 8)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_lowrank_apply_vs_ref(p, d, w, dtype):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(p + d + w), 3)
+    X = jax.random.normal(k1, (p, d), dtype=dtype)
+    U, _ = jnp.linalg.qr(jax.random.normal(k2, (d, w)))
+    U = U.astype(dtype)
+    s = -jax.random.uniform(k3, (w,), minval=0.1, maxval=1.0).astype(dtype)
+    lam = jnp.asarray(0.7, dtype)
+    got = lowrank_apply_pallas(X, U, s, lam, bm=128, bn=128, bk=128,
+                               interpret=True)
+    want = ref.lowrank_apply(X, U, s, lam)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+class TestOpsDispatch:
+    """ops.* must be semantically identical to ref.* on any backend/shape."""
+
+    def test_ea_syrk_unaligned_falls_back(self):
+        M = jnp.eye(100)
+        X = jnp.ones((100, 7))
+        got = ops.ea_syrk(M, X, 0.9, False)
+        want = ref.ea_syrk(M, X, 0.9, False)
+        np.testing.assert_allclose(got, want, atol=1e-6)
+
+    def test_lowrank_apply_matches_precond_path(self):
+        from repro.core import precond
+        J = jax.random.normal(jax.random.PRNGKey(0), (32, 64))
+        U, _ = jnp.linalg.qr(jax.random.normal(jax.random.PRNGKey(1), (64, 8)))
+        D = jnp.linspace(2.0, 0.1, 8)
+        lam = jnp.asarray(0.5)
+        got = ops.lowrank_apply(J, U, precond.lowrank_inv_diag(D, lam), lam)
+        want = precond.apply_inv_right(J, U, D, lam)
+        np.testing.assert_allclose(got, want, atol=1e-5)
+
+    def test_interpret_mode_env(self, monkeypatch):
+        monkeypatch.setenv("REPRO_PALLAS", "interpret")
+        M = jnp.zeros((128, 128))
+        X = jax.random.normal(jax.random.PRNGKey(2), (128, 128))
+        got = ops.ea_syrk(M, X, 0.9, True)
+        want = ref.ea_syrk(M, X, 0.9, True)
+        np.testing.assert_allclose(got, want, atol=1e-4)

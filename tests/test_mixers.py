@@ -1,0 +1,141 @@
+"""Correctness tests for attention / SSD / RG-LRU mixers, including
+train-vs-decode consistency (the serve path must match the train path)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models import attention as attn
+from repro.models import ssm
+
+
+def _naive_attention(q, k, v, causal=True, window=0, softcap=0.0):
+    B, Tq, H, hd = q.shape
+    Tk, Hk = k.shape[1], k.shape[2]
+    G = H // Hk
+    qg = q.reshape(B, Tq, Hk, G, hd)
+    s = jnp.einsum("bqkgh,bskh->bqkgs", qg, k) / np.sqrt(hd)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    qp, kp = jnp.arange(Tq), jnp.arange(Tk)
+    valid = jnp.ones((Tq, Tk), bool)
+    if causal:
+        valid &= qp[:, None] >= kp[None, :]
+    if window > 0:
+        valid &= qp[:, None] - kp[None, :] < window
+    s = jnp.where(valid[None, :, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqkgs,bskh->bqkgh", p, v).reshape(B, Tq, H, hd)
+
+
+@pytest.mark.parametrize("window,softcap", [(0, 0.0), (16, 0.0), (0, 30.0)])
+def test_blockwise_matches_naive(window, softcap):
+    B, T, H, Hk, hd = 2, 64, 4, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, T, H, hd))
+    k = jax.random.normal(ks[1], (B, T, Hk, hd))
+    v = jax.random.normal(ks[2], (B, T, Hk, hd))
+    got = attn.blockwise_attention(q, k, v, causal=True, window=window,
+                                   softcap=softcap, q_block=16, kv_block=16)
+    want = _naive_attention(q, k, v, True, window, softcap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-4)
+
+
+def test_decode_matches_train():
+    """Last-token output of train attention == decode over the cache."""
+    B, T, H, Hk, hd = 2, 32, 4, 2, 8
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, T, H, hd))
+    k = jax.random.normal(ks[1], (B, T, Hk, hd))
+    v = jax.random.normal(ks[2], (B, T, Hk, hd))
+    full = attn.blockwise_attention(q, k, v, q_block=8, kv_block=8)
+    dec = attn.decode_attention(q[:, -1:], k, v, t=jnp.asarray(T - 1))
+    np.testing.assert_allclose(np.asarray(dec[:, 0]),
+                               np.asarray(full[:, -1]), atol=2e-5, rtol=2e-4)
+
+
+def test_decode_window():
+    B, T, H, Hk, hd = 1, 32, 2, 1, 8
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (B, T, H, hd))
+    k = jax.random.normal(ks[1], (B, T, Hk, hd))
+    v = jax.random.normal(ks[2], (B, T, Hk, hd))
+    full = _naive_attention(q, k, v, True, window=8)
+    dec = attn.decode_attention(q[:, -1:], k, v, window=8,
+                                t=jnp.asarray(T - 1))
+    np.testing.assert_allclose(np.asarray(dec[:, 0]),
+                               np.asarray(full[:, -1]), atol=2e-5, rtol=2e-4)
+
+
+class TestSSD:
+    def _inputs(self, B=2, T=32, H=4, P=8, G=2, N=6, seed=0):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+        xh = jax.random.normal(ks[0], (B, T, H, P))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, H))) * 0.1
+        A = -jax.nn.softplus(jax.random.normal(ks[2], (H,)))
+        Bm = jax.random.normal(ks[3], (B, T, G, N))
+        Cm = jax.random.normal(ks[4], (B, T, G, N))
+        return xh, dt, A, Bm, Cm
+
+    def test_chunked_matches_reference(self):
+        xh, dt, A, Bm, Cm = self._inputs()
+        got = ssm.ssd_chunked(xh, dt, A, Bm, Cm, chunk=8)
+        want = ssm.ssd_reference(xh, dt, A, Bm, Cm)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-4, rtol=1e-3)
+
+    def test_decode_matches_chunked(self):
+        xh, dt, A, Bm, Cm = self._inputs(seed=1)
+        B, T, H, P = xh.shape
+        N = Bm.shape[-1]
+        full = ssm.ssd_chunked(xh, dt, A, Bm, Cm, chunk=8)
+        state = jnp.zeros((B, H, N, P))
+        for t in range(T):
+            y, state = ssm.ssd_decode_step(xh[:, t], dt[:, t], A,
+                                           Bm[:, t], Cm[:, t], state)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(full[:, -1]),
+                                   atol=1e-4, rtol=1e-3)
+
+
+class TestRGLRU:
+    def test_scan_matches_step_loop(self):
+        B, T, D = 2, 16, 12
+        ks = jax.random.split(jax.random.PRNGKey(3), 4)
+        x = jax.random.normal(ks[0], (B, T, D))
+        gx = jax.random.normal(ks[1], (B, T, D))
+        ga = jax.random.normal(ks[2], (B, T, D))
+        lam = jax.random.normal(ks[3], (D,))
+        full = ssm.rglru(x, gx, ga, lam)
+        h = jnp.zeros((B, D))
+        outs = []
+        for t in range(T):
+            y, h = ssm.rglru_step(x[:, t], gx[:, t], ga[:, t], lam, h)
+            outs.append(y)
+        step = jnp.stack(outs, axis=1)
+        np.testing.assert_allclose(np.asarray(step), np.asarray(full),
+                                   atol=1e-5, rtol=1e-4)
+
+    def test_stability(self):
+        """|a| < 1 ⇒ bounded states on long sequences."""
+        B, T, D = 1, 512, 8
+        x = jnp.ones((B, T, D)) * 5.0
+        out = ssm.rglru(x, jnp.ones((B, T, D)) * 3, jnp.ones((B, T, D)) * 3,
+                        jnp.zeros((D,)))
+        assert np.isfinite(np.asarray(out)).all()
+        assert np.abs(np.asarray(out)).max() < 100.0
+
+
+def test_causal_conv1d_step_consistency():
+    B, T, C, K = 2, 10, 6, 4
+    ks = jax.random.split(jax.random.PRNGKey(4), 2)
+    x = jax.random.normal(ks[0], (B, T, C))
+    w = jax.random.normal(ks[1], (K, C))
+    full = ssm.causal_conv1d(x, w)
+    buf = jnp.zeros((B, K - 1, C))
+    outs = []
+    for t in range(T):
+        y, buf = ssm.causal_conv1d_step(x[:, t], buf, w)
+        outs.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.stack(outs, 1)),
+                               np.asarray(full), atol=1e-5, rtol=1e-4)

@@ -1,0 +1,113 @@
+"""Hypothesis property-based tests on the system's core invariants."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import brand, precond, rsvd
+from repro.kernels import ref
+
+_dims = st.integers(min_value=8, max_value=48)
+_ranks = st.integers(min_value=2, max_value=8)
+_seeds = st.integers(min_value=0, max_value=2**16)
+_rhos = st.floats(min_value=0.5, max_value=0.99)
+
+SET = settings(max_examples=25, deadline=None)
+
+
+def _state(seed, d, r):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    Q, _ = jnp.linalg.qr(jax.random.normal(k1, (d, r)))
+    D = jnp.sort(jax.random.uniform(k2, (r,), minval=0.05, maxval=3.0))[::-1]
+    return Q, D
+
+
+@SET
+@given(d=_dims, r=_ranks, n=_ranks, seed=_seeds)
+def test_sym_brand_exactness(d, r, n, seed):
+    """∀ state, update: Brand's update reconstructs UDUᵀ + AAᵀ exactly."""
+    if r + n >= d:
+        return
+    U, D = _state(seed, d, r)
+    A = jax.random.normal(jax.random.PRNGKey(seed + 1), (d, n))
+    U2, D2 = brand.sym_brand_update(U, D, A)
+    np.testing.assert_allclose(np.asarray((U2 * D2) @ U2.T),
+                               np.asarray((U * D) @ U.T + A @ A.T),
+                               atol=5e-4)
+    # psd + descending invariants
+    assert np.all(np.asarray(D2) >= -1e-5)
+    assert np.all(np.diff(np.asarray(D2)) <= 1e-5)
+
+
+@SET
+@given(d=_dims, n=_ranks, seed=_seeds, rho=_rhos)
+def test_ea_psd_invariant(d, n, seed, rho):
+    """The EA K-factor stays symmetric psd under any update stream."""
+    M = jnp.zeros((d, d))
+    for i in range(4):
+        X = jax.random.normal(jax.random.fold_in(
+            jax.random.PRNGKey(seed), i), (d, n))
+        M = ref.ea_syrk(M, X, rho, i == 0)
+    Mn = np.asarray(M)
+    np.testing.assert_allclose(Mn, Mn.T, atol=1e-5)
+    w = np.linalg.eigvalsh((Mn + Mn.T) / 2)
+    assert w.min() >= -1e-4 * max(1.0, abs(w).max())
+
+
+@SET
+@given(d=_dims, r=_ranks, seed=_seeds)
+def test_truncation_error_optimality(d, r, seed):
+    """EVD rank-r truncation error ≤ error of any Brand-state truncation
+    of the same matrix (Prop 3.1 generalization)."""
+    X = jax.random.normal(jax.random.PRNGKey(seed), (d, 2 * r))
+    M = X @ X.T
+    U, D = rsvd.exact_evd(M, r=r)
+    opt = np.linalg.norm(np.asarray((U * D) @ U.T - M))
+    Ub, Db = _state(seed + 1, d, r)
+    other = np.linalg.norm(np.asarray((Ub * Db) @ Ub.T - M))
+    assert opt <= other + 1e-4
+
+
+@SET
+@given(d=_dims, seed=_seeds,
+       lam=st.floats(min_value=0.05, max_value=2.0))
+def test_inverse_application_identity(d, seed, lam):
+    """apply_inv_right with the FULL spectrum == dense inverse application,
+    for any psd factor and damping."""
+    X = jax.random.normal(jax.random.PRNGKey(seed), (d, d))
+    M = X @ X.T / d
+    U, D = rsvd.exact_evd(M)
+    J = jax.random.normal(jax.random.PRNGKey(seed + 1), (4, d))
+    got = precond.apply_inv_right(J, U, D, jnp.asarray(lam))
+    want = J @ np.linalg.inv(np.asarray(M) + lam * np.eye(d))
+    np.testing.assert_allclose(np.asarray(got), want, rtol=5e-2, atol=5e-3)
+
+
+@SET
+@given(d=_dims, r=_ranks, seed=_seeds,
+       phi=st.floats(min_value=0.01, max_value=0.5))
+def test_spectrum_continuation_invariants(d, r, seed, phi):
+    """Continuation preserves D+λ total on retained modes, keeps D ≥ 0,
+    and never decreases λ (more conservative steps — paper §3.5)."""
+    _, D = _state(seed, d, r)
+    D = jnp.concatenate([D, jnp.zeros((3,))])     # padded state
+    lam = precond.damping_from_spectrum(D, jnp.asarray(phi))
+    D2, lam2 = precond.spectrum_continuation(D, lam)
+    assert float(lam2) >= float(lam) - 1e-7
+    assert np.all(np.asarray(D2) >= -1e-7)
+    # retained modes keep D+λ exactly
+    np.testing.assert_allclose(np.asarray(D2[:r] + lam2),
+                               np.asarray(D[:r] + lam), rtol=1e-5)
+
+
+@SET
+@given(seed=_seeds, m=_dims, n=_dims, k=_ranks)
+def test_ea_syrk_kernel_property(seed, m, n, k):
+    """ops.ea_syrk == ref.ea_syrk for arbitrary shapes (dispatch safety)."""
+    from repro.kernels import ops
+    key = jax.random.PRNGKey(seed)
+    M = jax.random.normal(key, (m, m))
+    X = jax.random.normal(jax.random.fold_in(key, 1), (m, k))
+    got = ops.ea_syrk(M, X, 0.9, False)
+    want = ref.ea_syrk(M, X, 0.9, False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)

@@ -1,0 +1,152 @@
+"""Numerical verification of the paper's theoretical results
+(Propositions 3.1, 3.2, 4.1, 4.2) on exact dense simulations of the
+B-KFAC / R-KFAC processes (eqs. 8-10)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+D_DIM, N_BS, R, RHO = 40, 4, 8, 0.9
+
+
+def _evd_trunc(M, r):
+    """Optimal rank-r truncation (dense EVD)."""
+    vals, vecs = np.linalg.eigh(M)
+    vals, vecs = vals[::-1], vecs[:, ::-1]
+    return (vecs[:, :r] * vals[:r]) @ vecs[:, :r].T
+
+
+def _make_stream(n_steps, seed=0):
+    keys = jax.random.split(jax.random.PRNGKey(seed), n_steps)
+    return [np.asarray(jax.random.normal(k, (D_DIM, N_BS))) for k in keys]
+
+
+def _exact_ea(Xs):
+    M = Xs[0] @ Xs[0].T
+    for X in Xs[1:]:
+        M = RHO * M + (1 - RHO) * X @ X.T
+    return M
+
+
+def _b_process(Xs, r=R):
+    """Eq. (10): returns lists (M̃_B, B) along the stream."""
+    Mb = Xs[0] @ Xs[0].T
+    Mbs, Bs = [Mb], [_evd_trunc(Mb, r)]
+    for X in Xs[1:]:
+        Mb = RHO * Bs[-1] + (1 - RHO) * X @ X.T
+        Mbs.append(Mb)
+        Bs.append(_evd_trunc(Mb, r))
+    return Mbs, Bs
+
+
+class TestProp31:
+    """B-KFAC's rank-r estimate is never better than the optimal rank-r
+    truncation; its full estimate never better than optimal rank r+n."""
+
+    def test_error_ordering(self):
+        Xs = _make_stream(8)
+        Mbs, Bs = _b_process(Xs)
+        for k in range(1, len(Xs)):
+            Mk = _exact_ea(Xs[: k + 1])
+            opt_r = _evd_trunc(Mk, R)
+            opt_rn = _evd_trunc(Mk, R + N_BS)
+            err_B = np.linalg.norm(Mk - Bs[k])
+            err_opt = np.linalg.norm(Mk - opt_r)
+            err_Mb = np.linalg.norm(Mk - Mbs[k])
+            err_opt_rn = np.linalg.norm(Mk - opt_rn)
+            assert err_B >= err_opt - 1e-5
+            assert err_Mb >= err_opt_rn - 1e-5
+
+
+class TestProp32:
+    """Error telescoping (12)/(13) and psd-ness of every bracketed term."""
+
+    def test_pure_b_error_decomposition(self):
+        Xs = _make_stream(7, seed=1)
+        Mbs, Bs = _b_process(Xs)
+        i, q = 2, 4
+        Mi = _exact_ea(Xs[: i + 1])
+        lhs = _exact_ea(Xs[: i + q + 1]) - Mbs[i + q]
+        rhs = RHO ** q * (Mi - Bs[i])
+        for j in range(1, q):
+            rhs = rhs + RHO ** (q - j) * (Mbs[i + j] - Bs[i + j])
+        # NOTE eq (13) sums to q-1 — the step-q truncation error enters B
+        # only at q+1; the identity is exact:
+        np.testing.assert_allclose(lhs, rhs, atol=1e-5)
+
+    def test_terms_are_psd(self):
+        Xs = _make_stream(7, seed=2)
+        Mbs, Bs = _b_process(Xs)
+        for k in range(len(Xs)):
+            Mk = _exact_ea(Xs[: k + 1])
+            for E in (Mk - Bs[k], Mbs[k] - Bs[k], Mk - Mbs[k]):
+                w = np.linalg.eigvalsh((E + E.T) / 2)
+                assert w.min() >= -1e-4 * max(1.0, abs(w).max())
+
+    def test_overwrite_better_next_iteration(self):
+        """E_{i+1}^{R@i} has smaller norm than E_{i+1}^{pure-B}."""
+        Xs = _make_stream(8, seed=3)
+        Mbs, Bs = _b_process(Xs)
+        i = 4
+        Mi = _exact_ea(Xs[: i + 1])
+        # pure-B error at i+1: rho*(Mi - B_i)
+        e_pure = RHO * np.linalg.norm(Mi - Bs[i])
+        # overwritten: rho*(Mi - opt_r(Mi))
+        e_over = RHO * np.linalg.norm(Mi - _evd_trunc(Mi, R))
+        assert e_over <= e_pure + 1e-8
+
+
+class TestProp41:
+    """Error of doing nothing vs error of B-updates (eq. 14-16)."""
+
+    def test_no_update_error_form(self):
+        Xs = _make_stream(6, seed=4)
+        M0 = Xs[0] @ Xs[0].T
+        Mtilde = _evd_trunc(M0, R)       # frozen after initial truncation
+        k = len(Xs) - 1
+        Mk = _exact_ea(Xs)
+        # eq (14)+(15): M_k − M̃ = Σ κ(i) ρ^{k-i} (M_i M_iᵀ − M̃)
+        rhs = RHO ** k * (M0 - Mtilde)
+        for i in range(1, k + 1):
+            rhs = rhs + (1 - RHO) * RHO ** (k - i) * (Xs[i] @ Xs[i].T - Mtilde)
+        np.testing.assert_allclose(Mk - Mtilde, rhs, atol=1e-5)
+
+    def test_b_update_error_form(self):
+        Xs = _make_stream(6, seed=5)
+        Mbs, Bs = _b_process(Xs)
+        k = len(Xs) - 1
+        Mk = _exact_ea(Xs)
+        # eq (14)+(16) with E_0 = M0 − trunc(M0) = M0 − B_0, E_k = 0
+        rhs = RHO ** k * (Xs[0] @ Xs[0].T - Bs[0])
+        for i in range(1, k):
+            Ei = (Mbs[i] - Bs[i]) / (1 - RHO)
+            rhs = rhs + (1 - RHO) * RHO ** (k - i) * Ei
+        np.testing.assert_allclose(Mk - Mbs[k], rhs, atol=1e-5)
+
+
+class TestProp42:
+    """Worst-case per-step error: B-update ≤ ||M_j M_jᵀ||_F; no-update can
+    reach sqrt(||M_j M_jᵀ||² + ||M̃||²)."""
+
+    def test_b_update_bound(self):
+        Xs = _make_stream(8, seed=6)
+        Mbs, Bs = _b_process(Xs)
+        for i in range(1, len(Xs) - 1):
+            Ei = (Mbs[i] - Bs[i]) / (1 - RHO)
+            bound = np.linalg.norm(Xs[i] @ Xs[i].T)
+            assert np.linalg.norm(Ei) <= bound + 1e-6
+
+    def test_no_update_can_exceed_b_bound(self):
+        """Construct the orthogonal-subspace worst case of eq (17)."""
+        rng = np.random.default_rng(0)
+        Q, _ = np.linalg.qr(rng.standard_normal((D_DIM, D_DIM)))
+        X0 = Q[:, :N_BS] * 3.0            # M̃ lives in span(Q[:, :n])
+        Xj = Q[:, N_BS: 2 * N_BS]         # update orthogonal to it
+        M0 = X0 @ X0.T
+        Mt = _evd_trunc(M0, R)
+        Ej = Xj @ Xj.T - Mt
+        lhs = np.linalg.norm(Ej)
+        expect = np.sqrt(np.linalg.norm(Xj @ Xj.T) ** 2 +
+                         np.linalg.norm(Mt) ** 2)
+        np.testing.assert_allclose(lhs, expect, rtol=1e-6)
+        assert lhs > np.linalg.norm(Xj @ Xj.T)  # exceeds the B-update bound
