@@ -1,8 +1,21 @@
 """Pallas kernel micro-bench: per-kernel timing (interpret-validated; on
 CPU the oracle path is timed — the kernels are TPU-targeted) + allclose
-check against the ref oracle at bench shapes."""
+check against the ref oracle at bench shapes.
+
+Beyond the per-kernel rows this times the two dispatch upgrades:
+
+  * fused vs unfused preconditioning — ``ops.precond_fused`` (one fused
+    launch sequence, J resident) against the baseline two
+    ``lowrank_apply`` round-trips with intermediate transposes;
+  * batched vs vmap stacking — one stack-batched launch over (L, …)
+    operands against ``jax.vmap`` of the per-layer 2D op.
+
+Usage:  python benchmarks/kernels_bench.py [--quick] [--out BENCH_kernels.json]
+"""
 from __future__ import annotations
 
+import argparse
+import json
 import time
 from typing import List
 
@@ -23,8 +36,18 @@ def _timeit(fn, *args, reps=5):
     return float(np.median(ts))
 
 
+def _unfused_precond(J, U_g, s_g, lam_g, U_a, s_a, lam_a):
+    """Baseline two-sided application: two lowrank_apply round-trips with
+    intermediate transposes (what core/precond.py did before the fusion)."""
+    M = ops.lowrank_apply(J, U_a, s_a, lam_a)
+    return jnp.swapaxes(
+        ops.lowrank_apply(jnp.swapaxes(M, -1, -2), U_g, s_g, lam_g),
+        -1, -2)
+
+
 def run(quick: bool = False) -> List[dict]:
     d, n, w, p = (1024, 256, 256, 512) if quick else (4096, 512, 768, 1024)
+    L = 4 if quick else 8          # stack depth for the batched rows
     key = jax.random.PRNGKey(0)
     M = jax.random.normal(key, (d, d)); M = (M + M.T) / 2
     X = jax.random.normal(jax.random.fold_in(key, 1), (d, n))
@@ -33,29 +56,95 @@ def run(quick: bool = False) -> List[dict]:
     s = -jax.random.uniform(jax.random.fold_in(key, 3), (w,)) * 0.5
     J = jax.random.normal(jax.random.fold_in(key, 4), (p, d))
     lam = jnp.asarray(0.5)
+    U_g, _ = jnp.linalg.qr(jax.random.normal(jax.random.fold_in(key, 5),
+                                             (p, w)))
+    s_g = -jax.random.uniform(jax.random.fold_in(key, 6), (w,)) * 0.5
+
+    # stacked operands (one extra leading layer axis)
+    Ms = jnp.broadcast_to(M, (L, d, d))
+    Xs = jax.random.normal(jax.random.fold_in(key, 7), (L, d, n))
+    Js = jax.random.normal(jax.random.fold_in(key, 8), (L, p, d))
+    Us = jnp.broadcast_to(U, (L, d, w))
+    ss = jnp.broadcast_to(s, (L, w))
+    lams = jnp.full((L,), 0.5)
 
     rows = []
+    # operands are jit ARGUMENTS (not closure constants) so XLA cannot
+    # constant-fold the benchmarked work away at compile time
     cases = [
-        ("ea_syrk", lambda: ops.ea_syrk(M, X, 0.95, False),
+        ("ea_syrk", lambda m, x: ops.ea_syrk(m, x, 0.95, False), (M, X),
          lambda: ref.ea_syrk(M, X, 0.95, False),
          2.0 * d * d * n),
-        ("brand_panel", lambda: ops.brand_panel(U, X)[1],
+        ("brand_panel", lambda u, x: ops.brand_panel(u, x)[1], (U, X),
          lambda: ref.brand_panel(U, X)[1],
          4.0 * d * w * n),
-        ("lowrank_apply", lambda: ops.lowrank_apply(J, U, s, lam),
+        ("lowrank_apply", ops.lowrank_apply, (J, U, s, lam),
          lambda: ref.lowrank_apply(J, U, s, lam),
          4.0 * p * d * w),
+        ("precond_fused", ops.precond_fused, (J, U_g, s_g, lam, U, s, lam),
+         lambda: ref.precond_fused(J, U_g, s_g, lam, U, s, lam),
+         4.0 * p * d * w + 4.0 * p * d * w),
     ]
-    for name, op_fn, ref_fn, flops in cases:
-        got = np.asarray(op_fn())
+    for name, op_fn, args, ref_fn, flops in cases:
+        got = np.asarray(op_fn(*args))
         want = np.asarray(ref_fn())
         np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
-        t = _timeit(jax.jit(op_fn))
+        t = _timeit(jax.jit(op_fn), *args)
         rows.append({"name": f"kernels/{name}", "us_per_call": t * 1e6,
                      "derived": f"gflops={flops/t/1e9:.1f} allclose=True"})
+
+    # fused vs unfused two-sided application (same operands, same dispatch)
+    fused_args = (J, U_g, s_g, lam, U, s, lam)
+    t_fused = _timeit(jax.jit(ops.precond_fused), *fused_args)
+    t_unfused = _timeit(jax.jit(_unfused_precond), *fused_args)
+    rows.append({"name": "kernels/precond_fused_vs_unfused",
+                 "us_per_call": t_fused * 1e6,
+                 "derived": f"unfused_us={t_unfused * 1e6:.1f} "
+                            f"speedup={t_unfused / t_fused:.2f}x"})
+
+    # one batched stack launch vs jax.vmap lifting the per-layer 2D op
+    for bname, batched_fn, vmap_fn, args in [
+        ("ea_syrk",
+         lambda m, x: ops.ea_syrk(m, x, 0.95, False),
+         jax.vmap(lambda m, x: ops.ea_syrk(m, x, 0.95, False)),
+         (Ms, Xs)),
+        ("lowrank_apply",
+         ops.lowrank_apply,
+         jax.vmap(ops.lowrank_apply),
+         (Js, Us, ss, lams)),
+    ]:
+        got = np.asarray(batched_fn(*args))
+        want = np.asarray(vmap_fn(*args))
+        np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+        t_b = _timeit(jax.jit(batched_fn), *args)
+        t_v = _timeit(jax.jit(vmap_fn), *args)
+        rows.append({"name": f"kernels/{bname}_batched_vs_vmap",
+                     "us_per_call": t_b * 1e6,
+                     "derived": f"stack={L} vmap_us={t_v * 1e6:.1f} "
+                                f"speedup={t_v / t_b:.2f}x"})
     return rows
 
 
-if __name__ == "__main__":
-    for row in run(quick=True):
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", type=str, default=None,
+                    help="write a JSON artifact (e.g. BENCH_kernels.json)")
+    args = ap.parse_args()
+    rows = run(quick=args.quick)
+    for row in rows:
         print(row)
+    if args.out:
+        artifact = {
+            "bench": "kernels",
+            "backend": jax.default_backend(),
+            "quick": bool(args.quick),
+            "rows": rows,
+        }
+        with open(args.out, "w") as f:
+            json.dump(artifact, f, indent=2)
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

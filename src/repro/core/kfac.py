@@ -214,62 +214,52 @@ class Kfac:
     def _factor_update(self, name, side, st, X, key, first,
                        do_stats, do_light, do_heavy):
         spec = self.specs[name][side]
-        nstack = len(self.taps[name].stack)
+        stack = self.taps[name].stack
+        nstack = len(stack)
 
-        def one(st, X, key):
-            out = st
-            if do_stats:
-                out = kfactor.stats_step(spec, out, X, first)
-            if do_light or do_heavy:
-                heavy = jnp.asarray(do_heavy)
-                out = kfactor.inverse_rep_step(spec, out, X, key, first, heavy)
-            return out
+        # EA stats absorb: stacked-native — one batched SYRK launch covers
+        # the whole layer/expert stack (no vmap-over-2D fallback).
+        if do_stats:
+            st = kfactor.stats_step(spec, st, X, first)
+
+        if not (do_light or do_heavy):
+            return st
+
+        # Inverse-representation work (eigh/svd/qr-heavy) stays vmapped XLA.
+        heavy = jnp.asarray(do_heavy)
+
+        def one(s, x, k):
+            return kfactor.inverse_rep_step(spec, s, x, k, first, heavy)
 
         if nstack == 0:
             return one(st, X, key)
-        # split keys across the stacked dims (static count)
-        stack = self.taps[name].stack
         n_keys = 1
         for dim in stack:
             n_keys *= int(dim)
         keys = jax.random.split(key, n_keys).reshape(stack + (2,))
-        fn = _vmap_n(lambda s, x, k: one(s, x, k), nstack)
-        return fn(st, X, keys)
+        return _vmap_n(one, nstack)(st, X, keys)
 
     def _precondition(self, name, st: TapState, grad_w, phi,
                       g_factor=None, a_factor=None):
-        """Preconditioned step for W (same shape as grad_w)."""
-        t = self.taps[name]
+        """Preconditioned step for W (same shape as grad_w).
+
+        Stacked-native end to end: damping, continuation, and the two-sided
+        application are batched over the tap's stack, so ``use_kernels``
+        covers scanned layers / expert stacks with single batched (fused)
+        Pallas launches instead of vmapped 2D fallbacks.
+        """
         use_k = self.cfg.use_kernels
-
-        def one(U_a, D_a, U_g, D_g, J, G=None, A=None):
-            lam_a = precond.damping_from_spectrum(D_a, phi)
-            lam_g = precond.damping_from_spectrum(D_g, phi)
-            if self.cfg.spectrum_continuation:
-                D_a, lam_a = precond.spectrum_continuation(D_a, lam_a)
-                D_g, lam_g = precond.spectrum_continuation(D_g, lam_g)
-            if G is not None:
-                S = precond.kfac_precondition_linear(
-                    G, A, U_g, D_g, lam_g, U_a, D_a, lam_a, use_k)
-            else:
-                S = precond.kfac_precondition(
-                    J, U_g, D_g, lam_g, U_a, D_a, lam_a, use_k)
-            return S
-
-        nstack = len(t.stack)
-        if t.linear_apply:
+        cont = self.cfg.spectrum_continuation
+        if self.taps[name].linear_apply:
             # Alg 8: step from gradient factors; grad_w is unused (stop-grad)
-            fn = _vmap_n(one, nstack) if nstack else one
-            J = jnp.swapaxes(grad_w, -1, -2)
-            S = _vmap_n(one, nstack)(st.A.U, st.A.D, st.G.U, st.G.D, J,
-                                     g_factor, a_factor) if nstack else \
-                one(st.A.U, st.A.D, st.G.U, st.G.D, J, g_factor, a_factor)
+            S = precond.precondition_linear_with_damping(
+                g_factor, a_factor, st.G.U, st.G.D, st.A.U, st.A.D, phi,
+                continuation=cont, use_kernel=use_k)
         else:
             J = jnp.swapaxes(grad_w, -1, -2).astype(jnp.float32)
-            fn = _vmap_n(lambda Ua, Da, Ug, Dg, JJ: one(Ua, Da, Ug, Dg, JJ),
-                         nstack)
-            S = fn(st.A.U, st.A.D, st.G.U, st.G.D, J) if nstack else \
-                one(st.A.U, st.A.D, st.G.U, st.G.D, J)
+            S = precond.precondition_with_damping(
+                J, st.G.U, st.G.D, st.A.U, st.A.D, phi,
+                continuation=cont, use_kernel=use_k)
         return jnp.swapaxes(S, -1, -2)       # back to (d_in, d_out) layout
 
     # -- the update ---------------------------------------------------------

@@ -102,8 +102,9 @@ class KFactorSpec:
 # ---------------------------------------------------------------------------
 
 def ea_update_m(M: Array, X: Array, rho: float, first: Array) -> Array:
-    """M ← ρ M + (1-ρ) X Xᵀ  (κ(0)=1 on the first-ever update, eq. 5)."""
-    upd = X @ X.T
+    """M ← ρ M + (1-ρ) X Xᵀ  (κ(0)=1 on the first-ever update, eq. 5).
+    Stacked-native: M (*stack, d, d), X (*stack, d, n)."""
+    upd = X @ jnp.swapaxes(X, -1, -2)
     coef = jnp.where(first, 1.0, 1.0 - rho)
     keep = jnp.where(first, 0.0, rho)
     return keep * M + coef * upd
@@ -111,7 +112,8 @@ def ea_update_m(M: Array, X: Array, rho: float, first: Array) -> Array:
 
 def ea_update_m_kernel(M: Array, X: Array, rho: float, first: Array) -> Array:
     """Same as ea_update_m but routed through the Pallas EA-SYRK kernel when
-    shapes are MXU-aligned (ops.py decides; oracle fallback otherwise)."""
+    shapes are tile-friendly (ops.py pads/falls back otherwise).  Stacked
+    inputs run as one batched launch over the flattened stack."""
     from repro.kernels import ops as kops
     return kops.ea_syrk(M, X, rho, first)
 
@@ -177,7 +179,10 @@ def light_correction(spec: KFactorSpec, st: KFactorState, key: Array
 
 def stats_step(spec: KFactorSpec, st: KFactorState, X: Array, first: Array
                ) -> KFactorState:
-    """Absorb one incoming stats factor X into the EA (dense M if held)."""
+    """Absorb one incoming stats factor X into the EA (dense M if held).
+
+    Stacked-native: st/X may carry leading stack axes — the EA absorb for a
+    whole stack of factors is one batched kernel launch."""
     if spec.needs_m:
         M = ea_update_m_kernel(st.M, X, spec.rho, first)
         return KFactorState(U=st.U, D=st.D, M=M)

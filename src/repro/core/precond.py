@@ -12,6 +12,10 @@ the gradient *factors* (A, G with Mat(g)=G Aᵀ) and only then multiply.
 Paper §3.5 spectrum continuation: before inverting, shift the retained
 spectrum down by its smallest retained eigenvalue and fold that amount into
 λ — overestimating the missing tail gives more conservative steps.
+
+Every function here is stacked-native: operands may carry arbitrary leading
+stack axes (scanned layers / MoE experts) with per-element λ, so stacked
+taps run as single batched kernel launches instead of vmapped 2D fallbacks.
 """
 from __future__ import annotations
 
@@ -19,6 +23,8 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.ref import mt as _mt, scal as _scal
 
 Array = jax.Array
 
@@ -29,23 +35,25 @@ def spectrum_continuation(D: Array, lam: Array) -> Tuple[Array, Array]:
     min is over the *retained* (positive) modes so zero-padded static-width
     states (RSVD pad_to) get the same treatment as fully-populated Brand
     states — otherwise the continuation would act on B-variants only and
-    bias the inverse comparison.
+    bias the inverse comparison.  D: (..., w), lam: scalar or (...,).
     """
     pos = D > 0
-    dmin = jnp.min(jnp.where(pos, D, jnp.inf))
+    dmin = jnp.min(jnp.where(pos, D, jnp.inf), axis=-1)
     dmin = jnp.where(jnp.isfinite(dmin), dmin, 0.0)
-    return jnp.maximum(D - dmin, 0.0), lam + dmin
+    return jnp.maximum(D - dmin[..., None], 0.0), lam + dmin
 
 
 def damping_from_spectrum(D: Array, phi: Array) -> Array:
     """Paper §6: λ = φ_λ · λ_max where λ_max is the largest (approximate)
-    eigenvalue of the represented K-factor."""
-    return phi * jnp.maximum(jnp.max(D), 1e-12)
+    eigenvalue of the represented K-factor.  D: (..., w) → λ: (...,)."""
+    return phi * jnp.maximum(jnp.max(D, axis=-1), 1e-12)
 
 
 def lowrank_inv_diag(D: Array, lam: Array) -> Array:
     """The diagonal (D+λ)⁻¹ − 1/λ used on the span (negative values —
-    it *removes* the over-counted 1/λ there)."""
+    it *removes* the over-counted 1/λ there).  lam broadcasts over the
+    trailing mode axis."""
+    lam = jnp.asarray(lam)[..., None]
     return 1.0 / (D + lam) - 1.0 / lam
 
 
@@ -53,20 +61,22 @@ def apply_inv_right(J: Array, U: Array, D: Array, lam: Array,
                     use_kernel: bool = False) -> Array:
     """J @ (U diag(D) Uᵀ + λI)⁻¹  — right application (A-side).
 
-    J: (p, d), U: (d, w).  O(p·d·w): two tall-skinny matmuls + rank-1 work.
+    J: (..., p, d), U: (..., d, w).  O(p·d·w): two tall-skinny matmuls +
+    rank-1 work.
     """
     if use_kernel:
         from repro.kernels import ops as kops
         return kops.lowrank_apply(J, U, lowrank_inv_diag(D, lam), lam)
-    T = J @ U                                   # (p, w)
-    T = T * lowrank_inv_diag(D, lam)            # scale modes
-    return T @ U.T + J / lam
+    T = J @ U                                    # (..., p, w)
+    T = T * lowrank_inv_diag(D, lam)[..., None, :]
+    return T @ _mt(U) + J / _scal(lam, J)
 
 
 def apply_inv_left(J: Array, U: Array, D: Array, lam: Array,
                    use_kernel: bool = False) -> Array:
-    """(U diag(D) Uᵀ + λI)⁻¹ @ J — left application (Γ-side). J: (d, p)."""
-    return apply_inv_right(J.T, U, D, lam, use_kernel).T
+    """(U diag(D) Uᵀ + λI)⁻¹ @ J — left application (Γ-side).
+    J: (..., d, p)."""
+    return _mt(apply_inv_right(_mt(J), U, D, lam, use_kernel))
 
 
 def kfac_precondition(J: Array,
@@ -77,9 +87,18 @@ def kfac_precondition(J: Array,
 
     J is the layer gradient in matrix form (d_out, d_in) = Mat(g);
     Γ̄ is (d_out, d_out), Ā is (d_in, d_in).
+
+    With ``use_kernel`` the whole two-sided application dispatches to the
+    fused Pallas path (one launch sequence, J resident, no transposes, no
+    HBM intermediate) instead of two ``lowrank_apply`` round-trips.
     """
-    M = apply_inv_right(J, U_a, D_a, lam_a, use_kernel)     # J Ā⁻¹
-    return apply_inv_left(M, U_g, D_g, lam_g, use_kernel)   # Γ̄⁻¹ (·)
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.precond_fused(J,
+                                  U_g, lowrank_inv_diag(D_g, lam_g), lam_g,
+                                  U_a, lowrank_inv_diag(D_a, lam_a), lam_a)
+    M = apply_inv_right(J, U_a, D_a, lam_a)      # J Ā⁻¹
+    return apply_inv_left(M, U_g, D_g, lam_g)    # Γ̄⁻¹ (·)
 
 
 def kfac_precondition_linear(G: Array, A: Array,
@@ -96,9 +115,50 @@ def kfac_precondition_linear(G: Array, A: Array,
     Only beneficial (and only used) when n < d (paper's applicability
     condition; holds for FC layers with n = batch).
     """
-    Gp = apply_inv_left(G, U_g, D_g, lam_g, use_kernel)     # (d_out, n)
-    Ap = apply_inv_right(A.T, U_a, D_a, lam_a, use_kernel)  # (n, d_in)
+    Gp = apply_inv_left(G, U_g, D_g, lam_g, use_kernel)      # (..., d_out, n)
+    Ap = apply_inv_right(_mt(A), U_a, D_a, lam_a, use_kernel)  # (..., n, d_in)
     return Gp @ Ap
+
+
+def _damped(D: Array, phi: Array, continuation: bool
+            ) -> Tuple[Array, Array]:
+    """Per-element λ from the spectrum, plus the §3.5 continuation shift."""
+    lam = damping_from_spectrum(D, phi)
+    if continuation:
+        D, lam = spectrum_continuation(D, lam)
+    return D, lam
+
+
+def precondition_with_damping(J: Array,
+                              U_g: Array, D_g: Array,
+                              U_a: Array, D_a: Array,
+                              phi: Array, *,
+                              continuation: bool = True,
+                              use_kernel: bool = False) -> Array:
+    """Damping + spectrum continuation + full quadratic application for a
+    whole (possibly stacked) tap in one call.
+
+    J: (*stack, d_out, d_in); U/D stacked alike; per-element λ is derived
+    from each element's spectrum.  This is the entry point the optimizer
+    uses — stacked taps become one batched fused kernel launch.
+    """
+    D_a, lam_a = _damped(D_a, phi, continuation)
+    D_g, lam_g = _damped(D_g, phi, continuation)
+    return kfac_precondition(J, U_g, D_g, lam_g, U_a, D_a, lam_a, use_kernel)
+
+
+def precondition_linear_with_damping(G: Array, A: Array,
+                                     U_g: Array, D_g: Array,
+                                     U_a: Array, D_a: Array,
+                                     phi: Array, *,
+                                     continuation: bool = True,
+                                     use_kernel: bool = False) -> Array:
+    """Damping + continuation + Alg-8 linear application (from gradient
+    factors) — the linear-apply counterpart of precondition_with_damping."""
+    D_a, lam_a = _damped(D_a, phi, continuation)
+    D_g, lam_g = _damped(D_g, phi, continuation)
+    return kfac_precondition_linear(G, A, U_g, D_g, lam_g,
+                                    U_a, D_a, lam_a, use_kernel)
 
 
 def dense_inv_apply(J: Array, M_g: Array, lam_g: Array,

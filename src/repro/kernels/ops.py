@@ -1,18 +1,38 @@
 """Public kernel entry points with automatic dispatch.
 
 Each op routes to its Pallas kernel when (a) kernels are enabled for the
-backend and (b) shapes are tile-aligned; otherwise it falls back to the
+backend and (b) shapes are tile-friendly; otherwise it falls back to the
 pure-jnp oracle in ``ref.py`` (identical semantics, asserted by tests).
+
+Stacked inputs
+--------------
+Every op accepts arbitrary leading stack axes (``(*stack, …)`` from scanned
+layers or MoE expert stacks).  The stack is flattened to one batch axis and
+the whole stack runs as a single batched Pallas launch (leading grid
+dimension) instead of a vmap of per-layer launches.
+
+Pad-to-tile
+-----------
+Misaligned dims no longer silently drop to the oracle: operands are
+zero-padded to the next tile multiple, the kernel runs on the padded
+shapes, and the result is sliced back.  Zero rows/columns are exact for
+every op here (they contribute nothing to any product and the λ-residual
+terms are sliced away), so padding never changes semantics.  Padding only
+engages while it is profitable: if any dim would grow beyond ``_PAD_MAX``×
+its size (tiny shapes), the op falls back to the oracle instead.
 
 Dispatch policy:
   * TPU backend            → Pallas (compiled).
   * ``REPRO_PALLAS=interpret`` env  → Pallas interpret mode (CPU validation).
+  * ``REPRO_PALLAS=off``    → oracle always.
   * otherwise (CPU/GPU)    → oracle.  CPU interpret mode is orders of
     magnitude slower than jnp and is only meant for correctness tests.
 """
 from __future__ import annotations
 
+import math
 import os
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -21,10 +41,13 @@ from repro.kernels import ref
 from repro.kernels import ea_syrk as _ea
 from repro.kernels import brand_panel as _bp
 from repro.kernels import lowrank_apply as _la
+from repro.kernels import precond_fused as _pf
 
 Array = jax.Array
 
-_LANE = 128  # TPU lane width; all tile dims must divide by this
+_LANE = 128   # TPU lane width; matmul major dims pad to this
+_SUB = 8      # sublane quantum; rank/width dims pad to this
+_PAD_MAX = 2.0  # max per-dim growth factor before falling back to ref
 
 
 def _mode() -> str:
@@ -40,41 +63,199 @@ def _mode() -> str:
     return "pallas" if backend == "tpu" else "ref"
 
 
-def _aligned(*dims: int) -> bool:
-    return all(d % _LANE == 0 for d in dims)
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
 
+
+def _pad_ok(*dims_mults: Tuple[int, int]) -> bool:
+    """True iff padding every (dim, multiple) pair stays within _PAD_MAX."""
+    for dim, mult in dims_mults:
+        if dim <= 0 or _round_up(dim, mult) > _PAD_MAX * dim:
+            return False
+    return True
+
+
+def _common_stack(*xs_cores: Tuple[Array, int]) -> Tuple[int, ...]:
+    """Broadcast the leading (stack) axes of all operands to one shape, so
+    an operand shared across the stack (e.g. one U for every scanned layer)
+    batches correctly instead of mis-indexing a size-1 axis."""
+    return jnp.broadcast_shapes(
+        *(x.shape[:x.ndim - core] for x, core in xs_cores))
+
+
+def _flat(x: Array, core: int, stack: Tuple[int, ...]) -> Array:
+    """(*stack-broadcastable, *core_shape) → (B, *core_shape)."""
+    tail = x.shape[x.ndim - core:]
+    x = jnp.broadcast_to(x, stack + tail)
+    b = math.prod(stack) if stack else 1
+    return x.reshape((b,) + tail)
+
+
+def _pad_tail(x: Array, *tail: int) -> Array:
+    """Zero-pad the trailing len(tail) axes of x up to the given sizes."""
+    pads = [(0, 0)] * (x.ndim - len(tail))
+    pads += [(0, t - s) for s, t in zip(x.shape[x.ndim - len(tail):], tail)]
+    if all(lo == 0 and hi == 0 for lo, hi in pads):
+        return x
+    return jnp.pad(x, pads)
+
+
+def _pick_block(dim: int, preferred: int, quantum: int = _LANE) -> int:
+    """Largest multiple of ``quantum`` ≤ preferred that divides ``dim``
+    (dim is already a multiple of quantum)."""
+    b = min(preferred, dim)
+    b = (b // quantum) * quantum
+    while b > quantum and dim % b:
+        b -= quantum
+    return max(b, quantum) if dim % quantum == 0 else dim
+
+
+_FUSED_VMEM_BUDGET = 8 * 1024 * 1024  # conservative: leaves double-buffer room
+
+
+def _fused_bm(pp: int, pd: int, pwg: int, pwa: int, bn: int):
+    """Row-block size for the fused apply pass such that its VMEM working
+    set (J stripe + W scratch + side blocks, fp32) fits the budget; None if
+    no bm ≥ 8 fits (dispatch then falls back to the unfused kernel path)."""
+    for bm in (128, 64, 32, 16, 8):
+        if bm > pp:
+            continue
+        vmem = 4 * (2 * bm * pd            # J stripe + W scratch
+                    + bm * pwa + bm * pwg  # Tw + U_g row block
+                    + pwg * bn + bn * pwa  # Cg + U_a column blocks
+                    + bm * bn)             # output tile
+        if vmem <= _FUSED_VMEM_BUDGET:
+            return bm
+    return None
+
+
+def _stack_lam(lam, stack: Tuple[int, ...], b: int) -> Array:
+    """Per-element scalar → (B,) float32 (broadcast if python/0-d scalar)."""
+    lam = jnp.asarray(lam, jnp.float32)
+    lam = jnp.broadcast_to(lam, stack) if stack else lam.reshape(())
+    return lam.reshape((b,))
+
+
+# ---------------------------------------------------------------------------
+# ops
+# ---------------------------------------------------------------------------
 
 def ea_syrk(M: Array, X: Array, rho, first) -> Array:
-    """M ← keep·M + coef·X Xᵀ (EA update, paper eq. 5)."""
+    """M ← keep·M + coef·X Xᵀ (EA update, paper eq. 5).
+    M: (*stack, d, d), X: (*stack, d, n)."""
     mode = _mode()
-    d, n = X.shape
-    if mode == "ref" or not _aligned(d, n):
+    d, n = X.shape[-2:]
+    if mode == "ref" or not _pad_ok((d, _LANE), (n, _LANE)):
         return ref.ea_syrk(M, X, rho, first)
+    stack = _common_stack((M, 2), (X, 2))
+    Xb = _flat(X, 2, stack)
+    Mb = _flat(M, 2, stack)
+    pd, pn = _round_up(d, _LANE), _round_up(n, _LANE)
+    Xp = _pad_tail(Xb, pd, pn)
+    Mp = _pad_tail(Mb, pd, pd)
     rho = jnp.asarray(rho, jnp.float32)
     firstf = jnp.asarray(first, jnp.float32)
     keep = rho * (1.0 - firstf)
     coef = 1.0 - keep
-    return _ea.ea_syrk_pallas(M, X, keep, coef,
-                              interpret=(mode == "interpret"))
+    bm = bn = _pick_block(pd, 256)
+    bk = _pick_block(pn, 256)
+    out = _ea.ea_syrk_batched_pallas(Mp, Xp, keep, coef, bm=bm, bn=bn, bk=bk,
+                                     interpret=(mode == "interpret"))
+    return out[..., :d, :d].reshape(stack + (d, d))
 
 
 def brand_panel(U: Array, A: Array):
-    """(C, A⊥) = (UᵀA, A − U(UᵀA))."""
+    """(C, A⊥) = (UᵀA, A − U(UᵀA)).
+    U: (*stack, d, r), A: (*stack, d, n)."""
     mode = _mode()
-    d, r = U.shape
-    n = A.shape[1]
-    if mode == "ref" or not _aligned(d) or r % 8 or n % _LANE:
+    d, r = U.shape[-2:]
+    n = A.shape[-1]
+    if mode == "ref" or not _pad_ok((d, _LANE), (r, _SUB), (n, _LANE)):
         return ref.brand_panel(U, A)
-    return _bp.brand_panel_pallas(U, A, interpret=(mode == "interpret"))
+    stack = _common_stack((U, 2), (A, 2))
+    Ub = _flat(U, 2, stack)
+    Ab = _flat(A, 2, stack)
+    pd, pr, pn = (_round_up(d, _LANE), _round_up(r, _SUB),
+                  _round_up(n, _LANE))
+    Up = _pad_tail(Ub, pd, pr)
+    Ap = _pad_tail(Ab, pd, pn)
+    bk = _pick_block(pd, 512)
+    C, P = _bp.brand_panel_batched_pallas(Up, Ap, bk=bk,
+                                          interpret=(mode == "interpret"))
+    return (C[..., :r, :n].reshape(stack + (r, n)),
+            P[..., :d, :n].reshape(stack + (d, n)))
 
 
 def lowrank_apply(X: Array, U: Array, s: Array, lam) -> Array:
-    """Y = (X U) diag(s) Uᵀ + X/λ."""
+    """Y = (X U) diag(s) Uᵀ + X/λ.
+    X: (*stack, p, d), U: (*stack, d, w), s: (*stack, w), lam: scalar or
+    (*stack,)."""
     mode = _mode()
-    p, d = X.shape
-    w = U.shape[1]
-    if mode == "ref" or not _aligned(d) or p % _LANE or w % 8:
+    p, d = X.shape[-2:]
+    w = U.shape[-1]
+    if mode == "ref" or not _pad_ok((p, _LANE), (d, _LANE), (w, _SUB)):
         return ref.lowrank_apply(X, U, s, lam)
-    lam = jnp.asarray(lam, X.dtype)
-    return _la.lowrank_apply_pallas(X, U, s, lam,
-                                    interpret=(mode == "interpret"))
+    stack = _common_stack((X, 2), (U, 2), (s, 1))
+    Xb = _flat(X, 2, stack)
+    Ub = _flat(U, 2, stack)
+    sb = _flat(s, 1, stack)
+    b = Xb.shape[0]
+    pp, pd, pw = (_round_up(p, _LANE), _round_up(d, _LANE),
+                  _round_up(w, _SUB))
+    Xp = _pad_tail(Xb, pp, pd)
+    Up = _pad_tail(Ub, pd, pw)
+    sp = _pad_tail(sb, pw)
+    ilam = 1.0 / _stack_lam(lam, stack, b)
+    bm = _pick_block(pp, 256)
+    bn = _pick_block(pd, 512)
+    bk = _pick_block(pd, 512)
+    out = _la.lowrank_apply_batched_pallas(Xp, Up, sp, ilam, bm=bm, bn=bn,
+                                           bk=bk,
+                                           interpret=(mode == "interpret"))
+    return out[..., :p, :d].reshape(stack + (p, d))
+
+
+def precond_fused(J: Array, U_g: Array, s_g: Array, lam_g,
+                  U_a: Array, s_a: Array, lam_a) -> Array:
+    """S = Γ̄⁻¹ J Ā⁻¹ — the full two-sided application in one fused launch
+    sequence (J read once per row stripe; the (p, d) intermediate never
+    touches HBM).
+
+    J: (*stack, p, d), U_g: (*stack, p, w_g), s_g: (*stack, w_g),
+    U_a: (*stack, d, w_a), s_a: (*stack, w_a); λ's scalar or (*stack,).
+    """
+    mode = _mode()
+    p, d = J.shape[-2:]
+    w_g = U_g.shape[-1]
+    w_a = U_a.shape[-1]
+    if mode == "ref" or not _pad_ok((p, _LANE), (d, _LANE), (w_g, _SUB),
+                                    (w_a, _SUB)):
+        return ref.precond_fused(J, U_g, s_g, lam_g, U_a, s_a, lam_a)
+    pp, pd = _round_up(p, _LANE), _round_up(d, _LANE)
+    pwg, pwa = _round_up(w_g, _SUB), _round_up(w_a, _SUB)
+    bn = _pick_block(pd, 256)
+    bm = _fused_bm(pp, pd, pwg, pwa, bn)
+    if bm is None:
+        # d too large for the J-resident stripes — stay on kernels but
+        # unfused: two lowrank_apply round-trips (the pre-fusion path)
+        M = lowrank_apply(J, U_a, s_a, lam_a)
+        Mt = jnp.swapaxes(M, -1, -2)
+        return jnp.swapaxes(lowrank_apply(Mt, U_g, s_g, lam_g), -1, -2)
+    stack = _common_stack((J, 2), (U_g, 2), (U_a, 2), (s_g, 1), (s_a, 1))
+    Jb = _flat(J, 2, stack)
+    Ugb = _flat(U_g, 2, stack)
+    Uab = _flat(U_a, 2, stack)
+    sgb = _flat(s_g, 1, stack)
+    sab = _flat(s_a, 1, stack)
+    b = Jb.shape[0]
+    Jp = _pad_tail(Jb, pp, pd)
+    Ugp = _pad_tail(Ugb, pp, pwg)
+    Uap = _pad_tail(Uab, pd, pwa)
+    sgp = _pad_tail(sgb, pwg)
+    sap = _pad_tail(sab, pwa)
+    ilam_g = 1.0 / _stack_lam(lam_g, stack, b)
+    ilam_a = 1.0 / _stack_lam(lam_a, stack, b)
+    out = _pf.precond_fused_pallas(Jp, Ugp, sgp, ilam_g, Uap, sap, ilam_a,
+                                   bm=bm, bn=bn,
+                                   interpret=(mode == "interpret"))
+    return out[..., :p, :d].reshape(stack + (p, d))

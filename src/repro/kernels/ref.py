@@ -2,13 +2,36 @@
 
 These define the semantics; the kernels must match them (tests sweep shapes
 and dtypes in interpret mode and assert allclose against these).
+
+Every oracle is stacked-native: operands may carry arbitrary leading stack
+axes (scanned layers, MoE experts) and broadcast like ``jnp.matmul``.
+Per-element scalars (λ) may be python scalars, 0-d arrays, or arrays of the
+stack shape.
 """
 from __future__ import annotations
+
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
 Array = jax.Array
+
+
+def mt(x: Array) -> Array:
+    """Matrix transpose on the trailing two axes (shared helper — the
+    optimizer-side math in ``core/precond.py`` imports it too)."""
+    return jnp.swapaxes(x, -1, -2)
+
+
+def scal(v, like: Array):
+    """Broadcast a per-element scalar (any stack shape) against the trailing
+    two matrix axes of ``like`` (shared helper, see ``mt``)."""
+    v = jnp.asarray(v, like.dtype)
+    return v[..., None, None]
+
+
+_mt, _scal = mt, scal  # internal aliases
 
 
 def ea_syrk(M: Array, X: Array, rho, first) -> Array:
@@ -18,19 +41,33 @@ def ea_syrk(M: Array, X: Array, rho, first) -> Array:
     firstf = jnp.asarray(first, M.dtype)
     keep = rho * (1.0 - firstf)
     coef = 1.0 - keep
-    return keep * M + coef * (X @ X.T).astype(M.dtype)
+    return keep * M + coef * (X @ _mt(X)).astype(M.dtype)
 
 
-def brand_panel(U: Array, A: Array):
+def brand_panel(U: Array, A: Array) -> Tuple[Array, Array]:
     """The O(d·r·n) panel of Brand's update:  C = UᵀA,  A⊥ = A − U C."""
-    C = U.T @ A
+    C = _mt(U) @ A
     return C, A - U @ C
 
 
 def lowrank_apply(X: Array, U: Array, s: Array, lam) -> Array:
     """Fused low-rank inverse application:
     Y = (X U) diag(s) Uᵀ + X/λ   (paper Alg 1 lines 15-17 in factored form).
+
+    X: (..., p, d), U: (..., d, w), s: (..., w), lam: scalar or (...,).
     """
-    lam = jnp.asarray(lam, X.dtype)
-    T = (X @ U) * s[None, :]
-    return T @ U.T + X / lam
+    T = (X @ U) * s[..., None, :]
+    return T @ _mt(U) + X / _scal(lam, X)
+
+
+def precond_fused(J: Array, U_g: Array, s_g: Array, lam_g,
+                  U_a: Array, s_a: Array, lam_a) -> Array:
+    """Fused two-sided application  S = Γ̄⁻¹ J Ā⁻¹  (paper Alg 1, both
+    factors):
+
+        S = (U_g diag(s_g) U_gᵀ + I/λ_g) J (U_a diag(s_a) U_aᵀ + I/λ_a)
+
+    J: (..., p, d), U_g: (..., p, w_g), U_a: (..., d, w_a).
+    """
+    W = U_g @ ((_mt(U_g) @ J) * s_g[..., :, None]) + J / _scal(lam_g, J)
+    return lowrank_apply(W, U_a, s_a, lam_a)

@@ -1,0 +1,12 @@
+"""Version tolerance for the Pallas TPU API surface used by this package.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``; the
+kernels support both so the same tree runs on the pinned CI jax and on
+newer toolchains.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")

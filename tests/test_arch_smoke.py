@@ -6,6 +6,8 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+pytestmark = pytest.mark.slow  # multi-minute e2e tier
+
 from repro.configs.base import ARCH_NAMES, get_arch
 from repro.models import layers
 from repro.models.lm import LM

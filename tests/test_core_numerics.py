@@ -23,6 +23,7 @@ def _rand_state(key, d, r):
 
 
 class TestSymBrand:
+    @pytest.mark.slow
     def test_exactness(self):
         """Brand's algorithm is exact: U'D'U'ᵀ == UDUᵀ + AAᵀ."""
         key = jax.random.PRNGKey(0)
@@ -49,6 +50,7 @@ class TestSymBrand:
         ref_vals = jnp.linalg.eigvalsh((U * D) @ U.T + A @ A.T)[::-1]
         np.testing.assert_allclose(D2, ref_vals[: r + n], atol=2e-4)
 
+    @pytest.mark.slow
     def test_general_brand(self):
         key = jax.random.PRNGKey(4)
         m, d, r, n = 40, 30, 8, 3
@@ -69,6 +71,7 @@ class TestSymBrand:
         assert U.shape == (32, 10) and D.shape == (10,)
         np.testing.assert_allclose((U * D) @ U.T, X @ X.T, atol=2e-4)
 
+    @pytest.mark.slow
     def test_ea_brand_step_tracks_ea(self):
         """Repeated B-updates with r >= true rank track the exact EA."""
         d, n, r, rho = 40, 4, 20, 0.9
@@ -176,7 +179,11 @@ class TestKFactorStateMachine:
             st = kfactor.inverse_rep_step(spec, st, X, k, first, heavy)
         return st, Xs
 
-    @pytest.mark.parametrize("mode", list(kfactor.Mode))
+    @pytest.mark.parametrize(
+        "mode",
+        [pytest.param(m, marks=pytest.mark.slow)
+         if m in (kfactor.Mode.BRAND_RSVD, kfactor.Mode.BRAND_CORR) else m
+         for m in kfactor.Mode])
     def test_modes_run_and_track(self, mode):
         spec = self._spec(mode, n_crc=4)
         st, Xs = self._run(spec)
@@ -193,6 +200,7 @@ class TestKFactorStateMachine:
         st = spec.init()
         assert st.M.shape == (1, 1)   # low-memory property
 
+    @pytest.mark.slow
     def test_correction_reduces_error(self):
         """Alg 6 can only reduce ||M - Û D̂ Ûᵀ||_F (paper §3.4)."""
         spec = self._spec(kfactor.Mode.BRAND_CORR, d=64, r=12, n=4, n_crc=6)
@@ -202,3 +210,4 @@ class TestKFactorStateMachine:
         st2 = kfactor.light_correction(spec, st, jax.random.PRNGKey(42))
         after = np.linalg.norm(kfactor.reconstruct(st2) - st.M)
         assert after <= before + 1e-5
+

@@ -56,6 +56,7 @@ class TestCheckpoint:
             ckpt.restore(str(tmp_path), bad)
 
 
+@pytest.mark.slow
 class TestElastic:
     def test_failure_restart_resumes_from_checkpoint(self, tmp_path):
         """Inject a failure mid-run; the runner must resume from the last
@@ -179,6 +180,7 @@ class TestCompression:
         np.testing.assert_allclose(np.asarray(approx + err), np.asarray(G),
                                    atol=1e-4)
 
+    @pytest.mark.slow
     def test_sgd_with_compression_converges(self):
         """Least squares with rank-2 EF compression still converges."""
         key = jax.random.PRNGKey(3)

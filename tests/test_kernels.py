@@ -17,9 +17,16 @@ def _tol(dtype):
         else dict(atol=2e-3, rtol=2e-3)
 
 
-@pytest.mark.parametrize("d,n", [(256, 128), (512, 256), (384, 128)])
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-@pytest.mark.parametrize("first", [False, True])
+@pytest.mark.parametrize("d,n,dtype,first", [
+    (256, 128, jnp.float32, False),
+    (384, 128, jnp.bfloat16, True),
+    pytest.param(256, 128, jnp.float32, True, marks=pytest.mark.slow),
+    pytest.param(256, 128, jnp.bfloat16, False, marks=pytest.mark.slow),
+    pytest.param(384, 128, jnp.float32, False, marks=pytest.mark.slow),
+    pytest.param(384, 128, jnp.bfloat16, False, marks=pytest.mark.slow),
+    pytest.param(512, 256, jnp.float32, False, marks=pytest.mark.slow),
+    pytest.param(512, 256, jnp.bfloat16, True, marks=pytest.mark.slow),
+])
 def test_ea_syrk_vs_ref(d, n, dtype, first):
     k1, k2 = jax.random.split(jax.random.PRNGKey(d + n))
     M = jax.random.normal(k1, (d, d), dtype=jnp.float32)
@@ -35,9 +42,15 @@ def test_ea_syrk_vs_ref(d, n, dtype, first):
                                np.asarray(want, np.float32), **_tol(dtype))
 
 
-@pytest.mark.parametrize("d,r,n", [(512, 64, 128), (1024, 256, 128),
-                                   (256, 8, 128)])
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("d,r,n,dtype", [
+    (256, 64, 128, jnp.float32),
+    (256, 8, 128, jnp.bfloat16),
+    pytest.param(256, 64, 128, jnp.bfloat16, marks=pytest.mark.slow),
+    pytest.param(256, 8, 128, jnp.float32, marks=pytest.mark.slow),
+    pytest.param(512, 64, 128, jnp.float32, marks=pytest.mark.slow),
+    pytest.param(1024, 256, 128, jnp.float32, marks=pytest.mark.slow),
+    pytest.param(1024, 256, 128, jnp.bfloat16, marks=pytest.mark.slow),
+])
 def test_brand_panel_vs_ref(d, r, n, dtype):
     k1, k2 = jax.random.split(jax.random.PRNGKey(d + r + n))
     U, _ = jnp.linalg.qr(jax.random.normal(k1, (d, r)))
@@ -51,9 +64,15 @@ def test_brand_panel_vs_ref(d, r, n, dtype):
                                np.asarray(P_want, np.float32), **_tol(dtype))
 
 
-@pytest.mark.parametrize("p,d,w", [(256, 512, 64), (128, 1024, 256),
-                                   (384, 256, 8)])
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("p,d,w,dtype", [
+    (256, 256, 64, jnp.float32),
+    (384, 256, 8, jnp.bfloat16),
+    pytest.param(256, 256, 64, jnp.bfloat16, marks=pytest.mark.slow),
+    pytest.param(384, 256, 8, jnp.float32, marks=pytest.mark.slow),
+    pytest.param(256, 512, 64, jnp.float32, marks=pytest.mark.slow),
+    pytest.param(128, 1024, 256, jnp.float32, marks=pytest.mark.slow),
+    pytest.param(128, 1024, 256, jnp.bfloat16, marks=pytest.mark.slow),
+])
 def test_lowrank_apply_vs_ref(p, d, w, dtype):
     k1, k2, k3 = jax.random.split(jax.random.PRNGKey(p + d + w), 3)
     X = jax.random.normal(k1, (p, d), dtype=dtype)

@@ -76,6 +76,7 @@ def _cfg(variant, **kw):
     return kfac_lib.KfacConfig(**kwargs)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("variant", list(policy.VARIANTS))
 def test_variant_trains(variant):
     cfg = _cfg(variant)
@@ -104,6 +105,7 @@ def test_policy_mode_selection():
     assert policy.select_mode(pol_r, 256, 32) == Mode.RSVD
 
 
+@pytest.mark.slow
 def test_momentum_and_schedules():
     # NOTE: with a binding norm-clip the lr is immaterial (the paper's
     # clip=0.07 regime); momentum needs a tight cap to stay stable.
@@ -129,6 +131,7 @@ def test_flags_schedule():
                                   do_heavy=False)
 
 
+@pytest.mark.slow
 def test_kfac_beats_sgd_same_budget():
     """Sanity: preconditioning helps on this ill-conditioned problem."""
     from repro.optim import sgd as sgd_lib

@@ -78,6 +78,7 @@ class TestSSD:
         Cm = jax.random.normal(ks[4], (B, T, G, N))
         return xh, dt, A, Bm, Cm
 
+    @pytest.mark.slow
     def test_chunked_matches_reference(self):
         xh, dt, A, Bm, Cm = self._inputs()
         got = ssm.ssd_chunked(xh, dt, A, Bm, Cm, chunk=8)
@@ -99,6 +100,7 @@ class TestSSD:
 
 
 class TestRGLRU:
+    @pytest.mark.slow
     def test_scan_matches_step_loop(self):
         B, T, D = 2, 16, 12
         ks = jax.random.split(jax.random.PRNGKey(3), 4)
@@ -116,6 +118,7 @@ class TestRGLRU:
         np.testing.assert_allclose(np.asarray(step), np.asarray(full),
                                    atol=1e-5, rtol=1e-4)
 
+    @pytest.mark.slow
     def test_stability(self):
         """|a| < 1 ⇒ bounded states on long sequences."""
         B, T, D = 1, 512, 8

@@ -1,6 +1,7 @@
 """SENG baseline: Woodbury identity correctness + training integration."""
 import numpy as np
 import jax
+import pytest
 import jax.numpy as jnp
 
 from repro.optim import seng as seng_lib
@@ -27,6 +28,7 @@ def test_woodbury_matches_dense():
     np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-5)
 
 
+@pytest.mark.slow
 def test_seng_trains():
     cfg = seng_lib.SengConfig(lr=optbase.constant(0.05), damping=2.0,
                               momentum=0.9, weight_decay=1e-4, T_fim=5,

@@ -3,6 +3,8 @@ import os
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # multi-minute e2e tier
+
 # must precede jax usage in THIS process; harmless if already imported with
 # a single device (tests then run on a 1-device mesh and only check specs)
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
