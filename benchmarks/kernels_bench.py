@@ -26,14 +26,14 @@ import jax.numpy as jnp
 from repro.kernels import ref, ops
 
 
-def _timeit(fn, *args, reps=5):
+def _timeit(fn, *args, reps=15):
     jax.block_until_ready(fn(*args))
     ts = []
     for _ in range(reps):
         t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
         ts.append(time.perf_counter() - t0)
-    return float(np.median(ts))
+    return float(np.min(ts))
 
 
 def _unfused_precond(J, U_g, s_g, lam_g, U_a, s_a, lam_a):
@@ -68,30 +68,52 @@ def run(quick: bool = False) -> List[dict]:
     ss = jnp.broadcast_to(s, (L, w))
     lams = jnp.full((L,), 0.5)
 
+    # block sizes the (shape-aware) dispatch would launch with on TPU —
+    # recorded in the artifact so block-pick changes show up in the diffs
+    pd, pn = ops._round_up(d, ops._LANE), ops._round_up(n, ops._LANE)
+    pw = ops._round_up(w, ops._SUB)
+    blk_syrk = "bm%d,bn%d,bk%d" % ops.syrk_blocks(pd, pn)
+    blk_panel = "bk%d" % ops.panel_blocks(pd, pw, pn)
+    blk_qr = "bk%d" % ops.cholqr_blocks(pd, pn)
+
     rows = []
     # operands are jit ARGUMENTS (not closure constants) so XLA cannot
     # constant-fold the benchmarked work away at compile time
     cases = [
         ("ea_syrk", lambda m, x: ops.ea_syrk(m, x, 0.95, False), (M, X),
          lambda: ref.ea_syrk(M, X, 0.95, False),
-         2.0 * d * d * n),
+         2.0 * d * d * n, blk_syrk),
         ("brand_panel", lambda u, x: ops.brand_panel(u, x)[1], (U, X),
          lambda: ref.brand_panel(U, X)[1],
-         4.0 * d * w * n),
+         4.0 * d * w * n, blk_panel),
+        ("cholqr2", lambda a: ops.cholqr2(a)[0], (X,),
+         lambda: ref.cholqr2(X)[0],
+         8.0 * d * n * n, blk_qr),
         ("lowrank_apply", ops.lowrank_apply, (J, U, s, lam),
          lambda: ref.lowrank_apply(J, U, s, lam),
-         4.0 * p * d * w),
+         4.0 * p * d * w, None),
         ("precond_fused", ops.precond_fused, (J, U_g, s_g, lam, U, s, lam),
          lambda: ref.precond_fused(J, U_g, s_g, lam, U, s, lam),
-         4.0 * p * d * w + 4.0 * p * d * w),
+         4.0 * p * d * w + 4.0 * p * d * w, None),
     ]
-    for name, op_fn, args, ref_fn, flops in cases:
+    for name, op_fn, args, ref_fn, flops, blocks in cases:
         got = np.asarray(op_fn(*args))
         want = np.asarray(ref_fn())
         np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
         t = _timeit(jax.jit(op_fn), *args)
+        derived = f"gflops={flops/t/1e9:.1f} allclose=True"
+        if blocks:
+            derived += f" blocks={blocks}"
         rows.append({"name": f"kernels/{name}", "us_per_call": t * 1e6,
-                     "derived": f"gflops={flops/t/1e9:.1f} allclose=True"})
+                     "derived": derived})
+
+    # CholeskyQR2 vs the Householder XLA QR it replaces in the Brand update
+    t_cq = _timeit(jax.jit(lambda a: ops.cholqr2(a)[0]), X)
+    t_hh = _timeit(jax.jit(lambda a: jnp.linalg.qr(a)[0]), X)
+    rows.append({"name": "kernels/cholqr2_vs_householder",
+                 "us_per_call": t_cq * 1e6,
+                 "derived": f"householder_us={t_hh * 1e6:.1f} "
+                            f"speedup={t_hh / t_cq:.2f}x"})
 
     # fused vs unfused two-sided application (same operands, same dispatch)
     fused_args = (J, U_g, s_g, lam, U, s, lam)

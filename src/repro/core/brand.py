@@ -14,14 +14,28 @@ Eigenvalues are kept sorted *descending*.  A Brand state is a pair
 ``(U, D)`` with ``U ∈ R[d, m]`` column-orthonormal and ``D ∈ R[m]`` so that
 the represented matrix is ``U @ diag(D) @ U.T``.  All functions are pure and
 jit/vmap friendly (static shapes; rank changes are expressed by zero modes).
+
+Stacked-native: the symmetric path (``sym_brand_update`` / ``ea_brand_step``
+/ ``init_from_factor``) accepts arbitrary leading stack axes, so a whole
+bucket of K-factors (scanned layers, MoE experts, cross-layer shape
+classes) updates in one batched call.
+
+``use_kernel`` routes the two O(d)-sized ops of the symmetric update — the
+projection panel (C, A⊥) and the tall-skinny QR of A⊥ — through the Pallas
+kernels (``kernels/ops.py::brand_panel`` + ``cholqr2``); the remaining
+O((r+n)²) eigenproblem stays in XLA.  The default path keeps Householder
+``jnp.linalg.qr`` (the original oracle semantics); both agree up to
+rotations inside degenerate eigenspaces, which the represented matrix
+U diag(D) Uᵀ is invariant to.
 """
 from __future__ import annotations
 
-import functools
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.ref import mt as _mt
 
 Array = jax.Array
 
@@ -30,6 +44,11 @@ def _desc_eigh(M: Array) -> Tuple[Array, Array]:
     """eigh with eigenvalues sorted descending. Returns (vals, vecs)."""
     vals, vecs = jnp.linalg.eigh(M)
     return vals[..., ::-1], vecs[..., :, ::-1]
+
+
+def _batched_diag(D: Array) -> Array:
+    """(..., r) → (..., r, r) diagonal matrices."""
+    return jnp.eye(D.shape[-1], dtype=D.dtype) * D[..., None, :]
 
 
 def truncate(U: Array, D: Array, r: int) -> Tuple[Array, Array]:
@@ -48,50 +67,59 @@ def brand_update(U: Array, D: Array, V: Array, A: Array, B: Array
     U: (m, r), V: (d, r), D: (r,), A: (m, n), B: (d, n).
     Returns (U', D', V') of ranks r+n (exact thin SVD of X̂).
     """
-    r = U.shape[-1]
-    n = A.shape[-1]
     # Project the update onto the current subspaces and their complements.
-    UtA = U.T @ A                                    # (r, n)
-    VtB = V.T @ B                                    # (r, n)
+    UtA = _mt(U) @ A                                 # (r, n)
+    VtB = _mt(V) @ B                                 # (r, n)
     A_perp = A - U @ UtA
     B_perp = B - V @ VtB
     Qa, Ra = jnp.linalg.qr(A_perp)                   # (m, n), (n, n)
     Qb, Rb = jnp.linalg.qr(B_perp)                   # (d, n), (n, n)
     # M_S = [[I, UtA],[0, Ra]] @ diag(D, I) @ [[I, VtB],[0, Rb]]ᵀ  (eq. 7)
-    top = jnp.concatenate([jnp.diag(D) + UtA @ VtB.T, UtA @ Rb.T], axis=-1)
-    bot = jnp.concatenate([Ra @ VtB.T, Ra @ Rb.T], axis=-1)
+    top = jnp.concatenate([_batched_diag(D) + UtA @ _mt(VtB),
+                           UtA @ _mt(Rb)], axis=-1)
+    bot = jnp.concatenate([Ra @ _mt(VtB), Ra @ _mt(Rb)], axis=-1)
     Ms = jnp.concatenate([top, bot], axis=-2)        # (r+n, r+n)
     Um, Dm, Vmt = jnp.linalg.svd(Ms)
     U_new = jnp.concatenate([U, Qa], axis=-1) @ Um
-    V_new = jnp.concatenate([V, Qb], axis=-1) @ Vmt.T
-    del r, n
+    V_new = jnp.concatenate([V, Qb], axis=-1) @ _mt(Vmt)
     return U_new, Dm, V_new
 
 
-def sym_brand_update(U: Array, D: Array, A: Array) -> Tuple[Array, Array]:
+def sym_brand_update(U: Array, D: Array, A: Array, use_kernel: bool = False
+                     ) -> Tuple[Array, Array]:
     """Symmetric Brand update (paper Alg 3):  X̂ = U diag(D) Uᵀ + A Aᵀ.
 
-    U: (d, r) column-orthonormal, D: (r,) descending, A: (d, n).
-    Returns (U', D') with U' (d, r+n), D' (r+n,) descending — the exact
-    EVD of X̂ (X̂ is symmetric psd when D ≥ 0).
+    U: (*stack, d, r) column-orthonormal, D: (*stack, r) descending,
+    A: (*stack, d, n).  Returns (U', D') with U' (…, d, r+n), D' (…, r+n)
+    descending — the exact EVD of X̂ (X̂ is symmetric psd when D ≥ 0).
 
     Derivation: with C = UᵀA and A⊥ = A − UC = Q R,
         X̂ = [U Q] [[diag(D)+CCᵀ, CRᵀ],[RCᵀ, RRᵀ]] [U Q]ᵀ
     and the middle (r+n)² matrix is symmetric — one small eigh finishes it.
+
+    With ``use_kernel`` the O(d·r·n) panel and the O(d·n²) tall-skinny QR
+    run as batched Pallas launches (``brand_panel`` + CholeskyQR2); the
+    whole light update is then linear in d with no XLA QR left.
     """
-    C = U.T @ A                                      # (r, n)
-    A_perp = A - U @ C                               # (d, n)
-    Q, R = jnp.linalg.qr(A_perp)                     # (d, n), (n, n)
-    top = jnp.concatenate([jnp.diag(D) + C @ C.T, C @ R.T], axis=-1)
-    bot = jnp.concatenate([R @ C.T, R @ R.T], axis=-1)
-    Ms = jnp.concatenate([top, bot], axis=-2)        # (r+n, r+n)
+    if use_kernel:
+        from repro.kernels import ops as kops
+        C, A_perp = kops.brand_panel(U, A)           # (…, r, n), (…, d, n)
+        Q, R = kops.cholqr2(A_perp)                  # (…, d, n), (…, n, n)
+    else:
+        C = _mt(U) @ A
+        A_perp = A - U @ C
+        Q, R = jnp.linalg.qr(A_perp)
+    top = jnp.concatenate([_batched_diag(D) + C @ _mt(C), C @ _mt(R)],
+                          axis=-1)
+    bot = jnp.concatenate([R @ _mt(C), R @ _mt(R)], axis=-1)
+    Ms = jnp.concatenate([top, bot], axis=-2)        # (…, r+n, r+n)
     Dm, Wm = _desc_eigh(Ms)
-    U_new = jnp.concatenate([U, Q], axis=-1) @ Wm    # (d, r+n)
+    U_new = jnp.concatenate([U, Q], axis=-1) @ Wm    # (…, d, r+n)
     return U_new, Dm
 
 
-def ea_brand_step(U: Array, D: Array, X: Array, rho: float, r: int
-                  ) -> Tuple[Array, Array]:
+def ea_brand_step(U: Array, D: Array, X: Array, rho: float, r: int,
+                  use_kernel: bool = False) -> Tuple[Array, Array]:
     """One B-KFAC K-factor inverse-representation step (paper Alg 4).
 
     Held state (U, D) has rank r+n (from the previous step).  We truncate to
@@ -100,33 +128,31 @@ def ea_brand_step(U: Array, D: Array, X: Array, rho: float, r: int
 
         M ← ρ · trunc_r(U diag(D) Uᵀ) + (1-ρ) · X Xᵀ
 
-    X: (d, n) — the incoming K-factor square root (activations or
+    X: (*stack, d, n) — the incoming K-factor square root (activations or
     output-gradients, already transposed to column-sample layout).
     Returns (U', D') of rank r+n.
     """
     Ut, Dt = truncate(U, D, r)
-    return sym_brand_update(Ut, rho * Dt, jnp.sqrt(1.0 - rho) * X)
+    return sym_brand_update(Ut, rho * Dt, jnp.sqrt(1.0 - rho) * X,
+                            use_kernel=use_kernel)
 
 
 def init_from_factor(X: Array, m: int) -> Tuple[Array, Array]:
     """Initialize a Brand state from the first factor M₀ = X Xᵀ without ever
     forming the d×d product (the low-memory property of §3.5).
 
-    X: (d, n).  Returns (U, D) padded with zero modes to width ``m`` so the
-    state shape is static across steps.
+    X: (*stack, d, n).  Returns (U, D) padded with zero modes to width ``m``
+    so the state shape is static across steps.
     """
-    d, n = X.shape
+    d, n = X.shape[-2:]
     # Thin SVD of X gives the EVD of X Xᵀ: eigvecs = left singular vectors,
     # eigvals = singular values squared.
-    Ux, s, _ = jnp.linalg.svd(X, full_matrices=False)  # (d, n), (n,)
+    Ux, s, _ = jnp.linalg.svd(X, full_matrices=False)  # (…, d, n), (…, n)
     D = s * s
     if n >= m:
-        return Ux[:, :m], D[:m]
-    pad_u = jnp.zeros((d, m - n), dtype=X.dtype)
-    pad_d = jnp.zeros((m - n,), dtype=X.dtype)
-    return jnp.concatenate([Ux, pad_u], axis=1), jnp.concatenate([D, pad_d])
-
-
-@functools.partial(jax.jit, static_argnames=("r",))
-def ea_brand_step_jit(U: Array, D: Array, X: Array, rho: float, r: int):
-    return ea_brand_step(U, D, X, rho, r)
+        return Ux[..., :, :m], D[..., :m]
+    stack = X.shape[:-2]
+    pad_u = jnp.zeros(stack + (d, m - n), dtype=X.dtype)
+    pad_d = jnp.zeros(stack + (m - n,), dtype=X.dtype)
+    return (jnp.concatenate([Ux, pad_u], axis=-1),
+            jnp.concatenate([D, pad_d], axis=-1))

@@ -1,0 +1,188 @@
+"""Cross-layer bucketing: group K-factors (and preconditioned taps) whose
+shape-class matches into stacked super-batches, so the optimizer hot path
+runs O(#shape-classes) batched launches instead of O(#layers) small ones.
+
+A transformer has dozens-to-hundreds of tapped matmuls but only a handful
+of distinct factor shapes (qkv/out projections share d_model, both MLP
+ends share d_ff↔d_model, every scanned block repeats them).  The kernels
+package is already stacked-native (leading batch axis → leading parallel
+grid dimension), so the only missing piece is a static gather/scatter
+between the per-tap optimizer state tree and per-class flat batches — this
+module.  Everything here is shape metadata resolved at ``Kfac.__init__``
+time; under jit the gathers/scatters are pure reshapes + concatenates.
+
+Shape classes
+-------------
+*Factor* work (EA absorb, Brand light update, heavy overwrites) buckets by
+the full ``KFactorSpec`` — (d, r, n_stat, mode, ρ, …) — since the spec
+decides both operand shapes and the update program.  Each tap contributes
+two factor jobs (A-side d_in, G-side d_out); a tap's own stack axes
+(scanned layers L, experts E) are flattened into the bucket batch, so an
+FC tap (count 1) and an (L, E) MoE tap (count L·E) with matching specs
+share one bucket.
+
+*Preconditioning* buckets by (A-spec, G-spec, linear_apply): the two-sided
+application needs both factor shapes to line up, and Alg-8 linear-apply
+taps consume gradient factors with their own shapes.
+
+A tap falls out of a bucket (gets its own singleton bucket) whenever any
+component of its class differs — see docs/bucketing.md for the rules.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kfactor import KFactorSpec, KFactorState
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Entry:
+    """One (tap, side) slot inside a bucket's flat batch axis."""
+    name: str                    # tap name
+    side: str                    # "A" | "G" (factor buckets); "" (precond)
+    stack: Tuple[int, ...]       # the tap's own stack axes
+    offset: int                  # start row in the bucket batch
+    count: int                   # prod(stack)
+
+
+@dataclasses.dataclass(frozen=True)
+class FactorBucket:
+    """All factor jobs of one shape class, stacked along one batch axis."""
+    spec: KFactorSpec
+    entries: Tuple[Entry, ...]
+    total: int                   # sum of entry counts
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecondBucket:
+    """All preconditioned taps of one (A-spec, G-spec, apply-mode) class."""
+    spec_a: KFactorSpec
+    spec_g: KFactorSpec
+    linear_apply: bool
+    entries: Tuple[Entry, ...]
+    total: int
+
+
+def _count(stack: Tuple[int, ...]) -> int:
+    return math.prod(stack) if stack else 1
+
+
+def build_factor_buckets(specs: Dict[str, Dict[str, KFactorSpec]],
+                         stacks: Dict[str, Tuple[int, ...]]
+                         ) -> Tuple[FactorBucket, ...]:
+    """Group every (tap, side) factor job by its KFactorSpec.
+
+    ``specs``: {tap: {"A": spec, "G": spec}}; ``stacks``: {tap: stack}.
+    Bucket order (and entry order inside a bucket) is deterministic:
+    sorted tap name, then side — the jitted update's structure must not
+    depend on dict iteration order.
+    """
+    grouped: Dict[KFactorSpec, list] = {}
+    for name in sorted(specs):
+        for side in ("A", "G"):
+            grouped.setdefault(specs[name][side], []).append((name, side))
+    buckets = []
+    for spec in sorted(grouped, key=lambda s: (s.d, s.n_stat, s.mode.value,
+                                               s.r, s.n_crc)):
+        entries, offset = [], 0
+        for name, side in grouped[spec]:
+            count = _count(stacks[name])
+            entries.append(Entry(name=name, side=side, stack=stacks[name],
+                                 offset=offset, count=count))
+            offset += count
+        buckets.append(FactorBucket(spec=spec, entries=tuple(entries),
+                                    total=offset))
+    return tuple(buckets)
+
+
+def build_precond_buckets(specs: Dict[str, Dict[str, KFactorSpec]],
+                          stacks: Dict[str, Tuple[int, ...]],
+                          linear_apply: Dict[str, bool]
+                          ) -> Tuple[PrecondBucket, ...]:
+    """Group taps by (A-spec, G-spec, linear_apply) for the two-sided
+    application — one batched (fused) preconditioning launch per class."""
+    grouped: Dict[tuple, list] = {}
+    for name in sorted(specs):
+        key = (specs[name]["A"], specs[name]["G"], linear_apply[name])
+        grouped.setdefault(key, []).append(name)
+    buckets = []
+    for key in sorted(grouped, key=lambda k: (k[0].d, k[1].d, k[2])):
+        spec_a, spec_g, lin = key
+        entries, offset = [], 0
+        for name in grouped[key]:
+            count = _count(stacks[name])
+            entries.append(Entry(name=name, side="", stack=stacks[name],
+                                 offset=offset, count=count))
+            offset += count
+        buckets.append(PrecondBucket(spec_a=spec_a, spec_g=spec_g,
+                                     linear_apply=lin,
+                                     entries=tuple(entries), total=offset))
+    return tuple(buckets)
+
+
+# ---------------------------------------------------------------------------
+# gather / scatter (pure reshapes + concatenates under jit)
+# ---------------------------------------------------------------------------
+
+def _flatten(x: Array, entry: Entry) -> Array:
+    """(*entry.stack, *core) → (count, *core)."""
+    core = x.shape[len(entry.stack):]
+    return x.reshape((entry.count,) + core)
+
+
+def _unflatten(x: Array, entry: Entry) -> Array:
+    """(count, *core) → (*entry.stack, *core)."""
+    return x.reshape(entry.stack + x.shape[1:])
+
+
+def gather(entries: Sequence[Entry], leaves: Dict[Tuple[str, str], Array]
+           ) -> Array:
+    """Stack per-entry arrays {(name, side): (*stack, *core)} into one
+    (total, *core) batch along the bucket axis."""
+    return jnp.concatenate(
+        [_flatten(leaves[(e.name, e.side)], e) for e in entries], axis=0)
+
+
+def scatter(entries: Sequence[Entry], batched: Array
+            ) -> Dict[Tuple[str, str], Array]:
+    """Split a (total, *core) bucket result back into per-entry arrays of
+    their original stack shapes."""
+    return {(e.name, e.side):
+            _unflatten(batched[e.offset:e.offset + e.count], e)
+            for e in entries}
+
+
+def gather_states(entries: Sequence[Entry],
+                  states: Dict[Tuple[str, str], KFactorState]
+                  ) -> KFactorState:
+    """Tree-wise gather of KFactorStates into one (total, …) state."""
+    return jax.tree_util.tree_map(
+        lambda *leaves: jnp.concatenate(
+            [_flatten(leaf, e) for e, leaf in zip(entries, leaves)], axis=0),
+        *(states[(e.name, e.side)] for e in entries))
+
+
+def scatter_states(entries: Sequence[Entry], batched: KFactorState
+                   ) -> Dict[Tuple[str, str], KFactorState]:
+    """Tree-wise split of a bucket state back to per-entry states."""
+    return {(e.name, e.side): jax.tree_util.tree_map(
+                lambda leaf, e=e: _unflatten(
+                    leaf[e.offset:e.offset + e.count], e), batched)
+            for e in entries}
+
+
+def describe(buckets: Sequence[FactorBucket]) -> str:
+    """One line per bucket — for logs / benchmarks."""
+    parts = []
+    for b in buckets:
+        parts.append(f"[d={b.spec.d} n={b.spec.n_stat} "
+                     f"mode={b.spec.mode.value} B={b.total} "
+                     f"taps={len(b.entries)}]")
+    return " ".join(parts)

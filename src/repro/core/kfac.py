@@ -36,7 +36,7 @@ from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import kfactor, policy, precond
+from repro.core import buckets, kfactor, policy, precond
 from repro.optim import adamw as _adamw
 from repro.optim import base as optbase
 
@@ -68,6 +68,7 @@ class KfacConfig:
     clip: float = 0.07              # global-norm clip on the update
     spectrum_continuation: bool = True
     use_kernels: bool = False       # route hot matmuls via kernels/ops.py
+    bucketed: bool = True           # cross-layer shape-class super-batching
     T_updt: int = 25
     T_inv: int = 250                # kfac / rkfac heavy period
     T_brand: int = 25               # B-variants light period
@@ -172,6 +173,16 @@ class Kfac:
             )
         self._fallback = _adamw.adamw(cfg.fallback_lr,
                                       weight_decay=cfg.fallback_wd)
+        # cross-layer shape-class buckets (static; resolved once here).
+        # Factor work and preconditioning each collapse to one batched
+        # launch per bucket instead of one per tap — O(#shape-classes)
+        # instead of O(#layers) launches on the hot path.
+        stacks = {n: t.stack for n, t in self.taps.items()}
+        lin = {n: t.linear_apply for n, t in self.taps.items()}
+        self.factor_buckets = buckets.build_factor_buckets(self.specs,
+                                                           stacks)
+        self.precond_buckets = buckets.build_precond_buckets(self.specs,
+                                                             stacks, lin)
 
     # -- state ------------------------------------------------------------
     def init(self, params) -> KfacState:
@@ -225,11 +236,15 @@ class Kfac:
         if not (do_light or do_heavy):
             return st
 
-        # Inverse-representation work (eigh/svd/qr-heavy) stays vmapped XLA.
+        # Inverse-representation work: the Brand light path routes its O(d)
+        # panel + QR through Pallas when kernels are on; the small
+        # eigh/svd-sized remainder stays in XLA.
         heavy = jnp.asarray(do_heavy)
+        use_k = self.cfg.use_kernels
 
         def one(s, x, k):
-            return kfactor.inverse_rep_step(spec, s, x, k, first, heavy)
+            return kfactor.inverse_rep_step(spec, s, x, k, first, heavy,
+                                            use_k)
 
         if nstack == 0:
             return one(st, X, key)
@@ -262,6 +277,91 @@ class Kfac:
                 continuation=cont, use_kernel=use_k)
         return jnp.swapaxes(S, -1, -2)       # back to (d_in, d_out) layout
 
+    # -- bucketed (cross-layer) pieces --------------------------------------
+    def _bucketed_factor_work(self, factors, acts, probe_grads, n_tokens,
+                              rng, first, do_stats, do_light, do_heavy):
+        """Factor updates as one batched launch group per shape-class
+        bucket: stats absorbs (EA SYRK), Brand panels + CholeskyQR2, and
+        heavy overwrites each run over the bucket's flat batch axis."""
+        states, X_all = {}, {}
+        for name in sorted(self.taps):
+            X_A, X_G = self._stats_factors(name, acts, probe_grads,
+                                           n_tokens)
+            X_all[(name, "A")], X_all[(name, "G")] = X_A, X_G
+            states[(name, "A")] = factors[name].A
+            states[(name, "G")] = factors[name].G
+        heavy = jnp.asarray(do_heavy)
+        use_k = self.cfg.use_kernels
+        bkeys = jax.random.split(rng, len(self.factor_buckets))
+        for bkey, bucket in zip(bkeys, self.factor_buckets):
+            if not kfactor.has_work(bucket.spec, do_stats, do_light,
+                                    do_heavy):
+                continue        # whole bucket is a no-op this step
+            st = buckets.gather_states(bucket.entries, states)
+            X = buckets.gather(bucket.entries, X_all)
+            if do_stats:
+                st = kfactor.stats_step(bucket.spec, st, X, first)
+            if do_light or do_heavy:
+                keys = jax.random.split(bkey, bucket.total)
+                st = kfactor.inverse_rep_step_batched(
+                    bucket.spec, st, X, keys, first, heavy, use_k)
+            states.update(buckets.scatter_states(bucket.entries, st))
+        return {name: TapState(A=states[(name, "A")],
+                               G=states[(name, "G")])
+                for name in self.taps}
+
+    def _bucketed_precondition(self, factors, grads, acts, probe_grads,
+                               phi):
+        """Preconditioned steps for every tap, one batched (fused) launch
+        per (A-spec, G-spec, apply-mode) bucket.  Returns {name: S} with S
+        in the tap's (…, d_in, d_out) parameter layout.
+
+        Everything is gathered and applied directly in *parameter layout*:
+        the inverse factors are symmetric, so  Ā⁻¹ gW Γ̄⁻¹  (the two-sided
+        application with the factor roles swapped) equals the transposed
+        textbook form  (Γ̄⁻¹ gWᵀ Ā⁻¹)ᵀ  without ever transposing.  This
+        matters: a transpose *feeding a concatenate* must materialize
+        (unlike the per-tap path, where XLA fuses it into the matmul), and
+        a bucket's J gather is tens of MB per step on real models.
+        """
+        cont = self.cfg.spectrum_continuation
+        use_k = self.cfg.use_kernels
+        out = {}
+        for bucket in self.precond_buckets:
+            ent = bucket.entries
+            key = lambda e: (e.name, "")
+            U_g = buckets.gather(ent, {key(e): factors[e.name].G.U
+                                       for e in ent})
+            D_g = buckets.gather(ent, {key(e): factors[e.name].G.D
+                                       for e in ent})
+            U_a = buckets.gather(ent, {key(e): factors[e.name].A.U
+                                       for e in ent})
+            D_a = buckets.gather(ent, {key(e): factors[e.name].A.D
+                                       for e in ent})
+            if bucket.linear_apply:
+                # Alg 8 with roles swapped:  S = (Ā⁻¹ A)(Gᵀ Γ̄⁻¹) — the
+                # raw (…, n, d) factors concatenate contiguously and the
+                # single post-gather transpose fuses into the matmul.
+                gfac = jnp.swapaxes(buckets.gather(ent, {
+                    key(e): probe_grads[e.name] for e in ent}),
+                    -1, -2).astype(jnp.float32)      # (B, d_out, n)
+                afac = jnp.swapaxes(buckets.gather(ent, {
+                    key(e): acts[e.name] for e in ent}),
+                    -1, -2).astype(jnp.float32)      # (B, d_in, n)
+                S = precond.precondition_linear_with_damping(
+                    afac, gfac, U_a, D_a, U_g, D_g, phi,
+                    continuation=cont, use_kernel=use_k)
+            else:
+                J = buckets.gather(ent, {
+                    key(e): get_path(grads, self.taps[e.name].param_path)
+                    for e in ent}).astype(jnp.float32)  # (B, d_in, d_out)
+                S = precond.precondition_with_damping(
+                    J, U_a, D_a, U_g, D_g, phi,
+                    continuation=cont, use_kernel=use_k)
+            out.update({name: Se for (name, _), Se
+                        in buckets.scatter(ent, S).items()})
+        return out
+
     # -- the update ---------------------------------------------------------
     def update(self, grads, state: KfacState, params, *, acts, probe_grads,
                n_tokens, rng, do_stats: bool, do_light: bool,
@@ -275,7 +375,11 @@ class Kfac:
         # 1) factor updates -------------------------------------------------
         factors = dict(state.factors)
         any_factor_work = do_stats or do_light or do_heavy
-        if any_factor_work:
+        if any_factor_work and cfg.bucketed:
+            factors = self._bucketed_factor_work(
+                factors, acts, probe_grads, n_tokens, rng, first,
+                do_stats, do_light, do_heavy)
+        elif any_factor_work:
             keys = jax.random.split(rng, 2 * len(self.taps))
             for i, name in enumerate(sorted(self.taps)):
                 X_A, X_G = self._stats_factors(name, acts, probe_grads,
@@ -289,20 +393,27 @@ class Kfac:
                 factors[name] = TapState(A=stA, G=stG)
 
         # 2) preconditioned updates for tapped params -----------------------
+        if cfg.bucketed:
+            S_all = self._bucketed_precondition(factors, grads, acts,
+                                                probe_grads, phi)
+        else:
+            S_all = {}
+            for name, t in self.taps.items():
+                gW = get_path(grads, t.param_path)
+                gfac = afac = None
+                if t.linear_apply:
+                    a = acts[name]
+                    g = probe_grads[name]
+                    afac = jnp.swapaxes(a, -1, -2).astype(jnp.float32)
+                    gfac = jnp.swapaxes(g, -1, -2).astype(jnp.float32)
+                S_all[name] = self._precondition(name, factors[name], gW,
+                                                 phi, g_factor=gfac,
+                                                 a_factor=afac)
         updates = grads  # start from grads; overwrite tapped leaves
         new_mom = dict(state.momentum) if state.momentum is not None else None
         for name, t in self.taps.items():
             W = get_path(params, t.param_path)
-            gW = get_path(grads, t.param_path)
-            gfac = afac = None
-            if t.linear_apply:
-                a = acts[name]
-                g = probe_grads[name]
-                afac = jnp.swapaxes(a, -1, -2).astype(jnp.float32)
-                gfac = jnp.swapaxes(g, -1, -2).astype(jnp.float32)
-            S = self._precondition(name, factors[name], gW, phi,
-                                   g_factor=gfac, a_factor=afac)
-            S = S + cfg.weight_decay * W.astype(jnp.float32)
+            S = S_all[name] + cfg.weight_decay * W.astype(jnp.float32)
             if new_mom is not None:
                 m = cfg.momentum * new_mom[name] + S
                 new_mom[name] = m

@@ -118,9 +118,14 @@ def ea_update_m_kernel(M: Array, X: Array, rho: float, first: Array) -> Array:
     return kops.ea_syrk(M, X, rho, first)
 
 
-def brand_step(spec: KFactorSpec, st: KFactorState, X: Array, first: Array
-               ) -> KFactorState:
+def brand_step(spec: KFactorSpec, st: KFactorState, X: Array, first: Array,
+               use_kernel: bool = False) -> KFactorState:
     """B-update (Alg 4): truncate to r then symmetric Brand with the EA term.
+
+    Stacked-native: st/X may carry leading stack axes (``first`` is the
+    global scalar flag) — a whole bucket of Brand factors steps as one
+    batched panel + CholeskyQR2 + eigh.  ``use_kernel`` routes the O(d)
+    panel and QR through Pallas (see ``brand.sym_brand_update``).
 
     On the first-ever stats batch the state is empty — initialize from the
     factor directly (exact, low-memory)."""
@@ -129,9 +134,10 @@ def brand_step(spec: KFactorSpec, st: KFactorState, X: Array, first: Array
         return KFactorState(U=U0, D=D0, M=st.M)
 
     def _update(_):
-        U, D = brand.ea_brand_step(st.U, st.D, X, spec.rho, spec.r)
-        if U.shape[1] > spec.width:   # r + n_stat exceeded d: re-truncate
-            U, D = U[:, :spec.width], D[:spec.width]
+        U, D = brand.ea_brand_step(st.U, st.D, X, spec.rho, spec.r,
+                                   use_kernel=use_kernel)
+        if U.shape[-1] > spec.width:  # r + n_stat exceeded d: re-truncate
+            U, D = U[..., :, :spec.width], D[..., :spec.width]
         return KFactorState(U=U, D=D, M=st.M)
 
     return jax.lax.cond(first, _init, _update, operand=None)
@@ -177,6 +183,24 @@ def light_correction(spec: KFactorSpec, st: KFactorState, key: Array
 # fused per-step transition: stats step + (scheduled) inverse-rep step
 # ---------------------------------------------------------------------------
 
+def has_work(spec: KFactorSpec, do_stats: bool, do_light: bool,
+             do_heavy: bool) -> bool:
+    """True iff this step's static flags actually touch the factor state.
+
+    Lets the bucketed optimizer skip whole no-op buckets (e.g. a pure-Brand
+    bucket on a stats-only step) instead of gathering, running identity
+    branches, and scattering — the per-tap unrolled graph gets the same
+    elision from XLA dead-code elimination, so skipping preserves parity.
+    """
+    if do_stats and spec.needs_m:
+        return True
+    if (do_light or do_heavy) and spec.mode in _HAS_BRAND:
+        return True
+    if do_heavy and spec.mode in (Mode.EVD, Mode.RSVD):
+        return True
+    return False
+
+
 def stats_step(spec: KFactorSpec, st: KFactorState, X: Array, first: Array
                ) -> KFactorState:
     """Absorb one incoming stats factor X into the EA (dense M if held).
@@ -190,8 +214,9 @@ def stats_step(spec: KFactorSpec, st: KFactorState, X: Array, first: Array
 
 
 def inverse_rep_step(spec: KFactorSpec, st: KFactorState, X: Array,
-                     key: Array, first: Array, heavy: Array) -> KFactorState:
-    """Scheduled inverse-representation update.
+                     key: Array, first: Array, heavy: Array,
+                     use_kernel: bool = False) -> KFactorState:
+    """Scheduled inverse-representation update (one 2-D factor).
 
     ``heavy`` selects the periodic heavy op for the mode (RSVD overwrite /
     EVD / correction); the light op is the Brand update (Brand modes) or a
@@ -204,16 +229,45 @@ def inverse_rep_step(spec: KFactorSpec, st: KFactorState, X: Array,
         return jax.lax.cond(heavy, lambda s: rsvd_overwrite(spec, s, key),
                             lambda s: s, st)
     if spec.mode is Mode.BRAND:
-        return brand_step(spec, st, X, first)
+        return brand_step(spec, st, X, first, use_kernel)
     if spec.mode is Mode.BRAND_RSVD:
-        st = brand_step(spec, st, X, first)
+        st = brand_step(spec, st, X, first, use_kernel)
         return jax.lax.cond(heavy, lambda s: rsvd_overwrite(spec, s, key),
                             lambda s: s, st)
     if spec.mode is Mode.BRAND_CORR:
-        st = brand_step(spec, st, X, first)
+        st = brand_step(spec, st, X, first, use_kernel)
         return jax.lax.cond(heavy, lambda s: light_correction(spec, s, key),
                             lambda s: s, st)
     raise ValueError(spec.mode)
+
+
+def inverse_rep_step_batched(spec: KFactorSpec, st: KFactorState, X: Array,
+                             keys: Array, first: Array, heavy: Array,
+                             use_kernel: bool = False) -> KFactorState:
+    """Bucket-level inverse-representation update: st/X carry one flat
+    batch axis (B, …) covering every factor of a shape-class bucket.
+
+    The Brand light work runs *stacked-native* — one batched panel +
+    CholeskyQR2 + eigh for the whole bucket — while the per-element heavy
+    ops (randomized subspaces / dense EVD, which consume per-element keys)
+    are vmapped inside a single scheduled branch, so the heavy path is one
+    launch group per bucket instead of one per tap.  ``keys``: (B, 2).
+    """
+    if spec.mode in _HAS_BRAND:
+        st = brand_step(spec, st, X, first, use_kernel)
+    if spec.mode is Mode.EVD:
+        overwrite = jax.vmap(lambda s: evd_overwrite(spec, s))
+        return jax.lax.cond(heavy, overwrite, lambda s: s, st)
+    if spec.mode is Mode.RSVD:
+        overwrite = jax.vmap(lambda s, k: rsvd_overwrite(spec, s, k))
+        return jax.lax.cond(heavy, overwrite, lambda s, k: s, st, keys)
+    if spec.mode is Mode.BRAND_RSVD:
+        overwrite = jax.vmap(lambda s, k: rsvd_overwrite(spec, s, k))
+        return jax.lax.cond(heavy, overwrite, lambda s, k: s, st, keys)
+    if spec.mode is Mode.BRAND_CORR:
+        correct = jax.vmap(lambda s, k: light_correction(spec, s, k))
+        return jax.lax.cond(heavy, correct, lambda s, k: s, st, keys)
+    return st
 
 
 # ---------------------------------------------------------------------------

@@ -27,14 +27,20 @@ def range_finder(matvec, d: int, k: int, key: Array, n_iter: int,
     """Orthonormal basis Q (d, k) approximately spanning range(M).
 
     ``matvec`` maps (d, k) → (d, k) (i.e. right-multiplication by M).
-    Power/subspace iteration with QR re-orthonormalization each pass —
-    the paper uses n_pwr-it = 4.
+    Power/subspace iteration with re-orthonormalization each pass — the
+    paper uses n_pwr-it = 4.  Orthonormalization is CholeskyQR2
+    (``kernels/ops.py::orthonormalize``): the same tall-skinny shape as
+    the Brand panel QR, so it shares the batched Pallas SYRK + apply
+    kernels on TPU and the shifted-Cholesky jnp oracle elsewhere.  The
+    range finder only needs *a* basis of range(Y) — near-zero columns on
+    rank-deficient directions are as good as Householder's arbitrary
+    orthonormal completion there.
     """
+    from repro.kernels import ops as kops
     omega = jax.random.normal(key, (d, k), dtype=dtype)
-    Y = matvec(omega)
-    Q, _ = jnp.linalg.qr(Y)
+    Q = kops.orthonormalize(matvec(omega))
     for _ in range(n_iter):
-        Q, _ = jnp.linalg.qr(matvec(Q))
+        Q = kops.orthonormalize(matvec(Q))
     return Q
 
 

@@ -46,6 +46,16 @@ def compress(g: Array, err: Array, q_prev: Optional[Array], cfg
         # warm start: deterministic basis (seeded per shape)
         key = jax.random.PRNGKey(m * 1315423911 + n)
         q_prev = jax.random.normal(key, (n, q))
+    # Orthonormalization stays Householder here, unlike the RS-KFAC range
+    # finder (core/rsvd.py, routed through kernels/ops.py::orthonormalize):
+    # PowerSGD measurably *relies* on QR's arbitrary orthonormal completion
+    # — when power iteration aligns the rank-q basis toward the top
+    # eigendirections, the invented orthogonal columns still pick up signal
+    # through Q = G2ᵀP, while a spectral factorization maps them to an
+    # exactly-null subspace and wastes the rank (rank-2 EF-SGD convergence
+    # regresses ~0.05 → 0.06 relative residual).  These (m, ≤8) panels sit
+    # far below the kernel pad-growth guard anyway, so there is no batched
+    # Pallas launch to share.
     P = G2 @ q_prev                                   # (m, q)
     for _ in range(cfg.n_power_iter):
         P, _ = jnp.linalg.qr(P)

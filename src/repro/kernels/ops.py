@@ -40,6 +40,7 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels import ea_syrk as _ea
 from repro.kernels import brand_panel as _bp
+from repro.kernels import cholqr as _cq
 from repro.kernels import lowrank_apply as _la
 from repro.kernels import precond_fused as _pf
 
@@ -111,6 +112,57 @@ def _pick_block(dim: int, preferred: int, quantum: int = _LANE) -> int:
 
 
 _FUSED_VMEM_BUDGET = 8 * 1024 * 1024  # conservative: leaves double-buffer room
+_SYRK_VMEM_BUDGET = 6 * 1024 * 1024   # accumulator + double-buffered operands
+
+
+def syrk_blocks(d: int, n: int) -> Tuple[int, int, int]:
+    """Shape-aware (bm, bn, bk) for the EA-SYRK launch over padded (d, n).
+
+    HBM traffic for the X row/column streams scales as 1/bm + 1/bn, so the
+    M tile is maximized first; the contraction depth bk (which only
+    amortizes accumulator init/writeback) then takes what is left of the
+    VMEM budget.  Replaces the old fixed 256/256/256 pick — small stacked
+    factors no longer get over-tiled and large ones no longer under-use
+    VMEM.  Recorded in bench ``derived`` output for trackability.
+    """
+    bm = bn = bk = _LANE
+    for pref_mn in (512, 256, 128):
+        bm = bn = _pick_block(d, pref_mn)
+        for pref_k in (512, 256, 128):
+            bk = _pick_block(n, pref_k)
+            # acc + M tile + out tile, plus double-buffered X row/col blocks
+            vmem = 4 * (3 * bm * bn + 2 * (bm + bn) * bk)
+            if vmem <= _SYRK_VMEM_BUDGET:
+                return bm, bn, bk
+    return bm, bn, bk
+
+
+def panel_blocks(d: int, r: int, n: int) -> int:
+    """Shape-aware row/contraction block for the Brand panel kernels over
+    padded (d, r, n): the (r, n) accumulator is resident, so bk takes the
+    remaining VMEM (double-buffered U and A stripes).  Replaces fixed 512."""
+    for pref in (512, 256, 128):
+        bk = _pick_block(d, pref)
+        vmem = 4 * (r * n + 2 * bk * (r + n))
+        if vmem <= _SYRK_VMEM_BUDGET:
+            return bk
+    return bk
+
+
+def cholqr_blocks(d: int, n: int) -> int:
+    """Shape-aware row/contraction block for the CholeskyQR2 kernels over
+    padded (d, n): the SYRK pass holds the (n, n) fp32 Gram accumulator
+    *and* its (n, n) output block (the apply pass's resident R⁻¹ + Q
+    stripe fits in the same envelope), plus double-buffered A stripes."""
+    for pref in (512, 256, 128):
+        bk = _pick_block(d, pref)
+        vmem = 4 * (2 * n * n + 2 * bk * 2 * n)
+        if vmem <= _SYRK_VMEM_BUDGET:
+            return bk
+    return bk
+
+
+_CHOLQR_MAX_N = 1024  # (n, n) fp32 Gram accumulator must fit VMEM
 
 
 def _fused_bm(pp: int, pd: int, pwg: int, pwa: int, bn: int):
@@ -157,8 +209,7 @@ def ea_syrk(M: Array, X: Array, rho, first) -> Array:
     firstf = jnp.asarray(first, jnp.float32)
     keep = rho * (1.0 - firstf)
     coef = 1.0 - keep
-    bm = bn = _pick_block(pd, 256)
-    bk = _pick_block(pn, 256)
+    bm, bn, bk = syrk_blocks(pd, pn)
     out = _ea.ea_syrk_batched_pallas(Mp, Xp, keep, coef, bm=bm, bn=bn, bk=bk,
                                      interpret=(mode == "interpret"))
     return out[..., :d, :d].reshape(stack + (d, d))
@@ -179,11 +230,44 @@ def brand_panel(U: Array, A: Array):
                   _round_up(n, _LANE))
     Up = _pad_tail(Ub, pd, pr)
     Ap = _pad_tail(Ab, pd, pn)
-    bk = _pick_block(pd, 512)
+    bk = panel_blocks(pd, pr, pn)
     C, P = _bp.brand_panel_batched_pallas(Up, Ap, bk=bk,
                                           interpret=(mode == "interpret"))
     return (C[..., :r, :n].reshape(stack + (r, n)),
             P[..., :d, :n].reshape(stack + (d, n)))
+
+
+def cholqr2(A: Array) -> Tuple[Array, Array]:
+    """Tall-skinny QR  A ≈ Q R  by the CholeskyQR2 iteration with a
+    clamped spectral root (one batched SYRK + apply launch pair per
+    pass; the (n, n) root stays in XLA).  A: (*stack, d, n) → Q (*stack,
+    d, n) in A.dtype, R (*stack, n, n) symmetric psd float32.  QᵀQ is a
+    rank-k projector to machine precision for any fp32 input — sub-noise-
+    floor directions map to an exactly-null subspace — and Q R
+    reconstructs the retained spectral content of A (exact when nothing
+    is clamped).
+    """
+    mode = _mode()
+    d, n = A.shape[-2:]
+    if (mode == "ref" or _round_up(n, _LANE) > _CHOLQR_MAX_N
+            or not _pad_ok((d, _LANE), (n, _LANE))):
+        return ref.cholqr2(A)
+    stack = _common_stack((A, 2))
+    Ab = _flat(A, 2, stack).astype(jnp.float32)
+    pd, pn = _round_up(d, _LANE), _round_up(n, _LANE)
+    Ap = _pad_tail(Ab, pd, pn)
+    bk = cholqr_blocks(pd, pn)
+    Q, R = _cq.cholqr2_batched_pallas(Ap, n_true=n, bk=bk,
+                                      interpret=(mode == "interpret"))
+    return (Q[..., :d, :n].astype(A.dtype).reshape(stack + (d, n)),
+            R[..., :n, :n].reshape(stack + (n, n)))
+
+
+def orthonormalize(Y: Array) -> Array:
+    """Orthonormal basis of range(Y) via CholeskyQR2 — the Q-only entry
+    point shared by the RSVD range finder and the PowerSGD compressor
+    (both tall-skinny, both previously Householder ``jnp.linalg.qr``)."""
+    return cholqr2(Y)[0]
 
 
 def lowrank_apply(X: Array, U: Array, s: Array, lam) -> Array:

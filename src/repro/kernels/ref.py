@@ -60,6 +60,91 @@ def lowrank_apply(X: Array, U: Array, s: Array, lam) -> Array:
     return T @ _mt(U) + X / _scal(lam, X)
 
 
+def syrk_tn(A: Array) -> Array:
+    """Gram matrix G = AᵀA in float32 (the CholeskyQR SYRK pass)."""
+    A32 = A.astype(jnp.float32)
+    return _mt(A32) @ A32
+
+
+def rinv_apply(A: Array, Rinv: Array) -> Array:
+    """Q = A @ R⁻¹ (the CholeskyQR-style row-parallel apply, with the
+    tiny (n, n) inverse root precomputed in XLA)."""
+    return (A.astype(jnp.float32) @ Rinv).astype(A.dtype)
+
+
+#: pass-1 spectral floor, ×tr(G): Gram eigenvalues below ~64·eps_fp32 of
+#: the trace are unresolvable in an fp32 AᵀA (the products already lost
+#: them to rounding) — treat them as exact zeros instead of letting the
+#: inverse root inflate noise.  In σ terms this keeps directions down to
+#: ~3e-3 of ‖A‖_F, far below the K-FAC damping floor (φ·λ_max, φ≈0.1).
+CHOLQR_FLOOR_RESOLVE = 64 * 1.19e-7
+#: pass-2 spectral floor, ×λ_max(G): after pass 1 every retained
+#: direction has Gram eigenvalue ≈ 1 and every suppressed one ≈ 0, so
+#: anything below a quarter of the max is pass-1 residue to keep nulled.
+CHOLQR_FLOOR_REFINE = 0.25
+
+
+def gram_inv_sqrt(G: Array, floor_rel: float, floor_mode: str
+                  ) -> Tuple[Array, Array]:
+    """Clamped spectral root of a Gram matrix: (R, B) with R = V√Λ̂Vᵀ and
+    B = VΛ̂^{-1/2}Vᵀ, where Λ̂ zeroes every eigenvalue below
+    floor_rel · tr(G) (``floor_mode="tr"``) or floor_rel · λ_max
+    (``"max"``).
+
+    This replaces the textbook Cholesky of CholeskyQR2: a raw (or gently
+    shifted) Cholesky either goes negative or — worse — *renormalizes*
+    sub-noise-floor directions into unit-norm garbage, while the clamp
+    maps them to an exactly-null subspace that stays null through the
+    refinement pass.  B and R are symmetric (not triangular); no consumer
+    needs triangularity — the Brand update only forms products with R.
+
+    Zero padding is exact: eigenvectors with nonzero eigenvalue of the
+    block-diagonal padded Gram live entirely in the unpadded block, and
+    both floors (trace / max) ignore zero padding.  Shared by the jnp
+    oracle and the Pallas orchestration in ``cholqr.py`` — O(n³) on a
+    tiny operand, XLA.
+    """
+    vals, vecs = jnp.linalg.eigh(G)                   # ascending
+    if floor_mode == "tr":
+        scale = jnp.trace(G, axis1=-2, axis2=-1)
+    elif floor_mode == "max":
+        scale = vals[..., -1]
+    else:
+        raise ValueError(floor_mode)
+    keep = vals > floor_rel * scale[..., None] + 1e-30
+    safe = jnp.where(keep, vals, 1.0)
+    inv = jnp.where(keep, 1.0 / jnp.sqrt(safe), 0.0)
+    sq = jnp.where(keep, jnp.sqrt(safe), 0.0)
+    R = (vecs * sq[..., None, :]) @ _mt(vecs)
+    B = (vecs * inv[..., None, :]) @ _mt(vecs)
+    return R, B
+
+
+def cholqr2(A: Array) -> Tuple[Array, Array]:
+    """Tall-skinny QR by the CholeskyQR2 iteration with a clamped
+    spectral root as the small factorization:  A ≈ Q R with Q (…, d, n)
+    spanning an orthonormal-or-null subspace (QᵀQ is a rank-k projector
+    to machine precision for *any* fp32 input, however ill-conditioned),
+    R (…, n, n) symmetric psd, float32.
+
+    Two passes of [Gram SYRK → clamped inverse root → apply], exactly the
+    CholeskyQR2 data flow — both O(d·n²) steps are the Pallas kernel
+    pair.  Directions whose Gram eigenvalue sits below the fp32
+    resolvability floor are mapped to an exactly-null subspace (they were
+    already destroyed by rounding when AᵀA was formed; a Cholesky would
+    renormalize that noise into garbage basis vectors).  Q R reconstructs
+    the retained spectral content of A: exact (up to fp) when nothing is
+    clamped, and otherwise within ~√floor · ‖A‖_F — far below the K-FAC
+    damping floor.
+    """
+    A32 = A.astype(jnp.float32)
+    R1, B1 = gram_inv_sqrt(syrk_tn(A32), CHOLQR_FLOOR_RESOLVE, "tr")
+    Q0 = rinv_apply(A32, B1)
+    R2, B2 = gram_inv_sqrt(syrk_tn(Q0), CHOLQR_FLOOR_REFINE, "max")
+    Q = rinv_apply(Q0, B2).astype(A.dtype)
+    return Q, R2 @ R1
+
+
 def precond_fused(J: Array, U_g: Array, s_g: Array, lam_g,
                   U_a: Array, s_a: Array, lam_a) -> Array:
     """Fused two-sided application  S = Γ̄⁻¹ J Ā⁻¹  (paper Alg 1, both
