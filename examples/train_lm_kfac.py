@@ -44,6 +44,10 @@ def main():
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--optimizer", default="bkfac",
                     choices=list(policy_lib.VARIANTS))
+    ap.add_argument("--stagger", action="store_true",
+                    help="phase heavy factor work across the T_inv window "
+                         "(flat per-step cost instead of periodic spikes)")
+    ap.add_argument("--stagger-splits", type=int, default=4)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
     args = ap.parse_args()
 
@@ -55,8 +59,12 @@ def main():
         lr=optbase.constant(0.02), damping_phi=optbase.constant(0.1),
         weight_decay=1e-4, clip=0.5,
         T_updt=2, T_inv=10, T_brand=2, T_rsvd=10, T_corct=10,
+        stagger=args.stagger, stagger_splits=args.stagger_splits,
         fallback_lr=optbase.constant(3e-3))
     opt = kfac_lib.Kfac(kcfg, lm.taps)
+    sched = opt.scheduler()
+    if args.stagger:
+        print(f"scheduler: {sched.describe()}")
 
     stream = TokenStream(vocab=arch.vocab, batch=args.batch,
                          seq_len=args.seq, seed=0)
@@ -73,15 +81,15 @@ def main():
         print(f"resumed from checkpoint step {start}")
     k0 = 0 if start is None else start + 1
 
-    step_fn = jax.jit(loop.make_kfac_step(lm.loss_fn, opt,
-                                          n_tokens=args.batch * args.seq),
-                      static_argnames=("do_stats", "do_light", "do_heavy"))
+    step_fn = jax.jit(loop.make_scheduled_kfac_step(
+                          lm.loss_fn, opt, n_tokens=args.batch * args.seq),
+                      static_argnames=("work",))
     ck = ckpt.AsyncCheckpointer(args.ckpt_dir, keep=2)
     t0 = time.time()
     losses = []
     for k in range(k0, args.steps):
         batch = stream.batch_at(k)
-        state, loss = step_fn(state, batch, **kcfg.flags(k))
+        state, loss = step_fn(state, batch, sched.work(k))
         losses.append(float(loss))
         if k % 10 == 0:
             print(f"step {k:4d}  loss {float(loss):.4f}  "

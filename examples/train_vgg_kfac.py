@@ -29,6 +29,10 @@ def main():
     ap.add_argument("--batch", type=int, default=128)
     ap.add_argument("--preset", default="small",
                     choices=("small", "paper"))
+    ap.add_argument("--stagger", action="store_true",
+                    help="phase heavy factor work across the T_inv window "
+                         "(flat per-step cost instead of periodic spikes)")
+    ap.add_argument("--stagger-splits", type=int, default=4)
     args = ap.parse_args()
 
     if args.preset == "paper":
@@ -47,8 +51,12 @@ def main():
         damping_phi=optbase.paper_damping_schedule(steps_per_epoch=50),
         weight_decay=7e-4, clip=0.5,
         T_updt=5, T_inv=25, T_brand=5, T_rsvd=25, T_corct=25,
+        stagger=args.stagger, stagger_splits=args.stagger_splits,
         fallback_lr=optbase.constant(3e-3))
     opt = kfac_lib.Kfac(kcfg, taps)
+    # run_kfac_training drives the work scheduler (staggered iff
+    # cfg.stagger); pass mesh=/curvature_axis= there to also shard the
+    # factor work across a device mesh (docs/distributed.md)
 
     stream = ImageStream(batch=args.batch, seed=0)
     batches = [stream.batch_at(i) for i in range(args.steps)]

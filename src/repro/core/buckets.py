@@ -178,6 +178,59 @@ def scatter_states(entries: Sequence[Entry], batched: KFactorState
             for e in entries}
 
 
+# ---------------------------------------------------------------------------
+# shard-aware layout: round-robin slot → device assignment (KAISA-style)
+# ---------------------------------------------------------------------------
+#
+# The distributed curvature engine partitions a bucket's flat batch axis
+# across the mesh's curvature axis.  Assignment is round-robin at slot
+# granularity — slot s lives on device s % n at local row s // n — so
+# consecutive slots (which usually belong to one stacked tap) spread
+# across devices and every device gets an equal ceil(total/n) share of
+# every bucket.  The helpers below are pure index bookkeeping; the data
+# movement they imply is a single static `take` per gather/scatter.
+
+def padded_total(total: int, n: int) -> int:
+    """Bucket batch padded to a multiple of the device count."""
+    return -(-total // n) * n
+
+
+def shard_perm(total: int, n: int):
+    """Index vector placing slots device-major: position d*m + k holds
+    slot (k*n + d) % total — round-robin assignment, with the pad tail
+    wrapping onto real slots so padding always computes on well-formed
+    (discarded) operands rather than zeros."""
+    m = padded_total(total, n) // n
+    return [(k * n + d) % total for d in range(n) for k in range(m)]
+
+
+def shard_unperm(total: int, n: int):
+    """Inverse map: position of slot s in the device-major layout."""
+    m = padded_total(total, n) // n
+    return [(s % n) * m + s // n for s in range(total)]
+
+
+def slot_device(slot: int, n: int) -> int:
+    """Owning device of a bucket slot under the round-robin assignment."""
+    return slot % n
+
+
+def localize_ranges(ranges, total: int, n: int):
+    """Global heavy slot ranges → the per-device local row ranges (equal
+    on every device — the SPMD requirement).  Needs each range to start
+    at a multiple of ``n`` and end at a multiple of ``n`` or at the
+    bucket end (the scheduler's ``align=n`` contract); rows past
+    ``total`` fall on wrapped pad slots whose results are discarded."""
+    local = []
+    for lo, hi in ranges:
+        if lo % n != 0 or (hi % n != 0 and hi != total):
+            raise ValueError(
+                f"heavy range ({lo}, {hi}) not aligned to the curvature "
+                f"mesh size {n}; build the Scheduler with align={n}")
+        local.append((lo // n, -(-hi // n)))
+    return tuple(local)
+
+
 def describe(buckets: Sequence[FactorBucket]) -> str:
     """One line per bucket — for logs / benchmarks."""
     parts = []

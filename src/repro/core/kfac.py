@@ -16,11 +16,16 @@ layers / experts) the model
 functional replacement for PyTorch's forward/backward hooks.
 
 Scheduling (paper §2.2/§6) is *static*: the trainer calls ``update`` with
-python-bool flags (do_stats / do_light / do_heavy) derived from the step
-number, so each step variant compiles to a lean HLO (production pattern;
-also keeps the dry-run rooflines honest).
+a hashable :class:`repro.core.schedule.StepWork` mask derived from the
+step number, so each step variant compiles to a lean HLO (production
+pattern; also keeps the dry-run rooflines honest).  ``stats``/``light``
+are global booleans; heavy work is *per factor bucket* as static slot
+ranges, which is what lets the scheduler stagger heavy overwrites across
+the T_inv window (constant small per-step cost instead of a spike) and
+lets the distributed curvature engine shard them across the mesh.  The
+legacy three python bools are still accepted and are converted to a
+uniform mask:
 
-Step variants per paper variant, at step k:
   do_stats  = k % T_updt == 0                      (EA absorb, all variants)
   do_light  = k % T_brand == 0   (B-variants: Brand update;   else no-op)
   do_heavy  = k % T_inv  == 0    (kfac: EVD, rkfac: RSVD)
@@ -36,7 +41,7 @@ from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import buckets, kfactor, policy, precond
+from repro.core import buckets, kfactor, policy, precond, schedule
 from repro.optim import adamw as _adamw
 from repro.optim import base as optbase
 
@@ -74,25 +79,17 @@ class KfacConfig:
     T_brand: int = 25               # B-variants light period
     T_rsvd: int = 250               # brkfac overwrite period
     T_corct: int = 500              # bkfacc correction period
+    stagger: bool = False           # phase heavy work across the T window
+    stagger_splits: int = 1         # max entry-aligned chunks per bucket
     # fallback optimizer for non-tapped params
     fallback_lr: optbase.Schedule = optbase.constant(1e-3)
     fallback_wd: float = 0.0
 
     def flags(self, step: int) -> Dict[str, bool]:
-        """Static step-variant flags for python-level dispatch."""
-        v = self.policy.variant
-        do_stats = step % self.T_updt == 0
-        if v in ("kfac", "rkfac"):
-            return dict(do_stats=do_stats, do_light=False,
-                        do_heavy=step % self.T_inv == 0)
-        do_light = step % self.T_brand == 0
-        if v == "brkfac":
-            return dict(do_stats=do_stats, do_light=do_light,
-                        do_heavy=step % self.T_rsvd == 0)
-        if v == "bkfacc":
-            return dict(do_stats=do_stats, do_light=do_light,
-                        do_heavy=step % self.T_corct == 0)
-        return dict(do_stats=do_stats, do_light=do_light, do_heavy=False)
+        """Static step-variant flags for python-level dispatch (legacy
+        three-bool view; the variant → heavy-period mapping lives in one
+        table in core/policy.py, see schedule.legacy_flags)."""
+        return schedule.legacy_flags(self, step)
 
 
 class TapState(NamedTuple):
@@ -103,6 +100,9 @@ class TapState(NamedTuple):
 class KfacState(NamedTuple):
     step: Array
     n_stats: Array               # how many stats batches absorbed
+    phase: Array                 # step mod schedule cycle — lets an
+                                 # elastic restart re-derive the staggered
+                                 # work masks without the global step
     factors: Dict[str, TapState]
     momentum: Any                # tree over tapped params (or None)
     fallback: Any                # AdamW state over non-tapped params
@@ -153,18 +153,21 @@ def _untapped_mask(params, taps):
 # the optimizer
 # ---------------------------------------------------------------------------
 
-def _vmap_n(fn, n):
-    for _ in range(n):
-        fn = jax.vmap(fn)
-    return fn
-
-
 class Kfac:
-    """K-FAC optimizer over a tapped model. Not a pytree — holds statics."""
+    """K-FAC optimizer over a tapped model. Not a pytree — holds statics.
 
-    def __init__(self, cfg: KfacConfig, taps: Dict[str, TapInfo]):
+    ``curvature`` (optional) is a distributed curvature engine (see
+    ``repro.distributed.curvature.CurvatureEngine``) that shards each
+    factor bucket's batch axis across a mesh axis; when attached, the
+    bucketed factor work is delegated to it.  Duck-typed so core never
+    imports the distributed package.
+    """
+
+    def __init__(self, cfg: KfacConfig, taps: Dict[str, TapInfo],
+                 curvature: Optional[Any] = None):
         self.cfg = cfg
         self.taps = dict(taps)
+        self.curvature = curvature
         self.specs = {}
         for name, t in self.taps.items():
             self.specs[name] = dict(
@@ -183,6 +186,27 @@ class Kfac:
                                                            stacks)
         self.precond_buckets = buckets.build_precond_buckets(self.specs,
                                                              stacks, lin)
+        # (name, side) → (bucket index, slot offset, slot count): the
+        # per-tap path reads its heavy mask from the same bucket-indexed
+        # StepWork the bucketed path consumes — one flag plumbing.
+        self._slot = {}
+        for bi, b in enumerate(self.factor_buckets):
+            for e in b.entries:
+                self._slot[(e.name, e.side)] = (bi, e.offset, e.count)
+        self._cycle = self.scheduler().cycle
+
+    def scheduler(self, **kw) -> schedule.Scheduler:
+        """A work scheduler over this optimizer's factor buckets; pass
+        ``align=engine.n_devices`` when a curvature engine is attached so
+        staggered chunks stay SPMD-uniform across the mesh."""
+        if "align" not in kw and self.curvature is not None:
+            kw["align"] = self.curvature.n_devices
+        return schedule.Scheduler(self.cfg, self.factor_buckets, **kw)
+
+    def uniform_work(self, do_stats: bool, do_light: bool, do_heavy: bool
+                     ) -> schedule.StepWork:
+        return schedule.uniform_work(do_stats, do_light, do_heavy,
+                                     self.factor_buckets)
 
     # -- state ------------------------------------------------------------
     def init(self, params) -> KfacState:
@@ -205,6 +229,7 @@ class Kfac:
         fb = self._fallback.init(params)
         return KfacState(step=jnp.zeros((), jnp.int32),
                          n_stats=jnp.zeros((), jnp.int32),
+                         phase=jnp.zeros((), jnp.int32),
                          factors=factors, momentum=mom, fallback=fb)
 
     # -- per-tap pieces -----------------------------------------------------
@@ -223,36 +248,28 @@ class Kfac:
         return X_A, X_G
 
     def _factor_update(self, name, side, st, X, key, first,
-                       do_stats, do_light, do_heavy):
+                       stats, light, heavy_b):
+        """Per-tap factor update (comparison path): the tap's own stack is
+        flattened into a batch of prod(stack) factors and stepped through
+        the SAME per-bucket program the bucketed path runs
+        (``kfactor.bucket_factor_step``) — one flag/mask plumbing for
+        both paths, one launch per tap per side here.  ``heavy_b`` is a
+        static python bool (all-or-nothing per tap: scheduler chunks are
+        entry-aligned, so a tap's slots always share a phase)."""
         spec = self.specs[name][side]
         stack = self.taps[name].stack
-        nstack = len(stack)
-
-        # EA stats absorb: stacked-native — one batched SYRK launch covers
-        # the whole layer/expert stack (no vmap-over-2D fallback).
-        if do_stats:
-            st = kfactor.stats_step(spec, st, X, first)
-
-        if not (do_light or do_heavy):
-            return st
-
-        # Inverse-representation work: the Brand light path routes its O(d)
-        # panel + QR through Pallas when kernels are on; the small
-        # eigh/svd-sized remainder stays in XLA.
-        heavy = jnp.asarray(do_heavy)
-        use_k = self.cfg.use_kernels
-
-        def one(s, x, k):
-            return kfactor.inverse_rep_step(spec, s, x, k, first, heavy,
-                                            use_k)
-
-        if nstack == 0:
-            return one(st, X, key)
-        n_keys = 1
+        count = 1
         for dim in stack:
-            n_keys *= int(dim)
-        keys = jax.random.split(key, n_keys).reshape(stack + (2,))
-        return _vmap_n(one, nstack)(st, X, keys)
+            count *= int(dim)
+        flat = jax.tree_util.tree_map(
+            lambda x: x.reshape((count,) + x.shape[len(stack):]), st)
+        Xf = X.reshape((count,) + X.shape[len(stack):])
+        keys = jax.random.split(key, count)
+        flat = kfactor.bucket_factor_step(
+            spec, flat, Xf, keys, first, stats, light,
+            ((0, count),) if heavy_b else (), self.cfg.use_kernels)
+        return jax.tree_util.tree_map(
+            lambda x: x.reshape(stack + x.shape[1:]), flat)
 
     def _precondition(self, name, st: TapState, grad_w, phi,
                       g_factor=None, a_factor=None):
@@ -278,11 +295,11 @@ class Kfac:
         return jnp.swapaxes(S, -1, -2)       # back to (d_in, d_out) layout
 
     # -- bucketed (cross-layer) pieces --------------------------------------
-    def _bucketed_factor_work(self, factors, acts, probe_grads, n_tokens,
-                              rng, first, do_stats, do_light, do_heavy):
-        """Factor updates as one batched launch group per shape-class
-        bucket: stats absorbs (EA SYRK), Brand panels + CholeskyQR2, and
-        heavy overwrites each run over the bucket's flat batch axis."""
+    def collect_factor_operands(self, factors, acts, probe_grads,
+                                n_tokens):
+        """Per-(tap, side) state/stats-factor dicts in bucket-entry keying
+        — shared by the replicated bucketed path and the distributed
+        curvature engine."""
         states, X_all = {}, {}
         for name in sorted(self.taps):
             X_A, X_G = self._stats_factors(name, acts, probe_grads,
@@ -290,25 +307,46 @@ class Kfac:
             X_all[(name, "A")], X_all[(name, "G")] = X_A, X_G
             states[(name, "A")] = factors[name].A
             states[(name, "G")] = factors[name].G
-        heavy = jnp.asarray(do_heavy)
-        use_k = self.cfg.use_kernels
-        bkeys = jax.random.split(rng, len(self.factor_buckets))
-        for bkey, bucket in zip(bkeys, self.factor_buckets):
-            if not kfactor.has_work(bucket.spec, do_stats, do_light,
-                                    do_heavy):
-                continue        # whole bucket is a no-op this step
-            st = buckets.gather_states(bucket.entries, states)
-            X = buckets.gather(bucket.entries, X_all)
-            if do_stats:
-                st = kfactor.stats_step(bucket.spec, st, X, first)
-            if do_light or do_heavy:
-                keys = jax.random.split(bkey, bucket.total)
-                st = kfactor.inverse_rep_step_batched(
-                    bucket.spec, st, X, keys, first, heavy, use_k)
-            states.update(buckets.scatter_states(bucket.entries, st))
+        return states, X_all
+
+    def repack_factors(self, states) -> Dict[str, TapState]:
         return {name: TapState(A=states[(name, "A")],
                                G=states[(name, "G")])
                 for name in self.taps}
+
+    def _bucketed_factor_work(self, factors, acts, probe_grads, n_tokens,
+                              rng, first, work: schedule.StepWork,
+                              bucket_step=None):
+        """Factor updates as one batched launch group per shape-class
+        bucket: stats absorbs (EA SYRK), Brand panels + CholeskyQR2, and
+        the scheduled heavy slot ranges each run over the bucket's flat
+        batch axis.
+
+        ``bucket_step(bi, bucket, st, X, keys)`` overrides the inner
+        per-bucket program (the distributed curvature engine substitutes
+        its shard_map-wrapped one); the surrounding loop — operand
+        collection, no-op skip, gather, per-slot key split, scatter —
+        exists ONLY here, so the sharded path can never diverge from the
+        replicated one structurally."""
+        if bucket_step is None:
+            def bucket_step(bi, bucket, st, X, keys):
+                return kfactor.bucket_factor_step(
+                    bucket.spec, st, X, keys, first, work.stats,
+                    work.light, work.heavy[bi], self.cfg.use_kernels)
+        states, X_all = self.collect_factor_operands(factors, acts,
+                                                     probe_grads, n_tokens)
+        bkeys = jax.random.split(rng, len(self.factor_buckets))
+        for bi, (bkey, bucket) in enumerate(zip(bkeys,
+                                                self.factor_buckets)):
+            if not kfactor.has_work(bucket.spec, work.stats, work.light,
+                                    bool(work.heavy[bi])):
+                continue        # whole bucket is a no-op this step
+            st = buckets.gather_states(bucket.entries, states)
+            X = buckets.gather(bucket.entries, X_all)
+            keys = jax.random.split(bkey, bucket.total)
+            st = bucket_step(bi, bucket, st, X, keys)
+            states.update(buckets.scatter_states(bucket.entries, st))
+        return self.repack_factors(states)
 
     def _bucketed_precondition(self, factors, grads, acts, probe_grads,
                                phi):
@@ -364,32 +402,45 @@ class Kfac:
 
     # -- the update ---------------------------------------------------------
     def update(self, grads, state: KfacState, params, *, acts, probe_grads,
-               n_tokens, rng, do_stats: bool, do_light: bool,
-               do_heavy: bool):
-        """One optimizer step.  Flags are PYTHON bools (static)."""
+               n_tokens, rng, work: Optional[schedule.StepWork] = None,
+               do_stats: Optional[bool] = None,
+               do_light: Optional[bool] = None,
+               do_heavy: Optional[bool] = None):
+        """One optimizer step.  ``work`` is a static, hashable StepWork
+        mask (jit with ``static_argnames=("work",)``); the legacy three
+        python bools are accepted as a shim and converted to the
+        equivalent uniform (spiky) mask."""
         cfg = self.cfg
+        if work is None:
+            work = self.uniform_work(bool(do_stats), bool(do_light),
+                                     bool(do_heavy))
         first = state.n_stats == 0
         phi = cfg.damping_phi(state.step)
         lr = cfg.lr(state.step)
 
         # 1) factor updates -------------------------------------------------
         factors = dict(state.factors)
-        any_factor_work = do_stats or do_light or do_heavy
-        if any_factor_work and cfg.bucketed:
+        if work.any and self.curvature is not None and cfg.bucketed:
+            factors = self.curvature.factor_work(
+                self, factors, acts, probe_grads, n_tokens, rng, first,
+                work)
+        elif work.any and cfg.bucketed:
             factors = self._bucketed_factor_work(
-                factors, acts, probe_grads, n_tokens, rng, first,
-                do_stats, do_light, do_heavy)
-        elif any_factor_work:
+                factors, acts, probe_grads, n_tokens, rng, first, work)
+        elif work.any:
             keys = jax.random.split(rng, 2 * len(self.taps))
             for i, name in enumerate(sorted(self.taps)):
                 X_A, X_G = self._stats_factors(name, acts, probe_grads,
                                                n_tokens)
+                heavy = {side: work.entry_heavy(*self._slot[(name, side)])
+                         for side in ("A", "G")}
                 stA = self._factor_update(name, "A", factors[name].A, X_A,
-                                          keys[2 * i], first,
-                                          do_stats, do_light, do_heavy)
+                                          keys[2 * i], first, work.stats,
+                                          work.light, heavy["A"])
                 stG = self._factor_update(name, "G", factors[name].G, X_G,
                                           keys[2 * i + 1], first,
-                                          do_stats, do_light, do_heavy)
+                                          work.stats, work.light,
+                                          heavy["G"])
                 factors[name] = TapState(A=stA, G=stG)
 
         # 2) preconditioned updates for tapped params -----------------------
@@ -439,7 +490,8 @@ class Kfac:
 
         new_state = KfacState(
             step=state.step + 1,
-            n_stats=state.n_stats + jnp.asarray(do_stats, jnp.int32),
+            n_stats=state.n_stats + jnp.asarray(work.stats, jnp.int32),
+            phase=(state.phase + 1) % jnp.asarray(self._cycle, jnp.int32),
             factors=factors,
             momentum=new_mom,
             fallback=fb_state,

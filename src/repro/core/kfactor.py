@@ -183,6 +183,14 @@ def light_correction(spec: KFactorSpec, st: KFactorState, key: Array
 # fused per-step transition: stats step + (scheduled) inverse-rep step
 # ---------------------------------------------------------------------------
 
+def has_heavy_op(spec: KFactorSpec) -> bool:
+    """True iff the mode has a periodic heavy op (EVD / RSVD overwrite /
+    correction) — pure BRAND maintains its inverse rep with light work
+    only, so the scheduler never assigns it a heavy phase."""
+    return spec.mode in (Mode.EVD, Mode.RSVD, Mode.BRAND_RSVD,
+                         Mode.BRAND_CORR)
+
+
 def has_work(spec: KFactorSpec, do_stats: bool, do_light: bool,
              do_heavy: bool) -> bool:
     """True iff this step's static flags actually touch the factor state.
@@ -196,7 +204,7 @@ def has_work(spec: KFactorSpec, do_stats: bool, do_light: bool,
         return True
     if (do_light or do_heavy) and spec.mode in _HAS_BRAND:
         return True
-    if do_heavy and spec.mode in (Mode.EVD, Mode.RSVD):
+    if do_heavy and has_heavy_op(spec):
         return True
     return False
 
@@ -241,32 +249,49 @@ def inverse_rep_step(spec: KFactorSpec, st: KFactorState, X: Array,
     raise ValueError(spec.mode)
 
 
-def inverse_rep_step_batched(spec: KFactorSpec, st: KFactorState, X: Array,
-                             keys: Array, first: Array, heavy: Array,
-                             use_kernel: bool = False) -> KFactorState:
-    """Bucket-level inverse-representation update: st/X carry one flat
-    batch axis (B, …) covering every factor of a shape-class bucket.
-
-    The Brand light work runs *stacked-native* — one batched panel +
-    CholeskyQR2 + eigh for the whole bucket — while the per-element heavy
-    ops (randomized subspaces / dense EVD, which consume per-element keys)
-    are vmapped inside a single scheduled branch, so the heavy path is one
-    launch group per bucket instead of one per tap.  ``keys``: (B, 2).
-    """
-    if spec.mode in _HAS_BRAND:
-        st = brand_step(spec, st, X, first, use_kernel)
+def heavy_overwrite_batched(spec: KFactorSpec, st: KFactorState,
+                            keys: Array) -> KFactorState:
+    """Unconditional heavy op over one flat batch axis (B, …): dense EVD /
+    RSVD overwrite / Alg-6 correction, vmapped so the whole (sub-)bucket
+    is one launch group.  The caller decides *whether* (and on *which
+    slots*) this fires — scheduling is static, so no ``lax.cond`` wrapper
+    ever enters the graph on steps (or slots) that skip heavy work."""
     if spec.mode is Mode.EVD:
-        overwrite = jax.vmap(lambda s: evd_overwrite(spec, s))
-        return jax.lax.cond(heavy, overwrite, lambda s: s, st)
-    if spec.mode is Mode.RSVD:
-        overwrite = jax.vmap(lambda s, k: rsvd_overwrite(spec, s, k))
-        return jax.lax.cond(heavy, overwrite, lambda s, k: s, st, keys)
-    if spec.mode is Mode.BRAND_RSVD:
-        overwrite = jax.vmap(lambda s, k: rsvd_overwrite(spec, s, k))
-        return jax.lax.cond(heavy, overwrite, lambda s, k: s, st, keys)
+        return jax.vmap(lambda s: evd_overwrite(spec, s))(st)
+    if spec.mode in (Mode.RSVD, Mode.BRAND_RSVD):
+        return jax.vmap(lambda s, k: rsvd_overwrite(spec, s, k))(st, keys)
     if spec.mode is Mode.BRAND_CORR:
-        correct = jax.vmap(lambda s, k: light_correction(spec, s, k))
-        return jax.lax.cond(heavy, correct, lambda s, k: s, st, keys)
+        return jax.vmap(lambda s, k: light_correction(spec, s, k))(st, keys)
+    return st
+
+
+def bucket_factor_step(spec: KFactorSpec, st: KFactorState, X: Array,
+                       keys: Array, first: Array, stats: bool, light: bool,
+                       heavy_ranges, use_kernel: bool = False
+                       ) -> KFactorState:
+    """One scheduled step for a whole shape-class bucket: st/X carry one
+    flat batch axis (B, …); ``keys`` is (B, 2).  This is THE per-bucket
+    program — the replicated bucketed optimizer, the per-tap comparison
+    path (B = one tap's stack) and the sharded curvature engine (B = the
+    device-local slot shard) all run it, so flag plumbing exists once.
+
+    ``heavy_ranges`` is a static tuple of slot ranges (lo, hi) whose heavy
+    overwrite fires this step (the work scheduler's staggering unit); the
+    Brand light update runs bucket-wide whenever the step is light OR any
+    heavy fires (heavy steps re-absorb the incoming panel — the seed's
+    coupling, preserved; the scheduler snaps Brand-family phases to
+    multiples of T_brand so staggering never adds extra Brand firings).
+    """
+    if stats:
+        st = stats_step(spec, st, X, first)
+    heavy_ranges = tuple(heavy_ranges)
+    if (light or heavy_ranges) and spec.mode in _HAS_BRAND:
+        st = brand_step(spec, st, X, first, use_kernel)
+    for lo, hi in heavy_ranges:
+        sub = jax.tree_util.tree_map(lambda x: x[lo:hi], st)
+        sub = heavy_overwrite_batched(spec, sub, keys[lo:hi])
+        st = jax.tree_util.tree_map(
+            lambda full, part: full.at[lo:hi].set(part), st, sub)
     return st
 
 

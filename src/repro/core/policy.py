@@ -28,6 +28,42 @@ _VARIANT_MODES = {
 
 VARIANTS = tuple(_VARIANT_MODES)
 
+#: variant → which KfacConfig period drives its heavy (inverse-overwrite)
+#: work, and whether the variant runs the Brand light update at all.  The
+#: scheduler (core/schedule.py) and KfacConfig.flags both read THIS table,
+#: so the per-variant period can never be shadowed by branch ordering —
+#: there is exactly one period per variant, declared next to the modes it
+#: schedules (paper §2.2/§6: T_inv for K-FAC/R-KFAC, T_rsvd for the
+#: B-R-KFAC overwrite, T_corct for the B-KFAC-C correction; pure B-KFAC
+#: has no heavy op).
+_VARIANT_HEAVY_PERIOD = {
+    "kfac":   "T_inv",
+    "rkfac":  "T_inv",
+    "bkfac":  None,
+    "brkfac": "T_rsvd",
+    "bkfacc": "T_corct",
+}
+
+
+def _check_variant(variant: str) -> None:
+    if variant not in _VARIANT_MODES:
+        raise ValueError(f"unknown K-FAC variant {variant!r}; "
+                         f"one of {VARIANTS}")
+
+
+def heavy_period_field(variant: str):
+    """Name of the KfacConfig field holding the variant's heavy period
+    (``None`` for pure B-KFAC, which has no heavy op)."""
+    _check_variant(variant)
+    return _VARIANT_HEAVY_PERIOD[variant]
+
+
+def has_light(variant: str) -> bool:
+    """True iff the variant runs the Brand light update (B-family)."""
+    _check_variant(variant)
+    wide_mode, _ = _VARIANT_MODES[variant]
+    return wide_mode in (Mode.BRAND, Mode.BRAND_RSVD, Mode.BRAND_CORR)
+
 
 @dataclasses.dataclass(frozen=True)
 class PolicyConfig:
@@ -41,9 +77,20 @@ class PolicyConfig:
 
 
 def select_mode(cfg: PolicyConfig, d: int, n_stat: int) -> Mode:
-    if cfg.variant not in _VARIANT_MODES:
-        raise ValueError(f"unknown K-FAC variant {cfg.variant!r}; "
-                         f"one of {VARIANTS}")
+    """Pick the factor's update mode.  Boundary semantics (load-bearing
+    for bucket membership AND for the work scheduler, which phases heavy
+    work per mode-keyed bucket):
+
+      * ``d > r + n_stat`` strictly → the B-update applies; at exact
+        equality the Brand step has no arithmetic advantage, so the
+        narrow mode wins;
+      * ``d > max_dense_dim`` strictly → M cannot be formed; at exact
+        equality the dense factor is still allowed;
+      * ``d ≤ r + r_o`` → EVD override, applied LAST: a factor this
+        small is exact and cheapest under dense EVD even when the
+        memory gate just degraded it (its M is tiny by construction).
+    """
+    _check_variant(cfg.variant)
     wide_mode, narrow_mode = _VARIANT_MODES[cfg.variant]
     r = min(cfg.r, d)
     b_applicable = d > r + n_stat          # paper's applicability condition

@@ -1,0 +1,269 @@
+"""The K-FAC work scheduler: static per-step work masks, with optional
+*staggering* of the heavy inverse recomputations.
+
+The paper's amortization argument (heavy EVD/RSVD overwrites every
+``T_inv`` steps, cheap Brand updates in between) holds for the *mean*
+cost per step, but the seed scheduling — one global ``do_heavy`` bool,
+true on every ``k % T == 0`` — concentrates all heavy work of all layers
+on the same step.  At production scale that is a replicated latency
+spike: p99 step time equals the spike height, and on a synchronous mesh
+every device waits for it.
+
+This module replaces the three global bools with a :class:`StepWork`
+mask: ``stats``/``light`` stay global (they are cheap and their operands
+arrive every step anyway), while heavy work is described *per factor
+bucket* as a tuple of static slot ranges.  The :class:`Scheduler` assigns
+each schedulable unit (a bucket, or an entry-aligned chunk of one) a
+phase offset spread uniformly over the heavy period, so
+
+  * every factor still receives a heavy update exactly every ``T`` steps
+    (the per-factor cadence — what the paper's error analysis depends
+    on — is preserved; only the phase differs), and
+  * the expected heavy cost per step drops from
+    ``(all buckets, every T-th step)`` to ``#units / T`` units per step —
+    a constant small cost instead of a spike.
+
+Everything here is *static* python: a ``StepWork`` is hashable and is
+meant to be passed through ``jax.jit(..., static_argnames=("work",))``,
+so each distinct mask compiles to a lean HLO exactly like the seed's
+three-bool step variants.  Over a full schedule cycle there are at most
+``#units + O(1)`` distinct masks (units fire one phase slot at a time),
+so the compile count stays bounded and small.
+
+Phase snapping: for Brand-family buckets the inverse-rep step couples
+the light Brand update to heavy firings (a heavy step re-absorbs the
+incoming panel).  When ``T_brand`` divides the heavy period (the paper's
+regime — 25 | 250/500), their phases are snapped to multiples of
+``T_brand``, so heavy only fires on steps that are already light steps
+and the Brand cadence is untouched.  When it does not divide, *no* phase
+keeps every firing on a light step (phase + m·T drifts mod T_brand —
+the unstaggered schedule has the same coupling at phase 0), so such
+buckets are pinned to phase 0: staggered and legacy schedules then fire
+identical Brand absorbs.  EVD/RSVD buckets have no light work and phase
+freely.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Sequence, Tuple
+
+from repro.core import policy as policy_lib
+
+Ranges = Tuple[Tuple[int, int], ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class StepWork:
+    """Static work mask for one optimizer step.
+
+    ``heavy`` holds, for each factor bucket (in ``Kfac.factor_buckets``
+    order), the slot ranges ``(lo, hi)`` of the bucket batch whose heavy
+    overwrite fires this step.  Hashable → usable as a jit static arg.
+    """
+    stats: bool
+    light: bool
+    heavy: Tuple[Ranges, ...]
+
+    @property
+    def any_heavy(self) -> bool:
+        return any(self.heavy)
+
+    @property
+    def any(self) -> bool:
+        return self.stats or self.light or self.any_heavy
+
+    def entry_heavy(self, bucket_idx: int, offset: int, count: int) -> bool:
+        """True iff any firing range overlaps slot range [offset,
+        offset+count) — the per-tap (unbatched) path's heavy flag for one
+        bucket entry.  Scheduler chunks are entry-aligned, so overlap is
+        always all-or-nothing and the two paths agree exactly."""
+        return any(lo < offset + count and hi > offset
+                   for lo, hi in self.heavy[bucket_idx])
+
+
+def uniform_work(do_stats: bool, do_light: bool, do_heavy: bool,
+                 factor_buckets) -> StepWork:
+    """The legacy three-bool step as a StepWork: heavy fires for every
+    bucket in full, or for none — the seed's spiky schedule."""
+    heavy = tuple((((0, b.total),) if do_heavy else ())
+                  for b in factor_buckets)
+    return StepWork(stats=bool(do_stats), light=bool(do_light), heavy=heavy)
+
+
+def no_work(factor_buckets) -> StepWork:
+    """An all-skip step (straggler back-off)."""
+    return StepWork(stats=False, light=False,
+                    heavy=tuple(() for _ in factor_buckets))
+
+
+def legacy_flags(cfg, step: int) -> Dict[str, bool]:
+    """The seed's ``KfacConfig.flags`` semantics, driven by the variant
+    table in ``core/policy.py`` — one period per variant, by declaration,
+    so T_rsvd/T_corct (or any future period) cannot shadow each other."""
+    variant = cfg.policy.variant
+    period_field = policy_lib.heavy_period_field(variant)
+    do_light = (policy_lib.has_light(variant)
+                and step % cfg.T_brand == 0)
+    do_heavy = (period_field is not None
+                and step % getattr(cfg, period_field) == 0)
+    return dict(do_stats=step % cfg.T_updt == 0, do_light=do_light,
+                do_heavy=do_heavy)
+
+
+@dataclasses.dataclass(frozen=True)
+class Unit:
+    """One schedulable chunk of heavy work: entry-aligned slot range
+    [lo, hi) of factor bucket ``bucket``, firing at steps
+    ``k ≡ phase (mod T)``."""
+    bucket: int
+    lo: int
+    hi: int
+    phase: int
+
+
+def _chunk_boundaries(bucket, align: int) -> Tuple[int, ...]:
+    """Admissible chunk boundaries inside a bucket: entry offsets that are
+    multiples of ``align`` (plus the bucket ends).  Entry alignment keeps
+    the per-tap and bucketed paths exactly equivalent under any mask;
+    ``align`` (= curvature-mesh size when sharded) keeps a chunk's slots
+    an equal static slice on every device under the round-robin
+    slot→device assignment."""
+    bounds = {0, bucket.total}
+    for e in bucket.entries:
+        if e.offset % align == 0:
+            bounds.add(e.offset)
+    return tuple(sorted(bounds))
+
+
+def _split_ranges(bucket, splits: int, align: int) -> Tuple[Tuple[int, int],
+                                                            ...]:
+    """Split a bucket into ≤ ``splits`` chunks at admissible boundaries,
+    as evenly as slot counts allow (best-effort; collapses gracefully to
+    one chunk when no interior boundary is admissible)."""
+    bounds = _chunk_boundaries(bucket, align)
+    n = min(max(1, splits), len(bounds) - 1)
+    # pick n-1 interior boundaries closest to the even split points
+    chosen = [0]
+    interior = list(bounds[1:-1])
+    for i in range(1, n):
+        target = round(i * bucket.total / n)
+        if not interior:
+            break
+        best = min(interior, key=lambda b: abs(b - target))
+        if best > chosen[-1]:
+            chosen.append(best)
+            interior = [b for b in interior if b > best]
+    chosen.append(bucket.total)
+    return tuple((lo, hi) for lo, hi in zip(chosen, chosen[1:]) if hi > lo)
+
+
+class Scheduler:
+    """Maps a step index to a :class:`StepWork` mask.
+
+    ``stagger=False`` reproduces :func:`legacy_flags` exactly (all units
+    share phase 0).  ``stagger=True`` spreads unit phases uniformly over
+    the heavy period; ``warmup=True`` (default) additionally fires every
+    unit on step 0 so EVD/RSVD states are populated from the first stats
+    batch, exactly as in the spiky schedule — after that, each unit's
+    firings are exactly ``phase, phase+T, phase+2T, …``.
+    """
+
+    def __init__(self, cfg, factor_buckets, *, splits: Optional[int] = None,
+                 align: int = 1, stagger: Optional[bool] = None,
+                 warmup: bool = True):
+        self.cfg = cfg
+        self.buckets = tuple(factor_buckets)
+        self.stagger = cfg.stagger if stagger is None else stagger
+        self.warmup = warmup
+        variant = cfg.policy.variant
+        self.has_light = policy_lib.has_light(variant)
+        period_field = policy_lib.heavy_period_field(variant)
+        self.T_heavy = (None if period_field is None
+                        else int(getattr(cfg, period_field)))
+        splits = cfg.stagger_splits if splits is None else splits
+        self.units: Tuple[Unit, ...] = self._assign_phases(splits, align)
+
+    # -- phase assignment --------------------------------------------------
+    def _assign_phases(self, splits: int, align: int) -> Tuple[Unit, ...]:
+        T = self.T_heavy
+        if T is None:
+            return ()
+        chunks = []                      # (bucket_idx, lo, hi, snap)
+        from repro.core import kfactor   # local: avoid import at module top
+        for bi, b in enumerate(self.buckets):
+            if not kfactor.has_heavy_op(b.spec):
+                continue                 # mode has no heavy op (pure BRAND)
+            snap = 1
+            if self.has_light and b.spec.mode in kfactor._HAS_BRAND:
+                # a heavy firing re-absorbs the Brand panel, so every
+                # firing step of a Brand-family unit must already be a
+                # light step: with T_brand | T, any phase that is a
+                # multiple of T_brand works; otherwise NO phase keeps all
+                # firings on light steps (phase + m·T drifts mod T_brand
+                # — true for the unstaggered schedule too), so pin the
+                # bucket to phase 0 and stagger it not at all rather than
+                # add Brand absorbs the legacy schedule never fired.
+                if T % self.cfg.T_brand == 0:
+                    snap = self.cfg.T_brand
+                else:
+                    snap = 0             # sentinel: force phase 0
+            for lo, hi in _split_ranges(b, splits if self.stagger else 1,
+                                        align):
+                chunks.append((bi, lo, hi, snap))
+        n_units = len(chunks)
+        units = []
+        for i, (bi, lo, hi, snap) in enumerate(chunks):
+            if not self.stagger or snap == 0:
+                phase = 0
+            else:
+                raw = (i * T) // max(n_units, 1)
+                phase = (raw // snap) * snap % T
+            units.append(Unit(bucket=bi, lo=lo, hi=hi, phase=phase))
+        return tuple(units)
+
+    @property
+    def cycle(self) -> int:
+        """Length of the full schedule cycle (distinct-mask period)."""
+        c = self.cfg.T_updt
+        if self.has_light:
+            c = math.lcm(c, self.cfg.T_brand)
+        if self.T_heavy is not None:
+            c = math.lcm(c, self.T_heavy)
+        return c
+
+    def work(self, step: int) -> StepWork:
+        stats = step % self.cfg.T_updt == 0
+        light = self.has_light and step % self.cfg.T_brand == 0
+        heavy = [[] for _ in self.buckets]
+        if self.T_heavy is not None:
+            for u in self.units:
+                fires = step % self.T_heavy == u.phase
+                if self.warmup and step == 0:
+                    fires = True
+                if fires:
+                    heavy[u.bucket].append((u.lo, u.hi))
+        return StepWork(stats=stats, light=light,
+                        heavy=tuple(_merge(r) for r in heavy))
+
+    def flags(self, step: int) -> Dict[str, bool]:
+        """Legacy three-bool view of this schedule (un-staggered)."""
+        return legacy_flags(self.cfg, step)
+
+    def describe(self) -> str:
+        parts = [f"T_heavy={self.T_heavy} stagger={self.stagger} "
+                 f"units={len(self.units)}"]
+        for u in self.units:
+            parts.append(f"[b{u.bucket} {u.lo}:{u.hi} @{u.phase}]")
+        return " ".join(parts)
+
+
+def _merge(ranges: Sequence[Tuple[int, int]]) -> Ranges:
+    """Sort and merge adjacent/overlapping ranges."""
+    out: list = []
+    for lo, hi in sorted(ranges):
+        if out and lo <= out[-1][1]:
+            out[-1] = (out[-1][0], max(out[-1][1], hi))
+        else:
+            out.append((lo, hi))
+    return tuple(out)

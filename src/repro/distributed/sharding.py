@@ -131,9 +131,16 @@ def params_sharding_fsdp(params, mesh: Mesh):
     return jax.tree_util.tree_map_with_path(one, params)
 
 
-def kfac_state_sharding(opt_state, mesh: Mesh):
+def kfac_state_sharding(opt_state, mesh: Mesh, curvature_axis=None):
     """K-FAC optimizer state: factor U/M rows on "model", D replicated;
-    AdamW fallback mirrors the param sharding; scalars replicated."""
+    AdamW fallback mirrors the param sharding; scalars replicated.
+
+    ``curvature_axis`` (the axis the distributed curvature engine shards
+    bucket batches over) additionally places stacked taps' dense M on
+    that axis along the leading stack dim — the round-robin slot → device
+    assignment means each device only ever *reads* the M rows of its own
+    slots, so the O(d²) factors need not be replicated between steps.
+    Non-divisible stacks fall back to replication (fit_spec)."""
     tp = "model" if "model" in mesh.axis_names else None
 
     def one(kp, leaf):
@@ -143,7 +150,11 @@ def kfac_state_sharding(opt_state, mesh: Mesh):
             field = path.rsplit("/", 1)[-1]
             if field in ("U", "M") and leaf.ndim >= 2 and \
                     leaf.shape[-1] > 1:
-                spec = P(*((None,) * (leaf.ndim - 2) + (tp, None)))
+                lead = (None,) * (leaf.ndim - 2)
+                if curvature_axis is not None and field == "M" and \
+                        leaf.ndim >= 3:
+                    lead = (curvature_axis,) + (None,) * (leaf.ndim - 3)
+                spec = P(*(lead + (tp, None)))
                 return NamedSharding(mesh, fit_spec(spec, leaf.shape, mesh))
             return NamedSharding(mesh, P())
         if path.startswith("fallback") or path.startswith("momentum"):

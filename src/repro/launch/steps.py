@@ -91,7 +91,12 @@ def build_train_step(arch: ArchConfig, mesh: Optional[Mesh] = None,
                      variant: str = "bkfac", unroll: bool = False,
                      cell: Optional[ShapeCell] = None,
                      flags: Optional[Dict[str, bool]] = None,
+                     work=None, curvature_axis: Optional[str] = None,
                      remat: bool = True, plan: str = "tp") -> BuiltTrain:
+    """``work`` (a schedule.StepWork) supersedes ``flags`` when given —
+    the dry-run lowers the exact staggered step variant the scheduler
+    would dispatch.  ``curvature_axis`` shards the bucketed factor work
+    across that mesh axis via the distributed curvature engine."""
     cell = cell or SHAPES["train_4k"]
     flags = flags or dict(do_stats=True, do_light=True, do_heavy=False)
     if plan == "fsdp" and mesh is not None:
@@ -102,7 +107,11 @@ def build_train_step(arch: ArchConfig, mesh: Optional[Mesh] = None,
         sp = shard_policy_for(mesh)
     lm = LM(arch, sp, remat=remat, unroll=unroll)
     opt = kfac_lib.Kfac(default_kfac_config(arch, variant), lm.taps)
+    if curvature_axis is not None and mesh is not None:
+        from repro.distributed import curvature as curvature_lib
+        curvature_lib.CurvatureEngine.for_kfac(opt, mesh, curvature_axis)
     n_tokens = n_tokens_of(arch, cell)
+    step_work = work if work is not None else opt.uniform_work(**flags)
 
     def train_step(params, opt_state, batch, rng):
         probes = layers.make_probes(opt.taps, jnp.float32)
@@ -110,7 +119,7 @@ def build_train_step(arch: ArchConfig, mesh: Optional[Mesh] = None,
             lm.loss_fn, params, probes, batch)
         updates, opt_state = opt.update(
             gp, opt_state, params, acts=acts, probe_grads=gprobe,
-            n_tokens=n_tokens, rng=rng, **flags)
+            n_tokens=n_tokens, rng=rng, work=step_work)
         params = optbase.apply_updates(params, updates)
         return params, opt_state, loss
 
@@ -130,7 +139,8 @@ def build_train_step(arch: ArchConfig, mesh: Optional[Mesh] = None,
                 batch_specs)
         else:
             p_sh = shd.params_sharding(abstract_params, mesh)
-            o_sh = shd.kfac_state_sharding(abstract_opt, mesh)
+            o_sh = shd.kfac_state_sharding(abstract_opt, mesh,
+                                           curvature_axis=curvature_axis)
             b_sh = shd.batch_sharding(batch_specs, mesh)
         r_sh = NamedSharding(mesh, P())
         in_sh = (p_sh, o_sh, b_sh, r_sh)

@@ -12,6 +12,8 @@ checkpointing + straggler detector + (optional) gradient compression.
 from __future__ import annotations
 
 import argparse
+import contextlib
+import dataclasses
 import time
 
 import jax
@@ -50,6 +52,17 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=10)
     ap.add_argument("--compress", action="store_true",
                     help="PowerSGD-style DP gradient compression")
+    ap.add_argument("--stagger", dest="stagger", action="store_true",
+                    default=True,
+                    help="phase heavy factor work across the T_inv window "
+                         "(constant per-step cost instead of a spike)")
+    ap.add_argument("--no-stagger", dest="stagger", action="store_false")
+    ap.add_argument("--stagger-splits", type=int, default=4,
+                    help="max entry-aligned chunks per factor bucket")
+    ap.add_argument("--curvature", default="auto",
+                    choices=("auto", "none"),
+                    help="auto: shard factor work across the mesh's first "
+                         "data axis (distributed curvature engine)")
     args = ap.parse_args()
 
     arch = get_arch(args.arch)
@@ -75,7 +88,25 @@ def main():
             lr=optbase.constant(0.02), damping_phi=optbase.constant(0.1),
             weight_decay=1e-4, clip=0.5, T_updt=2, T_inv=10, T_brand=2,
             T_rsvd=10, T_corct=10, fallback_lr=optbase.constant(3e-3))
+    kcfg = dataclasses.replace(kcfg, stagger=args.stagger,
+                               stagger_splits=args.stagger_splits)
     opt = kfac_lib.Kfac(kcfg, lm.taps)
+    curv_axis = None
+    if args.curvature == "auto" and mesh is not None:
+        dp = [a for a in mesh.axis_names if a != "model"]
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        if dp and sizes[dp[0]] > 1:
+            curv_axis = dp[0]
+    if curv_axis is not None:
+        from repro.distributed import curvature as curvature_lib
+        eng = curvature_lib.CurvatureEngine.for_kfac(opt, mesh, curv_axis)
+        rep, dev = eng.job_counts()
+        print(f"[train] curvature sharded on '{curv_axis}': "
+              f"{rep} factor slots replicated -> {dev}/device "
+              f"({eng.describe()})")
+    sched = opt.scheduler()
+    if args.stagger:
+        print(f"[train] heavy-work scheduler: {sched.describe()}")
 
     n_tokens = args.batch * args.seq
     stream = TokenStream(vocab=arch.vocab, batch=args.batch,
@@ -85,7 +116,8 @@ def main():
                                 rng=jax.random.PRNGKey(1))
     if mesh is not None:
         p_sh = shd.params_sharding(params, mesh)
-        o_sh = shd.kfac_state_sharding(state.opt, mesh)
+        o_sh = shd.kfac_state_sharding(state.opt, mesh,
+                                       curvature_axis=curv_axis)
         state = loop_lib.TrainState(
             params=jax.device_put(params, p_sh),
             opt=jax.device_put(state.opt, o_sh), rng=state.rng)
@@ -96,9 +128,9 @@ def main():
     def loss_with_compress(p, probes, batch):
         return lm.loss_fn(p, probes, batch)
 
-    step_fn = jax.jit(loop_lib.make_kfac_step(loss_with_compress, opt,
-                                              n_tokens),
-                      static_argnames=("do_stats", "do_light", "do_heavy"))
+    step_fn = jax.jit(loop_lib.make_scheduled_kfac_step(loss_with_compress,
+                                                        opt, n_tokens),
+                      static_argnames=("work",))
 
     checkpointer = (ckpt.AsyncCheckpointer(args.ckpt_dir, keep=3)
                     if args.ckpt_dir else None)
@@ -111,26 +143,36 @@ def main():
     det = strag_lib.StragglerDetector()
     t_start = time.time()
     losses = []
+    # the model's internal with_sharding_constraint calls need the mesh
+    # context when PartitionSpecs are in play
+    ctx = mesh if mesh is not None else contextlib.nullcontext()
+    with ctx:
+        run_steps(args, sched, det, stream, step_fn, state,
+                  checkpointer, k0, t_start, losses)
+    if checkpointer is not None:
+        checkpointer.close()
+    print(f"[train] done: loss {losses[0]:.4f} -> "
+          f"{float(np.mean(losses[-3:])):.4f} "
+          f"({(time.time()-t_start)/max(len(losses),1):.2f}s/step)")
+
+
+def run_steps(args, sched, det, stream, step_fn, state, checkpointer,
+              k0, t_start, losses):
     for k in range(k0, args.steps):
         t0 = time.time()
-        flags = kcfg.flags(k)
+        work = sched.work(k)
         actions = det.observe_step(k, {"host0": time.time() - t0 + 1e-6})
-        flags = strag_lib.apply_to_flags(actions.get("host0",
-                                                     strag_lib.Action.NONE),
-                                         flags)
+        work = strag_lib.apply_to_work(actions.get("host0",
+                                                   strag_lib.Action.NONE),
+                                       work)
         batch = stream.batch_at(k)
-        state, loss = step_fn(state, batch, **flags)
+        state, loss = step_fn(state, batch, work)
         losses.append(float(loss))
         if checkpointer is not None and k % args.ckpt_every == 0:
             checkpointer.submit(k, state)
         if k % 5 == 0:
             print(f"[train] step {k:5d} loss {float(loss):8.4f} "
                   f"({time.time()-t_start:.0f}s)", flush=True)
-    if checkpointer is not None:
-        checkpointer.close()
-    print(f"[train] done: loss {losses[0]:.4f} -> "
-          f"{float(np.mean(losses[-3:])):.4f} "
-          f"({(time.time()-t_start)/max(len(losses),1):.2f}s/step)")
 
 
 if __name__ == "__main__":

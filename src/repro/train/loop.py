@@ -36,7 +36,9 @@ def kfac_grads(loss_fn, params, probes, batch, rng=None):
 def make_kfac_step(loss_fn: Callable, opt: kfac_lib.Kfac,
                    n_tokens: int, probe_dtype=jnp.float32):
     """Returns step(state, batch, *, do_stats, do_light, do_heavy) — flags
-    static; jit with static_argnames=("do_stats","do_light","do_heavy")."""
+    static; jit with static_argnames=("do_stats","do_light","do_heavy").
+    Legacy three-bool variant; see make_scheduled_kfac_step for the
+    work-mask (staggered / sharded) step."""
 
     def step(state: TrainState, batch, do_stats: bool, do_light: bool,
              do_heavy: bool):
@@ -48,6 +50,28 @@ def make_kfac_step(loss_fn: Callable, opt: kfac_lib.Kfac,
             gp, state.opt, state.params, acts=acts, probe_grads=gprobe,
             n_tokens=n_tokens, rng=sub, do_stats=do_stats,
             do_light=do_light, do_heavy=do_heavy)
+        params = optbase.apply_updates(state.params, updates)
+        return TrainState(params=params, opt=opt_state, rng=rng), loss
+
+    return step
+
+
+def make_scheduled_kfac_step(loss_fn: Callable, opt: kfac_lib.Kfac,
+                             n_tokens: int, probe_dtype=jnp.float32):
+    """Returns step(state, batch, work) with ``work`` a static
+    :class:`repro.core.schedule.StepWork` mask — jit with
+    ``static_argnames=("work",)``.  The mask is hashable, so each distinct
+    mask (at most #scheduler-units + O(1) over a schedule cycle) compiles
+    once to a lean HLO, exactly like the legacy bool variants."""
+
+    def step(state: TrainState, batch, work):
+        rng, sub = jax.random.split(state.rng)
+        probes = layers.make_probes(opt.taps, probe_dtype)
+        loss, acts, gp, gprobe = kfac_grads(loss_fn, state.params, probes,
+                                            batch)
+        updates, opt_state = opt.update(
+            gp, state.opt, state.params, acts=acts, probe_grads=gprobe,
+            n_tokens=n_tokens, rng=sub, work=work)
         params = optbase.apply_updates(state.params, updates)
         return TrainState(params=params, opt=opt_state, rng=rng), loss
 
@@ -71,20 +95,35 @@ def make_baseline_step(loss_fn: Callable, opt: optbase.Optimizer):
 
 def run_kfac_training(loss_fn, opt: kfac_lib.Kfac, params, batches,
                       n_tokens: int, seed: int = 0, jit: bool = True,
-                      callback=None):
-    """Python-level driver: dispatches the statically-flagged step variants
-    per the paper's T_* schedules. Returns (final TrainState, losses)."""
-    state = TrainState(params=params, opt=opt.init(params),
-                       rng=jax.random.PRNGKey(seed))
-    step_fn = make_kfac_step(loss_fn, opt, n_tokens)
+                      callback=None, mesh=None, curvature_axis=None,
+                      state: Optional[TrainState] = None):
+    """Python-level driver: dispatches the statically-masked step variants
+    per the paper's T_* schedules (work scheduler; ``cfg.stagger`` phases
+    heavy work).  ``mesh`` + ``curvature_axis`` attach the distributed
+    curvature engine so factor work shards across that mesh axis.
+
+    Passing a restored ``state`` resumes: the schedule position is
+    re-derived from ``state.opt.phase`` (step mod schedule cycle — kept
+    inside the optimizer state exactly so an elastic restart that lost
+    the global step counter continues the staggered heavy cadence
+    instead of re-spiking every bucket at once).  Returns (final
+    TrainState, losses)."""
+    if mesh is not None and curvature_axis is not None:
+        from repro.distributed import curvature as curvature_lib
+        curvature_lib.CurvatureEngine.for_kfac(opt, mesh, curvature_axis)
+    sched = opt.scheduler()
+    k_off = 0
+    if state is None:
+        state = TrainState(params=params, opt=opt.init(params),
+                           rng=jax.random.PRNGKey(seed))
+    else:
+        k_off = int(jax.device_get(state.opt.phase))
+    step_fn = make_scheduled_kfac_step(loss_fn, opt, n_tokens)
     if jit:
-        step_fn = jax.jit(step_fn,
-                          static_argnames=("do_stats", "do_light",
-                                           "do_heavy"))
+        step_fn = jax.jit(step_fn, static_argnames=("work",))
     losses = []
     for k, batch in enumerate(batches):
-        flags = opt.cfg.flags(k)
-        state, loss = step_fn(state, batch, **flags)
+        state, loss = step_fn(state, batch, sched.work(k_off + k))
         losses.append(float(loss))
         if callback is not None:
             callback(k, state, loss)

@@ -81,3 +81,13 @@ def apply_to_flags(action: Action, flags: Dict[str, bool]
     if action == Action.DROP_STATS:
         return dict(flags, do_stats=False, do_light=False, do_heavy=False)
     return flags
+
+
+def apply_to_work(action: Action, work):
+    """StepWork-mask counterpart of :func:`apply_to_flags` for the
+    scheduled (staggered / sharded) step path."""
+    if action == Action.DROP_STATS:
+        return dataclasses.replace(
+            work, stats=False, light=False,
+            heavy=tuple(() for _ in work.heavy))
+    return work

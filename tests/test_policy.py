@@ -1,0 +1,97 @@
+"""Edge-case tests for ``policy.select_mode`` — the boundaries decide
+bucket membership (equal specs ⇔ shared bucket) and which scheduler units
+exist, so off-by-ones here silently change the whole hot path."""
+import pytest
+
+from repro.core import policy
+from repro.core.kfactor import Mode
+
+
+def _pol(variant="bkfac", r=32, r_o=10, max_dense_dim=1024):
+    return policy.PolicyConfig(variant=variant, r=r, r_o=r_o,
+                               max_dense_dim=max_dense_dim)
+
+
+class TestBThreshold:
+    """Paper applicability condition d > r + n_stat is STRICT."""
+
+    def test_exactly_equal_is_narrow(self):
+        pol = _pol(r=32)
+        n_stat = 64
+        d = 32 + 64                       # d == r + n_stat
+        assert policy.select_mode(pol, d, n_stat) == Mode.RSVD
+
+    def test_one_above_is_wide(self):
+        pol = _pol(r=32)
+        assert policy.select_mode(pol, 32 + 64 + 1, 64) == Mode.BRAND
+
+    def test_r_clamped_to_d(self):
+        # r = min(cfg.r, d): with cfg.r ≥ d the factor is never "wide"
+        # (d > d + n_stat is false) and the tiny override (d ≤ r + r_o)
+        # always holds — exact EVD, the cheapest correct choice
+        pol = _pol(r=10_000, max_dense_dim=100_000)
+        assert policy.select_mode(pol, 2048, 64) == Mode.EVD
+
+
+class TestMemoryGate:
+    def test_exactly_at_gate_keeps_dense(self):
+        pol = _pol(variant="rkfac", r=32, max_dense_dim=1024)
+        assert policy.select_mode(pol, 1024, 64) == Mode.RSVD
+
+    def test_one_above_gate_degrades_to_brand(self):
+        pol = _pol(variant="rkfac", r=32, max_dense_dim=1024)
+        assert policy.select_mode(pol, 1025, 64) == Mode.BRAND
+
+    def test_gate_applies_to_all_m_holding_modes(self):
+        n_stat = 64
+        for variant in ("kfac", "rkfac", "brkfac", "bkfacc"):
+            pol = _pol(variant=variant, r=32, max_dense_dim=1024)
+            assert policy.select_mode(pol, 4096, n_stat) == Mode.BRAND, \
+                variant
+
+    def test_pure_brand_unaffected(self):
+        pol = _pol(variant="bkfac", r=32, max_dense_dim=1024)
+        assert policy.select_mode(pol, 4096, 64) == Mode.BRAND
+
+
+class TestTinyEvdOverride:
+    def test_exactly_r_plus_ro_is_evd(self):
+        pol = _pol(r=32, r_o=10)
+        assert policy.select_mode(pol, 42, 64) == Mode.EVD
+
+    def test_one_above_is_not(self):
+        pol = _pol(r=32, r_o=10)
+        assert policy.select_mode(pol, 43, 64) == Mode.RSVD
+
+    def test_override_applies_last(self):
+        # even a factor past the memory gate goes EVD when tiny (its M is
+        # tiny by construction; the gate's 275 GB argument can't apply)
+        pol = _pol(r=32, r_o=10, max_dense_dim=16)
+        assert policy.select_mode(pol, 20, 64) == Mode.EVD
+
+    def test_r_clamp_makes_small_d_always_evd(self):
+        # r = min(cfg.r, d) ⇒ d ≤ r + r_o whenever d ≤ cfg.r
+        pol = _pol(r=256, r_o=10)
+        for d in (8, 64, 256):
+            assert policy.select_mode(pol, d, 32) == Mode.EVD
+
+
+def test_unknown_variant_raises():
+    pol = policy.PolicyConfig(variant="sgd")
+    with pytest.raises(ValueError):
+        policy.select_mode(pol, 128, 32)
+
+
+def test_spec_width_consistency_at_boundaries():
+    """make_factor_spec must stay self-consistent at the boundaries the
+    bucketer keys on (width drives every gathered operand shape)."""
+    pol = _pol(r=32, r_o=10, max_dense_dim=1024)
+    spec_narrow = policy.make_factor_spec(pol, 96, 64)    # d == r+n_stat
+    assert spec_narrow.mode == Mode.RSVD
+    assert spec_narrow.width == 32
+    spec_wide = policy.make_factor_spec(pol, 97, 64)
+    assert spec_wide.mode == Mode.BRAND
+    assert spec_wide.width == 32 + 64
+    spec_tiny = policy.make_factor_spec(pol, 42, 64)
+    assert spec_tiny.mode == Mode.EVD
+    assert spec_tiny.width == 32

@@ -1,0 +1,267 @@
+"""Work scheduler (core/schedule.py): exact cadences of the legacy flags
+over every variant, staggered-mask invariants (per-unit cadence, full
+coverage, spike reduction, Brand-phase snapping, alignment), and the
+per-tap/bucketed mask equivalence contract.
+"""
+import math
+
+import pytest
+
+from repro.core import kfac as kfac_lib
+from repro.core import kfactor, policy, schedule
+
+
+def _cfg(variant, **kw):
+    kwargs = dict(policy=policy.PolicyConfig(variant=variant, r=8,
+                                             max_dense_dim=8192),
+                  T_updt=3, T_inv=12, T_brand=3, T_rsvd=24, T_corct=30)
+    kwargs.update(kw)
+    return kfac_lib.KfacConfig(**kwargs)
+
+
+def _mixed_taps(N=16):
+    return {
+        "fc":   kfac_lib.TapInfo("fc/w", 48, 32, n_stat=N),
+        "fc2":  kfac_lib.TapInfo("fc2/w", 48, 32, n_stat=N),
+        "scan": kfac_lib.TapInfo("scan/w", 48, 48, stack=(3,), n_stat=N),
+        "moe":  kfac_lib.TapInfo("moe/w", 48, 32, stack=(2, 2), n_stat=N),
+    }
+
+
+# ---------------------------------------------------------------------------
+# legacy flags: table-driven exact cadence, all 5 variants × 1000 steps
+# ---------------------------------------------------------------------------
+
+#: variant → (has light work, heavy period attr).  Declared independently
+#: of core/policy.py so a regression in EITHER table (e.g. T_corct
+#: shadowed by T_rsvd through branch ordering) fails here.
+_EXPECTED = {
+    "kfac":   (False, "T_inv"),
+    "rkfac":  (False, "T_inv"),
+    "bkfac":  (True, None),
+    "brkfac": (True, "T_rsvd"),
+    "bkfacc": (True, "T_corct"),
+}
+
+
+@pytest.mark.parametrize("variant", list(policy.VARIANTS))
+def test_flags_exact_cadence_1000_steps(variant):
+    cfg = _cfg(variant)
+    has_light, heavy_attr = _EXPECTED[variant]
+    T_heavy = None if heavy_attr is None else getattr(cfg, heavy_attr)
+    for k in range(1000):
+        flags = cfg.flags(k)
+        assert flags["do_stats"] == (k % cfg.T_updt == 0), (variant, k)
+        assert flags["do_light"] == (has_light and k % cfg.T_brand == 0), \
+            (variant, k)
+        want_heavy = T_heavy is not None and k % T_heavy == 0
+        assert flags["do_heavy"] == want_heavy, (variant, k)
+
+
+def test_variant_table_complete():
+    assert set(_EXPECTED) == set(policy.VARIANTS)
+    for v in policy.VARIANTS:
+        assert policy.has_light(v) == _EXPECTED[v][0]
+        assert policy.heavy_period_field(v) == _EXPECTED[v][1]
+    with pytest.raises(ValueError):
+        policy.heavy_period_field("notavariant")
+
+
+def test_corct_and_rsvd_cannot_shadow():
+    """brkfac must key on T_rsvd and bkfacc on T_corct even when the two
+    periods disagree — the historical branch-ordering hazard."""
+    cfg_b = _cfg("brkfac", T_rsvd=7, T_corct=11)
+    cfg_c = _cfg("bkfacc", T_rsvd=7, T_corct=11)
+    for k in range(1000):
+        assert cfg_b.flags(k)["do_heavy"] == (k % 7 == 0)
+        assert cfg_c.flags(k)["do_heavy"] == (k % 11 == 0)
+
+
+# ---------------------------------------------------------------------------
+# scheduler: un-staggered == legacy; staggered invariants
+# ---------------------------------------------------------------------------
+
+def _opt(variant, **kw):
+    return kfac_lib.Kfac(_cfg(variant, **kw), _mixed_taps())
+
+
+@pytest.mark.parametrize("variant", list(policy.VARIANTS))
+def test_unstaggered_work_equals_legacy_flags(variant):
+    opt = _opt(variant)
+    sched = opt.scheduler()
+    for k in range(2 * sched.cycle):
+        flags = opt.cfg.flags(k)
+        assert sched.work(k) == opt.uniform_work(**flags), (variant, k)
+
+
+def _heavy_buckets(opt):
+    return [(bi, b) for bi, b in enumerate(opt.factor_buckets)
+            if kfactor.has_heavy_op(b.spec)]
+
+
+@pytest.mark.parametrize("variant", ["kfac", "brkfac", "bkfacc"])
+def test_staggered_unit_cadence_and_coverage(variant):
+    opt = _opt(variant, stagger=True, stagger_splits=4)
+    sched = opt.scheduler()
+    T = sched.T_heavy
+    assert T is not None and sched.units
+    # units tile each heavy bucket exactly (full coverage, no overlap)
+    for bi, b in _heavy_buckets(opt):
+        ranges = sorted((u.lo, u.hi) for u in sched.units
+                        if u.bucket == bi)
+        assert ranges[0][0] == 0 and ranges[-1][1] == b.total
+        for (l0, h0), (l1, h1) in zip(ranges, ranges[1:]):
+            assert l1 == h0
+    # per-unit cadence: fires exactly at {0 (warmup)} ∪ {phase + iT}
+    fired = {u: [] for u in sched.units}
+    for k in range(3 * T):
+        w = sched.work(k)
+        for u in sched.units:
+            if any(lo <= u.lo and u.hi <= hi for lo, hi in w.heavy[u.bucket]):
+                fired[u].append(k)
+    for u, steps in fired.items():
+        want = sorted({0} | {u.phase + i * T for i in range(3)
+                             if u.phase + i * T < 3 * T})
+        assert steps == want, (u, steps, want)
+
+
+def test_staggering_reduces_peak_preserves_mean():
+    opt = _opt("kfac", stagger=True, stagger_splits=4)
+    spiky = opt.scheduler(stagger=False)
+    stag = opt.scheduler(stagger=True)
+    T = stag.T_heavy
+
+    def slots(work):
+        return sum(hi - lo for r in work.heavy for lo, hi in r)
+
+    # equal mean cadence over a full cycle (ignore the step-0 warmup)
+    lo, hi = T, 3 * T
+    tot_spiky = sum(slots(spiky.work(k)) for k in range(lo, hi))
+    tot_stag = sum(slots(stag.work(k)) for k in range(lo, hi))
+    assert tot_spiky == tot_stag
+    # strictly lower peak: the spike is spread across ≥2 phases
+    peak_spiky = max(slots(spiky.work(k)) for k in range(lo, hi))
+    peak_stag = max(slots(stag.work(k)) for k in range(lo, hi))
+    assert len({u.phase for u in stag.units}) > 1
+    assert peak_stag < peak_spiky
+
+
+def test_brand_family_phases_snap_to_light_period():
+    """Heavy firings of Brand-family buckets must land on light steps,
+    otherwise staggering would add extra Brand absorbs (cadence break)."""
+    opt = _opt("bkfacc", stagger=True, stagger_splits=8,
+               T_brand=3, T_corct=30)
+    sched = opt.scheduler()
+    brand = kfactor._HAS_BRAND
+    for u in sched.units:
+        if opt.factor_buckets[u.bucket].spec.mode in brand:
+            assert u.phase % opt.cfg.T_brand == 0, u
+    # every actual firing lands on a light step (T_brand | T_corct here)
+    for k in range(2 * sched.cycle):
+        w = sched.work(k)
+        for bi, b in enumerate(opt.factor_buckets):
+            if b.spec.mode in brand and w.heavy[bi]:
+                assert w.light, (k, bi)
+
+
+def test_brand_phase_pinned_when_light_period_does_not_divide():
+    """T_brand ∤ T_heavy: no phase keeps every firing on a light step
+    (true at phase 0 too), so Brand-family buckets must pin to phase 0 —
+    staggered then fires exactly the legacy absorbs, never extra ones."""
+    opt = _opt("brkfac", stagger=True, stagger_splits=8,
+               T_brand=3, T_rsvd=10)
+    stag, spiky = opt.scheduler(stagger=True), opt.scheduler(stagger=False)
+    brand = kfactor._HAS_BRAND
+    assert any(opt.factor_buckets[u.bucket].spec.mode in brand
+               for u in stag.units)
+    for u in stag.units:
+        if opt.factor_buckets[u.bucket].spec.mode in brand:
+            assert u.phase == 0, u
+    for k in range(2 * stag.cycle):
+        ws, wu = stag.work(k), spiky.work(k)
+        for bi, b in enumerate(opt.factor_buckets):
+            if b.spec.mode in brand:
+                assert ws.heavy[bi] == wu.heavy[bi], (k, bi)
+
+
+def test_alignment_contract():
+    opt = _opt("kfac", stagger=True, stagger_splits=4)
+    sched = opt.scheduler(align=4)
+    for u in sched.units:
+        total = opt.factor_buckets[u.bucket].total
+        assert u.lo % 4 == 0
+        assert u.hi % 4 == 0 or u.hi == total, u
+
+
+def test_entry_heavy_all_or_nothing():
+    """Chunks are entry-aligned, so a tap's slots never split across
+    firing and non-firing ranges — the per-tap path's heavy bool is
+    exact, not an approximation."""
+    opt = _opt("kfac", stagger=True, stagger_splits=6)
+    sched = opt.scheduler()
+    for k in range(2 * sched.cycle):
+        w = sched.work(k)
+        for bi, b in enumerate(opt.factor_buckets):
+            for e in b.entries:
+                inside = [max(lo, e.offset) < min(hi, e.offset + e.count)
+                          for lo, hi in w.heavy[bi]]
+                covered = sum(min(hi, e.offset + e.count) - max(lo, e.offset)
+                              for (lo, hi), hit in zip(w.heavy[bi], inside)
+                              if hit)
+                assert covered in (0, e.count), (k, bi, e)
+                assert w.entry_heavy(bi, e.offset, e.count) == \
+                    (covered == e.count)
+
+
+def test_stepwork_static_and_hashable():
+    opt = _opt("kfac", stagger=True)
+    sched = opt.scheduler()
+    works = {sched.work(k) for k in range(3 * sched.cycle)}
+    # bounded distinct masks: at most one per phase slot + stats/light
+    # combinations — the jit-compile count stays small
+    assert 1 < len(works) <= len(sched.units) + 4
+    assert schedule.no_work(opt.factor_buckets).any is False
+
+
+def test_cycle_lcm():
+    opt = _opt("bkfacc", T_updt=4, T_brand=6, T_corct=30)
+    assert opt.scheduler().cycle == math.lcm(4, 6, 30)
+
+
+def test_resume_from_state_phase_continues_cadence():
+    """run_kfac_training(state=restored) must continue the staggered
+    schedule from state.opt.phase instead of re-spiking at work(0) —
+    the split run's update sequence equals the unbroken run's."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.models import layers
+    from repro.optim import base as optbase
+    from repro.train import loop
+
+    taps = {"fc": kfac_lib.TapInfo("fc/w", 24, 8, n_stat=8)}
+    cfg = kfac_lib.KfacConfig(
+        policy=policy.PolicyConfig(variant="kfac", r=4),
+        lr=optbase.constant(0.05), T_updt=1, T_inv=4, stagger=True)
+    key = jax.random.PRNGKey(0)
+    params = {"fc": {"w": jax.random.normal(key, (24, 8)) * 0.1}}
+
+    def loss_fn(p, probes, batch):
+        x, y = batch
+        h, act = layers.tapped_matmul(p["fc"]["w"], x, probes.get("fc"), 8)
+        return jnp.mean((h - y) ** 2), {"fc": act}
+
+    batches = [(jax.random.normal(jax.random.fold_in(key, i), (8, 24)),
+                jax.random.normal(jax.random.fold_in(key, 50 + i), (8, 8)))
+               for i in range(6)]
+
+    opt_a = kfac_lib.Kfac(cfg, taps)
+    _, full = loop.run_kfac_training(loss_fn, opt_a, params, batches,
+                                     n_tokens=8, jit=False)
+    opt_b = kfac_lib.Kfac(cfg, taps)
+    mid, head = loop.run_kfac_training(loss_fn, opt_b, params, batches[:3],
+                                       n_tokens=8, jit=False)
+    assert int(jax.device_get(mid.opt.phase)) == 3
+    _, tail = loop.run_kfac_training(loss_fn, opt_b, None, batches[3:],
+                                     n_tokens=8, jit=False, state=mid)
+    np.testing.assert_allclose(head + tail, full, rtol=1e-6)
