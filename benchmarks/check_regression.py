@@ -1,0 +1,278 @@
+"""CI perf-regression gate: diff a fresh quick-mode benchmark run against
+the committed ``BENCH_step.json`` / ``BENCH_kernels.json`` baselines.
+
+The benches have asserted *correctness* (parity allcloses, cadence
+equalities, paper claims) since PR 1-3, and their artifacts have been
+uploaded from CI since PR 2 — but nothing ever FAILED when a number
+regressed.  This script closes that loop:
+
+  * **parity flip** — any fresh row whose ``derived`` string carries a
+    ``…=False`` marker (or a bare ``False`` claim row) fails outright;
+    rows that asserted ``allclose=True`` in the baseline must still say
+    so.  (A parity *assert* that trips aborts the bench process, which
+    fails the gate by construction.)
+  * **missing row** — every baseline row must exist in the fresh run
+    (new rows are fine: that is how benches grow).
+  * **p50 regression** — a fresh row's p50 per-step/per-call time may not
+    exceed its baseline by more than ``--threshold`` (default 20%),
+    *after machine-speed normalization*: baselines are committed from
+    whatever machine produced them, so absolute times are meaningless
+    across hosts.  We scale by the median fresh/baseline ratio over all
+    compared rows — a uniformly slower machine moves every row equally
+    and trips nothing, while a single hot row sticking out past the
+    fleet median by >threshold is a genuine relative regression.
+
+Shared-runner noise defense, two layers:
+
+  * a bench whose rows regressed is re-run (up to ``--retries`` times)
+    and each row keeps its per-run MINIMUM — a load burst must hit every
+    run of a row to produce a false positive, while a real regression
+    persists through all of them.  Only timing failures retry; parity
+    flips and missing rows fail immediately.
+  * ``--update-baseline`` runs each bench ``retries+1`` times and
+    commits, per row, the minimum (the hardware floor) plus the observed
+    max/min spread as ``p50_noise``.  The gate then requires a
+    regression to exceed ``(1+threshold) x`` the row's own demonstrated
+    run-to-run noise (capped at ``--noise-cap``): a 2ms kernel that
+    jitters 30% between back-to-back runs is not held to a 20% band its
+    own baseline couldn't reproduce, while stable rows keep the tight
+    gate.
+
+``--update-baseline`` replaces the committed artifacts with the fresh
+run (commit the result).  Exit code: 0 = green, 1 = regression(s).
+
+Usage:
+    python benchmarks/check_regression.py [--quick] [--threshold 0.2]
+        [--baseline-dir .] [--update-baseline] [--skip-run]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import subprocess
+import sys
+import tempfile
+from typing import Dict, List, Optional, Tuple
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+REPO = os.path.dirname(HERE)
+
+#: bench id → (script, committed baseline artifact)
+BENCHES = {
+    "step": ("step_bench.py", "BENCH_step.json"),
+    "kernels": ("kernels_bench.py", "BENCH_kernels.json"),
+}
+
+_FALSE_MARK = re.compile(r"\b\w+=False\b")
+
+
+def run_bench(script: str, out_path: str, quick: bool) -> None:
+    cmd = [sys.executable, os.path.join(HERE, script),
+           "--out", out_path] + (["--quick"] if quick else [])
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    # a parity-assert trip inside the bench aborts it → non-zero → gate red
+    subprocess.run(cmd, check=True, env=env, cwd=REPO)
+
+
+def load_rows(path: str) -> Dict[str, dict]:
+    with open(path) as f:
+        artifact = json.load(f)
+    return {r["name"]: r for r in artifact["rows"]}
+
+
+def row_p50(row: dict) -> Optional[float]:
+    """The row's timing stat: p50 when recorded, us_per_call otherwise
+    (kernel micro-bench rows); None for pure-claim rows."""
+    v = row.get("p50_us", row.get("us_per_call"))
+    return float(v) if v else None
+
+
+def parity_failures(rows: Dict[str, dict], label: str) -> List[str]:
+    out = []
+    for name, row in rows.items():
+        derived = str(row.get("derived", ""))
+        if derived.strip() == "False":
+            out.append(f"{label}: claim row {name} is False")
+        for m in _FALSE_MARK.findall(derived):
+            out.append(f"{label}: {name} reports {m}")
+    return out
+
+
+def merge_min(a: Dict[str, dict], b: Dict[str, dict],
+              track_noise: bool = False) -> Dict[str, dict]:
+    """Per-row minimum of the timing stats across two runs (noise-floor
+    estimate); non-timing fields keep the latest run's values.
+    ``track_noise`` additionally accumulates the observed max/min spread
+    of the gating stat into ``p50_noise`` (baseline updates)."""
+    out = dict(b)
+    for name, row_a in a.items():
+        if name not in out:
+            out[name] = row_a
+            continue
+        row = dict(out[name])
+        if track_noise:
+            pa, pb = row_p50(row_a), row_p50(row)
+            if pa and pb:
+                spread = max(pa, pb) / min(pa, pb)
+                prior = max(row.get("p50_noise", 1.0),
+                            row_a.get("p50_noise", 1.0))
+                row["p50_noise"] = round(max(prior, spread), 3)
+        for stat in ("us_per_call", "p50_us", "p99_us"):
+            if stat in row and stat in row_a:
+                row[stat] = min(row[stat], row_a[stat])
+        out[name] = row
+    return out
+
+
+def compare(base: Dict[str, dict], fresh: Dict[str, dict],
+            threshold: float, label: str, noise_cap: float = 2.0
+            ) -> Tuple[List[str], List[str]]:
+    """→ (failures, report lines)."""
+    failures = list(parity_failures(fresh, label))
+    common = []
+    for name in base:
+        if name not in fresh:
+            failures.append(f"{label}: baseline row {name} missing from "
+                            f"fresh run")
+            continue
+        b, f = row_p50(base[name]), row_p50(fresh[name])
+        if b and f:
+            noise = min(float(base[name].get("p50_noise", 1.0)),
+                        noise_cap)
+            common.append((name, b, f, max(noise, 1.0)))
+    if not common:
+        return failures, [f"{label}: no timed rows in common"]
+    ratios = sorted(f / b for _, b, f, _ in common)
+    scale = ratios[len(ratios) // 2]          # median fresh/base ratio
+    report = [f"{label}: machine-speed scale (median fresh/base) = "
+              f"{scale:.2f}x, threshold = +{threshold:.0%} x per-row "
+              f"observed noise"]
+    for name, b, f, noise in common:
+        norm = f / (b * scale)
+        allowed = (1.0 + threshold) * noise
+        flag = ""
+        if norm > allowed:
+            failures.append(
+                f"{label}: {name} p50 regressed {norm - 1.0:+.0%} "
+                f"(baseline {b:.0f}us -> fresh {f:.0f}us scale-adjusted; "
+                f"allowed +{allowed - 1.0:.0%} = threshold x observed "
+                f"noise {noise:.2f}x)")
+            flag = "  <-- REGRESSED"
+        report.append(f"  {name:45s} base {b:10.0f}us  fresh "
+                      f"{f:10.0f}us  norm {norm:5.2f}x "
+                      f"(allow {allowed:4.2f}x){flag}")
+    return failures, report
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", default=True,
+                    help="run the benches in quick mode (default; the "
+                         "committed baselines are quick-mode)")
+    ap.add_argument("--full", dest="quick", action="store_false")
+    ap.add_argument("--threshold", type=float, default=0.20,
+                    help="allowed normalized p50 regression (0.20 = 20%%)")
+    ap.add_argument("--baseline-dir", default=REPO,
+                    help="directory holding the committed BENCH_*.json")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="replace the committed baselines with this run")
+    ap.add_argument("--skip-run", action="store_true",
+                    help="compare existing --fresh-dir artifacts instead "
+                         "of running the benches")
+    ap.add_argument("--fresh-dir", default=None,
+                    help="where to write (or find, with --skip-run) the "
+                         "fresh artifacts; default: a temp dir")
+    ap.add_argument("--retries", type=int, default=2,
+                    help="re-runs of a bench whose rows regressed (each "
+                         "row keeps its per-run minimum)")
+    ap.add_argument("--noise-cap", type=float, default=2.0,
+                    help="cap on the per-row observed-noise multiplier "
+                         "(keeps the gate meaningful for very jittery "
+                         "rows)")
+    args = ap.parse_args()
+
+    fresh_dir = args.fresh_dir or tempfile.mkdtemp(prefix="bench_fresh_")
+    os.makedirs(fresh_dir, exist_ok=True)
+    failures: List[str] = []
+    for bench, (script, artifact) in BENCHES.items():
+        fresh_path = os.path.join(fresh_dir, artifact)
+        if not args.skip_run:
+            run_bench(script, fresh_path, args.quick)
+        fresh = load_rows(fresh_path)
+        if args.update_baseline and not args.skip_run:
+            # a committed baseline should be the row-wise noise *floor*:
+            # min-of-runs is hardware-bound from below, so extra runs only
+            # tighten it — and the max/min spread across those runs is
+            # the row's demonstrated run-to-run noise, committed as
+            # p50_noise and honored by every future gate
+            for _ in range(args.retries):
+                run_bench(script, fresh_path, args.quick)
+                fresh = merge_min(fresh, load_rows(fresh_path),
+                                  track_noise=True)
+        base_path = os.path.join(args.baseline_dir, artifact)
+        if not os.path.exists(base_path):
+            if args.update_baseline:
+                base_rows = fresh
+            else:
+                failures.append(
+                    f"{bench}: no committed baseline {base_path} "
+                    f"(run with --update-baseline to create it)")
+                continue
+        else:
+            base_rows = load_rows(base_path)
+        base = base_rows
+        fails, report = compare(base, fresh, args.threshold, bench,
+                                args.noise_cap)
+        retries = 0 if args.skip_run or args.update_baseline else \
+            args.retries
+        merged = False
+        while retries and any("regressed" in f for f in fails):
+            print(f"{bench}: timing regression(s) on a shared runner — "
+                  f"re-running to separate load bursts from real "
+                  f"regressions ({retries} "
+                  f"retr{'y' if retries == 1 else 'ies'} left)")
+            retries -= 1
+            run_bench(script, fresh_path, args.quick)
+            fresh = merge_min(fresh, load_rows(fresh_path))
+            merged = True
+            fails, report = compare(base, fresh, args.threshold, bench,
+                                    args.noise_cap)
+        if merged:
+            # the artifact on disk must be the rows the gate actually
+            # judged, not the last raw re-run — anyone debugging from the
+            # uploaded JSON (or re-checking with --skip-run) sees the
+            # same numbers this comparison used
+            with open(fresh_path) as f:
+                artifact_json = json.load(f)
+            artifact_json["rows"] = [fresh[r["name"]]
+                                     for r in artifact_json["rows"]]
+            with open(fresh_path, "w") as f:
+                json.dump(artifact_json, f, indent=2)
+                f.write("\n")
+        print("\n".join(report))
+        failures.extend(fails)
+        if args.update_baseline:
+            with open(fresh_path) as f:
+                artifact_json = json.load(f)
+            artifact_json["rows"] = [fresh[r["name"]]
+                                     for r in artifact_json["rows"]]
+            with open(base_path, "w") as f:
+                json.dump(artifact_json, f, indent=2)
+                f.write("\n")
+            print(f"{bench}: baseline {base_path} updated")
+    if failures and not args.update_baseline:
+        print("\nFAIL: " + "\n      ".join(failures))
+        return 1
+    if failures:
+        print("\n(update-baseline: ignoring "
+              f"{len(failures)} comparison failure(s))")
+    print("\nOK: benchmarks within threshold of committed baselines")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

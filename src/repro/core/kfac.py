@@ -81,6 +81,8 @@ class KfacConfig:
     T_corct: int = 500              # bkfacc correction period
     stagger: bool = False           # phase heavy work across the T window
     stagger_splits: int = 1         # max entry-aligned chunks per bucket
+    async_heavy: bool = False       # two-phase launch/land heavy pipeline
+    heavy_lag: int = 0              # steps between snapshot and swap-in
     # fallback optimizer for non-tapped params
     fallback_lr: optbase.Schedule = optbase.constant(1e-3)
     fallback_wd: float = 0.0
@@ -106,6 +108,12 @@ class KfacState(NamedTuple):
     factors: Dict[str, TapState]
     momentum: Any                # tree over tapped params (or None)
     fallback: Any                # AdamW state over non-tapped params
+    inflight: Dict[str, Any]     # bucket idx (str) → InflightState — the
+                                 # async pipeline's double buffer; {} when
+                                 # cfg.async_heavy is off, so pre-async
+                                 # checkpoints keep restoring (no default:
+                                 # a shared mutable {} on the class would
+                                 # alias across every state)
 
 
 # ---------------------------------------------------------------------------
@@ -193,6 +201,15 @@ class Kfac:
         for bi, b in enumerate(self.factor_buckets):
             for e in b.entries:
                 self._slot[(e.name, e.side)] = (bi, e.offset, e.count)
+        # async pipeline: which buckets carry an in-flight double buffer,
+        # and how many interim light panels each replays at landing
+        self._async_buckets: Dict[int, int] = {
+            bi: schedule.n_replay_panels(cfg, b.spec)
+            for bi, b in enumerate(self.factor_buckets)
+            if schedule.bucket_is_async(cfg, b.spec)}
+        if self._async_buckets and not cfg.bucketed:
+            raise ValueError("async_heavy requires bucketed=True (the "
+                             "in-flight buffers live in bucket layout)")
         self._cycle = self.scheduler().cycle
 
     def scheduler(self, **kw) -> schedule.Scheduler:
@@ -227,10 +244,15 @@ class Kfac:
                    for n, t in self.taps.items()}
         # fallback adamw over the full tree (updates masked to untapped)
         fb = self._fallback.init(params)
+        inflight = {str(bi): kfactor.make_inflight(
+                        self.factor_buckets[bi].spec,
+                        self.factor_buckets[bi].total, n_replay)
+                    for bi, n_replay in self._async_buckets.items()}
         return KfacState(step=jnp.zeros((), jnp.int32),
                          n_stats=jnp.zeros((), jnp.int32),
                          phase=jnp.zeros((), jnp.int32),
-                         factors=factors, momentum=mom, fallback=fb)
+                         factors=factors, momentum=mom, fallback=fb,
+                         inflight=inflight)
 
     # -- per-tap pieces -----------------------------------------------------
     def _stats_factors(self, name, acts, probe_grads, n_tokens):
@@ -314,39 +336,62 @@ class Kfac:
                                G=states[(name, "G")])
                 for name in self.taps}
 
-    def _bucketed_factor_work(self, factors, acts, probe_grads, n_tokens,
-                              rng, first, work: schedule.StepWork,
-                              bucket_step=None):
+    def _work_ranges(self, work: schedule.StepWork, bi: int):
+        """(launch, land) per-bucket ranges — empty for legacy masks
+        whose launch/land tuples were never populated."""
+        launch = work.launch[bi] if bi < len(work.launch) else ()
+        land = work.land[bi] if bi < len(work.land) else ()
+        return launch, land
+
+    def _bucketed_factor_work(self, factors, inflight, acts, probe_grads,
+                              n_tokens, rng, first,
+                              work: schedule.StepWork,
+                              bucket_step=None, landing=None):
         """Factor updates as one batched launch group per shape-class
         bucket: stats absorbs (EA SYRK), Brand panels + CholeskyQR2, and
         the scheduled heavy slot ranges each run over the bucket's flat
-        batch axis.
+        batch axis; async buckets additionally run this step's pipeline
+        phases (panel ring, launch snapshot, land swap) against their
+        in-flight buffer.
 
-        ``bucket_step(bi, bucket, st, X, keys)`` overrides the inner
-        per-bucket program (the distributed curvature engine substitutes
-        its shard_map-wrapped one); the surrounding loop — operand
-        collection, no-op skip, gather, per-slot key split, scatter —
-        exists ONLY here, so the sharded path can never diverge from the
-        replicated one structurally."""
+        ``bucket_step(bi, bucket, st, X, keys, buf, landed)`` overrides
+        the inner per-bucket program (the distributed curvature engine
+        substitutes its shard_map-wrapped one) and returns ``(st, buf)``;
+        the surrounding loop — operand collection, no-op skip, gather,
+        per-slot key split, scatter — exists ONLY here, so the sharded
+        path can never diverge from the replicated one structurally.
+
+        ``landing`` optionally maps bucket idx (str) → tuple of
+        pre-computed (U, D) pairs, one per land range, from an
+        overlapped dispatch (train.loop.AsyncInverseRunner)."""
         if bucket_step is None:
-            def bucket_step(bi, bucket, st, X, keys):
-                return kfactor.bucket_factor_step(
+            def bucket_step(bi, bucket, st, X, keys, buf, landed):
+                launch, land = self._work_ranges(work, bi)
+                return kfactor.bucket_factor_step_async(
                     bucket.spec, st, X, keys, first, work.stats,
-                    work.light, work.heavy[bi], self.cfg.use_kernels)
+                    work.light, work.heavy[bi], launch, land, buf,
+                    self.cfg.use_kernels, landed=landed)
         states, X_all = self.collect_factor_operands(factors, acts,
                                                      probe_grads, n_tokens)
+        inflight = dict(inflight)
         bkeys = jax.random.split(rng, len(self.factor_buckets))
         for bi, (bkey, bucket) in enumerate(zip(bkeys,
                                                 self.factor_buckets)):
+            launch, land = self._work_ranges(work, bi)
             if not kfactor.has_work(bucket.spec, work.stats, work.light,
-                                    bool(work.heavy[bi])):
+                                    bool(work.heavy[bi] or launch
+                                         or land)):
                 continue        # whole bucket is a no-op this step
             st = buckets.gather_states(bucket.entries, states)
             X = buckets.gather(bucket.entries, X_all)
             keys = jax.random.split(bkey, bucket.total)
-            st = bucket_step(bi, bucket, st, X, keys)
+            buf = inflight.get(str(bi))
+            landed = None if landing is None else landing.get(str(bi))
+            st, buf = bucket_step(bi, bucket, st, X, keys, buf, landed)
+            if buf is not None:
+                inflight[str(bi)] = buf
             states.update(buckets.scatter_states(bucket.entries, st))
-        return self.repack_factors(states)
+        return self.repack_factors(states), inflight
 
     def _bucketed_precondition(self, factors, grads, acts, probe_grads,
                                phi):
@@ -405,11 +450,14 @@ class Kfac:
                n_tokens, rng, work: Optional[schedule.StepWork] = None,
                do_stats: Optional[bool] = None,
                do_light: Optional[bool] = None,
-               do_heavy: Optional[bool] = None):
+               do_heavy: Optional[bool] = None, landing=None):
         """One optimizer step.  ``work`` is a static, hashable StepWork
         mask (jit with ``static_argnames=("work",)``); the legacy three
         python bools are accepted as a shim and converted to the
-        equivalent uniform (spiky) mask."""
+        equivalent uniform (spiky) mask.  ``landing`` optionally carries
+        pre-computed heavy results (bucket idx str → ((U, D), …) per
+        land range) from an overlapped dispatch; absent, landings
+        compute in-graph from the in-flight snapshot."""
         cfg = self.cfg
         if work is None:
             work = self.uniform_work(bool(do_stats), bool(do_light),
@@ -420,14 +468,19 @@ class Kfac:
 
         # 1) factor updates -------------------------------------------------
         factors = dict(state.factors)
+        inflight = dict(state.inflight)
         if work.any and self.curvature is not None and cfg.bucketed:
-            factors = self.curvature.factor_work(
-                self, factors, acts, probe_grads, n_tokens, rng, first,
-                work)
+            factors, inflight = self.curvature.factor_work(
+                self, factors, inflight, acts, probe_grads, n_tokens, rng,
+                first, work, landing=landing)
         elif work.any and cfg.bucketed:
-            factors = self._bucketed_factor_work(
-                factors, acts, probe_grads, n_tokens, rng, first, work)
+            factors, inflight = self._bucketed_factor_work(
+                factors, inflight, acts, probe_grads, n_tokens, rng,
+                first, work, landing=landing)
         elif work.any:
+            if work.any_async:
+                raise ValueError("async launch/land masks require the "
+                                 "bucketed optimizer path")
             keys = jax.random.split(rng, 2 * len(self.taps))
             for i, name in enumerate(sorted(self.taps)):
                 X_A, X_G = self._stats_factors(name, acts, probe_grads,
@@ -495,5 +548,6 @@ class Kfac:
             factors=factors,
             momentum=new_mom,
             fallback=fb_state,
+            inflight=inflight,
         )
         return updates, new_state

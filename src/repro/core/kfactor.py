@@ -265,6 +265,125 @@ def heavy_overwrite_batched(spec: KFactorSpec, st: KFactorState,
     return st
 
 
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class InflightState:
+    """Double buffer for one bucket's async heavy pipeline.
+
+    At a *launch* step the live factor state of the firing slots is
+    snapshotted here (post-stats, post-Brand — exactly what the inline
+    heavy op would have read); at the *land* step, ``lag`` steps later,
+    the heavy overwrite computed from the snapshot is swapped into the
+    live state with the interim Brand panels replayed on top.  All
+    leaves are slot-major (leading bucket batch axis) so the distributed
+    curvature engine shards them with the same per-slot round-robin plan
+    as the live state.
+
+    U/D/M/keys: (B, d, w) / (B, w) / (B, d, d) / (B, 2) snapshots.
+    panels: (B, n_replay, d, n_stat) ring of the last ``n_replay`` light
+    panels (oldest first); ``n_replay = lag // T_brand`` is static and
+    zero for non-Brand modes or ``lag < T_brand``.
+    live: (B,) per-slot validity — set at launch, cleared at land.  A
+    landing only swaps slots whose snapshot is live, so a launch that
+    was dropped (straggler back-off) or never happened (fresh resume at
+    an off-cycle phase) makes its scheduled landing a per-slot no-op
+    instead of swapping in a zero or one-cycle-stale snapshot: the
+    pipeline event simply defers to the next cycle.
+    """
+    U: Array
+    D: Array
+    M: Array
+    keys: Array
+    panels: Array
+    live: Array
+
+
+def make_inflight(spec: KFactorSpec, total: int, n_replay: int,
+                  dtype=jnp.float32) -> InflightState:
+    """Zero-initialized in-flight buffer for a bucket of ``total`` slots."""
+    return InflightState(
+        U=jnp.zeros((total, spec.d, spec.width), dtype),
+        D=jnp.zeros((total, spec.width), dtype),
+        M=jnp.zeros((total,) + ((spec.d, spec.d) if spec.needs_m
+                                else (1, 1)), dtype),
+        keys=jnp.zeros((total, 2), jnp.uint32),
+        panels=jnp.zeros((total, n_replay, spec.d, spec.n_stat), dtype),
+        live=jnp.zeros((total,), jnp.bool_),
+    )
+
+
+def record_panel(buf: InflightState, X: Array) -> InflightState:
+    """Shift the light-panel ring left and append this step's panel."""
+    if buf.panels.shape[1] == 0:
+        return buf
+    panels = jnp.concatenate([buf.panels[:, 1:], X[:, None]], axis=1)
+    return dataclasses.replace(buf, panels=panels)
+
+
+def launch_snapshot(buf: InflightState, st: KFactorState, keys: Array,
+                    lo: int, hi: int) -> InflightState:
+    """Snapshot the live state (and this step's per-slot keys) of slots
+    [lo, hi) into the buffer — the operands of the future heavy op."""
+    return InflightState(
+        U=buf.U.at[lo:hi].set(st.U[lo:hi]),
+        D=buf.D.at[lo:hi].set(st.D[lo:hi]),
+        M=buf.M.at[lo:hi].set(st.M[lo:hi]),
+        keys=buf.keys.at[lo:hi].set(keys[lo:hi]),
+        panels=buf.panels,
+        live=buf.live.at[lo:hi].set(True),
+    )
+
+
+def heavy_from_snapshot(spec: KFactorSpec, buf: InflightState,
+                        lo: int, hi: int) -> Tuple[Array, Array]:
+    """The heavy overwrite, computed from the snapshot of slots [lo, hi)
+    — a pure function of the buffer, so it can equally run in-graph at
+    the land step or as a separately-dispatched program launched right
+    after the snapshot (train.loop.AsyncInverseRunner)."""
+    snap = KFactorState(U=buf.U[lo:hi], D=buf.D[lo:hi], M=buf.M[lo:hi])
+    out = heavy_overwrite_batched(spec, snap, buf.keys[lo:hi])
+    return out.U, out.D
+
+
+def replay_panels(spec: KFactorSpec, U: Array, D: Array, panels: Array,
+                  use_kernel: bool = False) -> Tuple[Array, Array]:
+    """Replay the interim light panels (oldest first) onto an incoming
+    inverse rep — the landed state then carries every Brand absorb the
+    live state received while the heavy op was in flight."""
+    for j in range(panels.shape[1]):
+        U, D = brand.ea_brand_step(U, D, panels[:, j], spec.rho, spec.r,
+                                   use_kernel=use_kernel)
+        if U.shape[-1] > spec.width:
+            U, D = U[..., :, :spec.width], D[..., :spec.width]
+    return U, D
+
+
+def land_swap(spec: KFactorSpec, st: KFactorState, buf: InflightState,
+              lo: int, hi: int, use_kernel: bool = False,
+              landed=None) -> Tuple[KFactorState, InflightState]:
+    """Swap the landed inverse rep of slots [lo, hi) into the live state
+    atomically.  ``landed`` is an optionally pre-computed (U, D) pair
+    from an overlapped dispatch; when absent the heavy op runs in-graph
+    from the snapshot (same function, same operands, same result).
+
+    Only slots whose snapshot is ``live`` swap (and the flag is consumed
+    here): a dropped or never-fired launch turns its landing into a
+    per-slot no-op rather than installing a zero / stale snapshot."""
+    if landed is None:
+        U, D = heavy_from_snapshot(spec, buf, lo, hi)
+    else:
+        U, D = landed
+    if spec.mode in _HAS_BRAND:
+        U, D = replay_panels(spec, U, D, buf.panels[lo:hi], use_kernel)
+    ok = buf.live[lo:hi]
+    U = jnp.where(ok[:, None, None], U, st.U[lo:hi])
+    D = jnp.where(ok[:, None], D, st.D[lo:hi])
+    st = KFactorState(U=st.U.at[lo:hi].set(U),
+                      D=st.D.at[lo:hi].set(D), M=st.M)
+    buf = dataclasses.replace(buf, live=buf.live.at[lo:hi].set(False))
+    return st, buf
+
+
 def bucket_factor_step(spec: KFactorSpec, st: KFactorState, X: Array,
                        keys: Array, first: Array, stats: bool, light: bool,
                        heavy_ranges, use_kernel: bool = False
@@ -293,6 +412,44 @@ def bucket_factor_step(spec: KFactorSpec, st: KFactorState, X: Array,
         st = jax.tree_util.tree_map(
             lambda full, part: full.at[lo:hi].set(part), st, sub)
     return st
+
+
+def bucket_factor_step_async(spec: KFactorSpec, st: KFactorState, X: Array,
+                             keys: Array, first: Array, stats: bool,
+                             light: bool, heavy_ranges, launch_ranges,
+                             land_ranges, buf: Optional[InflightState],
+                             use_kernel: bool = False, landed=None
+                             ) -> Tuple[KFactorState,
+                                        Optional[InflightState]]:
+    """One scheduled step of the async double-buffered pipeline for a
+    whole bucket: the synchronous program (stats / Brand / any inline
+    heavy — e.g. the step-0 warmup) runs first, then this step's pipeline
+    phases, in an order that makes ``lag=0`` bit-for-bit the synchronous
+    path:
+
+      1. record this step's light panel into the replay ring,
+      2. *launch*: snapshot the post-stats/post-Brand state of the
+         firing slots (plus their per-slot keys) into the buffer,
+      3. *land*: swap the heavy result computed from the (possibly
+         ``lag``-steps-old) snapshot into the live state, interim panels
+         replayed on top.  With ``lag=0`` step 3 reads the snapshot step
+         2 just wrote — the same operands the inline heavy op consumes.
+
+    ``landed`` optionally supplies pre-computed (U, D) pairs, one per
+    land range, from an overlapped dispatch (AsyncInverseRunner).
+    """
+    st = bucket_factor_step(spec, st, X, keys, first, stats, light,
+                            heavy_ranges, use_kernel)
+    if buf is None:
+        return st, None
+    if light:
+        buf = record_panel(buf, X)
+    for lo, hi in tuple(launch_ranges):
+        buf = launch_snapshot(buf, st, keys, lo, hi)
+    for i, (lo, hi) in enumerate(tuple(land_ranges)):
+        st, buf = land_swap(spec, st, buf, lo, hi, use_kernel,
+                            landed=None if landed is None else landed[i])
+    return st, buf
 
 
 # ---------------------------------------------------------------------------

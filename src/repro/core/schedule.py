@@ -41,6 +41,35 @@ the unstaggered schedule has the same coupling at phase 0), so such
 buckets are pinned to phase 0: staggered and legacy schedules then fire
 identical Brand absorbs.  EVD/RSVD buckets have no light work and phase
 freely.
+
+Async launch/land (``cfg.async_heavy``): the paper's whole premise is
+that the EA construction tolerates slightly-stale inverse estimates, so
+heavy overwrites need not run inline at their scheduled step at all.
+With ``heavy_lag = L > 0`` each unit's heavy firing becomes a two-phase
+pipeline event: at its phase the factor state is *snapshotted* into the
+in-flight buffer (``StepWork.launch``), and ``L`` steps later the heavy
+result — computed from that snapshot, interim Brand panels replayed on
+top — is swapped into the live state (``StepWork.land``).  ``lag=0``
+degenerates to launch+land on the same step, which is numerically
+identical to the synchronous path (the exactness contract, asserted in
+tests and in the ``step/async_vs_sync`` bench row).  Per-factor landing
+cadence is still exactly ``T`` — only shifted by the constant ``L``.
+
+Two async invariants keep every mask static:
+
+  * ``L < T`` (one in-flight event per unit: the buffer is a single
+    snapshot, not a queue);
+  * a Brand-family bucket pipelines only when ``T_brand | T`` (phases
+    snapped): launch steps are then ≡ 0 (mod T_brand), so the number of
+    interim light panels to replay at landing is the *constant*
+    ``L // T_brand``.  When ``T_brand ∤ T`` the interim-panel count
+    would vary per firing, so such buckets stay synchronous (inline
+    heavy at phase 0, exactly the legacy coupling).
+
+The step-0 warmup stays synchronous in async mode: EVD/RSVD states must
+be populated from the very first stats batch (an empty factor has no
+spectrum to damp), so step 0 fires every unit inline and the pipeline
+takes over from each unit's first regular phase.
 """
 from __future__ import annotations
 
@@ -59,19 +88,31 @@ class StepWork:
 
     ``heavy`` holds, for each factor bucket (in ``Kfac.factor_buckets``
     order), the slot ranges ``(lo, hi)`` of the bucket batch whose heavy
-    overwrite fires this step.  Hashable → usable as a jit static arg.
+    overwrite fires *inline* this step.  ``launch``/``land`` are the
+    async pipeline's two phases in the same per-bucket-ranges layout:
+    ``launch`` snapshots those slots' factor state into the in-flight
+    buffer, ``land`` swaps the heavy result computed from the snapshot
+    (plus replayed interim Brand panels) into the live state.  They
+    default empty so the synchronous masks are unchanged pytrees.
+    Hashable → usable as a jit static arg.
     """
     stats: bool
     light: bool
     heavy: Tuple[Ranges, ...]
+    launch: Tuple[Ranges, ...] = ()
+    land: Tuple[Ranges, ...] = ()
 
     @property
     def any_heavy(self) -> bool:
         return any(self.heavy)
 
     @property
+    def any_async(self) -> bool:
+        return any(self.launch) or any(self.land)
+
+    @property
     def any(self) -> bool:
-        return self.stats or self.light or self.any_heavy
+        return self.stats or self.light or self.any_heavy or self.any_async
 
     def entry_heavy(self, bucket_idx: int, offset: int, count: int) -> bool:
         """True iff any firing range overlaps slot range [offset,
@@ -82,19 +123,27 @@ class StepWork:
                    for lo, hi in self.heavy[bucket_idx])
 
 
+def _empty(factor_buckets) -> Tuple[Ranges, ...]:
+    return tuple(() for _ in factor_buckets)
+
+
 def uniform_work(do_stats: bool, do_light: bool, do_heavy: bool,
                  factor_buckets) -> StepWork:
     """The legacy three-bool step as a StepWork: heavy fires for every
     bucket in full, or for none — the seed's spiky schedule."""
     heavy = tuple((((0, b.total),) if do_heavy else ())
                   for b in factor_buckets)
-    return StepWork(stats=bool(do_stats), light=bool(do_light), heavy=heavy)
+    return StepWork(stats=bool(do_stats), light=bool(do_light), heavy=heavy,
+                    launch=_empty(factor_buckets),
+                    land=_empty(factor_buckets))
 
 
 def no_work(factor_buckets) -> StepWork:
     """An all-skip step (straggler back-off)."""
     return StepWork(stats=False, light=False,
-                    heavy=tuple(() for _ in factor_buckets))
+                    heavy=_empty(factor_buckets),
+                    launch=_empty(factor_buckets),
+                    land=_empty(factor_buckets))
 
 
 def legacy_flags(cfg, step: int) -> Dict[str, bool]:
@@ -115,11 +164,49 @@ def legacy_flags(cfg, step: int) -> Dict[str, bool]:
 class Unit:
     """One schedulable chunk of heavy work: entry-aligned slot range
     [lo, hi) of factor bucket ``bucket``, firing at steps
-    ``k ≡ phase (mod T)``."""
+    ``k ≡ phase (mod T)``.  ``sync_only`` marks units that must run
+    their heavy op inline even under an async schedule (Brand-family
+    buckets whose light period does not divide the heavy period — see
+    module docstring)."""
     bucket: int
     lo: int
     hi: int
     phase: int
+    sync_only: bool = False
+
+
+def bucket_is_async(cfg, spec) -> bool:
+    """True iff a factor bucket with this spec pipelines its heavy work
+    under ``cfg.async_heavy`` (needs an in-flight buffer).  Brand-family
+    buckets pipeline only when ``T_brand`` divides the variant's heavy
+    period — otherwise the interim-panel count would not be static."""
+    from repro.core import kfactor
+    if not getattr(cfg, "async_heavy", False):
+        return False
+    if not kfactor.has_heavy_op(spec):
+        return False
+    period_field = policy_lib.heavy_period_field(cfg.policy.variant)
+    if period_field is None:
+        return False
+    T = int(getattr(cfg, period_field))
+    if (policy_lib.has_light(cfg.policy.variant)
+            and spec.mode in kfactor._HAS_BRAND):
+        return T % cfg.T_brand == 0
+    return True
+
+
+def n_replay_panels(cfg, spec) -> int:
+    """Static count of interim Brand panels replayed at a landing: the
+    light steps in ``(launch, launch + lag]``.  Launch phases of async
+    Brand-family buckets are snapped to multiples of ``T_brand``, so the
+    count is exactly ``lag // T_brand`` — zero for non-Brand modes and
+    for the common ``lag < T_brand`` regime."""
+    from repro.core import kfactor
+    if not bucket_is_async(cfg, spec):
+        return 0
+    if spec.mode not in kfactor._HAS_BRAND:
+        return 0
+    return int(getattr(cfg, "heavy_lag", 0)) // cfg.T_brand
 
 
 def _chunk_boundaries(bucket, align: int) -> Tuple[int, ...]:
@@ -167,11 +254,19 @@ class Scheduler:
     unit on step 0 so EVD/RSVD states are populated from the first stats
     batch, exactly as in the spiky schedule — after that, each unit's
     firings are exactly ``phase, phase+T, phase+2T, …``.
+
+    ``async_heavy``/``lag`` turn each heavy firing into a launch/land
+    pipeline event: a unit launches at ``phase + iT`` (``i ≥ 1`` — i.e.
+    every regular firing step; the step-0 warmup stays inline) and lands
+    at ``phase + iT + lag``.  ``lag=0`` launches and lands on the same
+    step (numerically identical to inline); ``sync_only`` units keep
+    firing inline at their phase.
     """
 
     def __init__(self, cfg, factor_buckets, *, splits: Optional[int] = None,
                  align: int = 1, stagger: Optional[bool] = None,
-                 warmup: bool = True):
+                 warmup: bool = True, async_heavy: Optional[bool] = None,
+                 lag: Optional[int] = None):
         self.cfg = cfg
         self.buckets = tuple(factor_buckets)
         self.stagger = cfg.stagger if stagger is None else stagger
@@ -181,6 +276,18 @@ class Scheduler:
         period_field = policy_lib.heavy_period_field(variant)
         self.T_heavy = (None if period_field is None
                         else int(getattr(cfg, period_field)))
+        self.async_heavy = (bool(getattr(cfg, "async_heavy", False))
+                            if async_heavy is None else async_heavy)
+        self.lag = (int(getattr(cfg, "heavy_lag", 0))
+                    if lag is None else int(lag))
+        if self.T_heavy is None:
+            self.async_heavy = False
+        if self.async_heavy:
+            if not (0 <= self.lag < self.T_heavy):
+                raise ValueError(
+                    f"heavy_lag={self.lag} must satisfy 0 <= lag < "
+                    f"T_heavy={self.T_heavy} (one in-flight snapshot "
+                    f"per unit)")
         splits = cfg.stagger_splits if splits is None else splits
         self.units: Tuple[Unit, ...] = self._assign_phases(splits, align)
 
@@ -219,7 +326,11 @@ class Scheduler:
             else:
                 raw = (i * T) // max(n_units, 1)
                 phase = (raw // snap) * snap % T
-            units.append(Unit(bucket=bi, lo=lo, hi=hi, phase=phase))
+            sync_only = (self.async_heavy and
+                         not bucket_is_async(self.cfg,
+                                             self.buckets[bi].spec))
+            units.append(Unit(bucket=bi, lo=lo, hi=hi, phase=phase,
+                              sync_only=sync_only))
         return tuple(units)
 
     @property
@@ -236,15 +347,28 @@ class Scheduler:
         stats = step % self.cfg.T_updt == 0
         light = self.has_light and step % self.cfg.T_brand == 0
         heavy = [[] for _ in self.buckets]
+        launch = [[] for _ in self.buckets]
+        land = [[] for _ in self.buckets]
         if self.T_heavy is not None:
+            T, L = self.T_heavy, self.lag
             for u in self.units:
-                fires = step % self.T_heavy == u.phase
-                if self.warmup and step == 0:
-                    fires = True
-                if fires:
+                fires = step % T == u.phase
+                warm = self.warmup and step == 0
+                if not self.async_heavy or u.sync_only:
+                    if fires or warm:
+                        heavy[u.bucket].append((u.lo, u.hi))
+                    continue
+                # async: warmup stays inline; regular firings pipeline
+                if warm:
                     heavy[u.bucket].append((u.lo, u.hi))
+                if fires and step > 0:
+                    launch[u.bucket].append((u.lo, u.hi))
+                if step - L > 0 and (step - L) % T == u.phase:
+                    land[u.bucket].append((u.lo, u.hi))
         return StepWork(stats=stats, light=light,
-                        heavy=tuple(_merge(r) for r in heavy))
+                        heavy=tuple(_merge(r) for r in heavy),
+                        launch=tuple(_merge(r) for r in launch),
+                        land=tuple(_merge(r) for r in land))
 
     def flags(self, step: int) -> Dict[str, bool]:
         """Legacy three-bool view of this schedule (un-staggered)."""
@@ -252,9 +376,11 @@ class Scheduler:
 
     def describe(self) -> str:
         parts = [f"T_heavy={self.T_heavy} stagger={self.stagger} "
+                 f"async={self.async_heavy} lag={self.lag} "
                  f"units={len(self.units)}"]
         for u in self.units:
-            parts.append(f"[b{u.bucket} {u.lo}:{u.hi} @{u.phase}]")
+            sync = " sync" if u.sync_only else ""
+            parts.append(f"[b{u.bucket} {u.lo}:{u.hi} @{u.phase}{sync}]")
         return " ".join(parts)
 
 

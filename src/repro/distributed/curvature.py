@@ -127,53 +127,94 @@ class CurvatureEngine:
         return rep, dev
 
     # -- the sharded factor work -------------------------------------------
-    def factor_work(self, opt, factors, acts, probe_grads, n_tokens, rng,
-                    first, work: schedule.StepWork):
+    def factor_work(self, opt, factors, inflight, acts, probe_grads,
+                    n_tokens, rng, first, work: schedule.StepWork,
+                    landing=None):
         """Drop-in for ``Kfac._bucketed_factor_work``: same operands, same
         per-slot numerics, 1/N of the factor work per device.  The bucket
         loop (operand collection, no-op skip, gather/scatter, per-slot
         keys) is Kfac's own — only the inner per-bucket program is
-        substituted with the shard_map-wrapped one."""
+        substituted with the shard_map-wrapped one.
 
-        def bucket_step(bi, bucket, st, X, keys):
+        Async launch/land phases run *inside* the sharded program: each
+        device snapshots and lands only its ⌈B/N⌉ local slots, so the
+        heavy cost of a landing is 1/N of the replicated pipeline's, the
+        landed low-rank reps ride the same all-gather as the synchronous
+        path, and the in-flight snapshot of the dense M — like the live
+        M — never leaves its owning device.  Pre-computed ``landing``
+        operands are a replicated-path optimization and are rejected
+        here (the engine lands in-graph)."""
+        if landing:
+            raise ValueError("the distributed curvature engine computes "
+                             "landings in-graph; overlapped landing "
+                             "operands are a replicated-path feature")
+
+        def bucket_step(bi, bucket, st, X, keys, buf, landed):
+            launch, land = opt._work_ranges(work, bi)
             return self._bucket_step(bucket.spec, self.plans[bi], st, X,
                                      keys, first, work.stats, work.light,
-                                     work.heavy[bi], opt.cfg.use_kernels)
+                                     work.heavy[bi], launch, land, buf,
+                                     opt.cfg.use_kernels)
 
-        return opt._bucketed_factor_work(factors, acts, probe_grads,
-                                         n_tokens, rng, first, work,
+        return opt._bucketed_factor_work(factors, inflight, acts,
+                                         probe_grads, n_tokens, rng,
+                                         first, work,
                                          bucket_step=bucket_step)
 
     def _bucket_step(self, spec, plan: ShardPlan, st: KFactorState,
                      X: Array, keys: Array, first: Array, stats: bool,
-                     light: bool, ranges, use_kernel: bool
-                     ) -> KFactorState:
+                     light: bool, ranges, launch, land, buf,
+                     use_kernel: bool):
         """One bucket's step under shard_map: each device runs the shared
         per-bucket program on its ⌈B/N⌉ local slots, then all-gathers the
-        O(d·r) low-rank rep; the O(d²) dense M stays device-sharded."""
-        local_ranges = buckets.localize_ranges(ranges, plan.total, plan.n)
+        O(d·r) low-rank rep; the O(d²) dense M — live and in-flight
+        snapshot alike — stays device-sharded."""
+        loc = lambda r: buckets.localize_ranges(r, plan.total, plan.n)
+        local_heavy, local_launch, local_land = loc(ranges), loc(launch), \
+            loc(land)
         st = plan.shard(st)
         X = plan.shard(X)
         keys = plan.shard(keys)
         axis = self.axis
 
-        def body(st, X, keys, first):
-            st = kfactor.bucket_factor_step(spec, st, X, keys, first,
-                                            stats, light, local_ranges,
-                                            use_kernel)
+        if buf is None:
+            def body(st, X, keys, first):
+                st = kfactor.bucket_factor_step(spec, st, X, keys, first,
+                                                stats, light, local_heavy,
+                                                use_kernel)
+                U = jax.lax.all_gather(st.U, axis, axis=0, tiled=True)
+                D = jax.lax.all_gather(st.D, axis, axis=0, tiled=True)
+                return KFactorState(U=U, D=D, M=st.M)
+
+            out = shard_map(
+                body, mesh=self.mesh,
+                in_specs=(P(axis), P(axis), P(axis), P()),
+                out_specs=KFactorState(U=P(), D=P(), M=P(axis)),
+                check_rep=False,
+            )(st, X, keys, first)
+            # U/D came back gathered in device-major layout; M sharded in
+            # the same layout.  One static take restores slot order
+            # everywhere.
+            return plan.unshard(out), None
+
+        buf = plan.shard(buf)
+        buf_spec = jax.tree_util.tree_map(lambda _: P(axis), buf)
+
+        def body(st, X, keys, first, buf):
+            st, buf = kfactor.bucket_factor_step_async(
+                spec, st, X, keys, first, stats, light, local_heavy,
+                local_launch, local_land, buf, use_kernel)
             U = jax.lax.all_gather(st.U, axis, axis=0, tiled=True)
             D = jax.lax.all_gather(st.D, axis, axis=0, tiled=True)
-            return KFactorState(U=U, D=D, M=st.M)
+            return KFactorState(U=U, D=D, M=st.M), buf
 
-        out = shard_map(
+        out, buf = shard_map(
             body, mesh=self.mesh,
-            in_specs=(P(axis), P(axis), P(axis), P()),
-            out_specs=KFactorState(U=P(), D=P(), M=P(axis)),
+            in_specs=(P(axis), P(axis), P(axis), P(), buf_spec),
+            out_specs=(KFactorState(U=P(), D=P(), M=P(axis)), buf_spec),
             check_rep=False,
-        )(st, X, keys, first)
-        # U/D came back gathered in device-major layout; M sharded in the
-        # same layout.  One static take restores slot order everywhere.
-        return plan.unshard(out)
+        )(st, X, keys, first, buf)
+        return plan.unshard(out), plan.unshard(buf)
 
     def describe(self) -> str:
         parts = [f"axis={self.axis} n={self.n_devices}"]

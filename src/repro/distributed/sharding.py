@@ -145,6 +145,18 @@ def kfac_state_sharding(opt_state, mesh: Mesh, curvature_axis=None):
 
     def one(kp, leaf):
         path = _leaf_path(kp)
+        if path.startswith("inflight"):
+            # async in-flight buffers (bucket-slot-major): the dense M
+            # snapshot follows the live M onto the curvature axis (only
+            # the slot's owning device ever reads it — same round-robin
+            # assignment); U/D/keys/panels replicate like the live
+            # low-rank rep, which is all-gathered at every landing.
+            field = path.rsplit("/", 1)[-1]
+            if field == "M" and curvature_axis is not None and \
+                    leaf.ndim >= 3 and leaf.shape[-1] > 1:
+                spec = P(*((curvature_axis,) + (None,) * (leaf.ndim - 1)))
+                return NamedSharding(mesh, fit_spec(spec, leaf.shape, mesh))
+            return NamedSharding(mesh, P())
         if "/factors/" in "/" + path + "/" or path.startswith("factors"):
             # KFactorState leaves: U (…, d, w), M (…, d, d), D (…, w)
             field = path.rsplit("/", 1)[-1]

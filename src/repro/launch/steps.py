@@ -92,11 +92,16 @@ def build_train_step(arch: ArchConfig, mesh: Optional[Mesh] = None,
                      cell: Optional[ShapeCell] = None,
                      flags: Optional[Dict[str, bool]] = None,
                      work=None, curvature_axis: Optional[str] = None,
-                     remat: bool = True, plan: str = "tp") -> BuiltTrain:
+                     remat: bool = True, plan: str = "tp",
+                     async_heavy: bool = False,
+                     heavy_lag: int = 0) -> BuiltTrain:
     """``work`` (a schedule.StepWork) supersedes ``flags`` when given —
     the dry-run lowers the exact staggered step variant the scheduler
     would dispatch.  ``curvature_axis`` shards the bucketed factor work
-    across that mesh axis via the distributed curvature engine."""
+    across that mesh axis via the distributed curvature engine.
+    ``async_heavy``/``heavy_lag`` enable the double-buffered heavy
+    pipeline (the dry-run then lowers launch/land step variants and the
+    optimizer state carries the in-flight buffers)."""
     cell = cell or SHAPES["train_4k"]
     flags = flags or dict(do_stats=True, do_light=True, do_heavy=False)
     if plan == "fsdp" and mesh is not None:
@@ -106,7 +111,11 @@ def build_train_step(arch: ArchConfig, mesh: Optional[Mesh] = None,
     else:
         sp = shard_policy_for(mesh)
     lm = LM(arch, sp, remat=remat, unroll=unroll)
-    opt = kfac_lib.Kfac(default_kfac_config(arch, variant), lm.taps)
+    kcfg = default_kfac_config(arch, variant)
+    if async_heavy:
+        kcfg = dataclasses.replace(kcfg, async_heavy=True,
+                                   heavy_lag=heavy_lag)
+    opt = kfac_lib.Kfac(kcfg, lm.taps)
     if curvature_axis is not None and mesh is not None:
         from repro.distributed import curvature as curvature_lib
         curvature_lib.CurvatureEngine.for_kfac(opt, mesh, curvature_axis)

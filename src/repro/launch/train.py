@@ -59,6 +59,16 @@ def main():
     ap.add_argument("--no-stagger", dest="stagger", action="store_false")
     ap.add_argument("--stagger-splits", type=int, default=4,
                     help="max entry-aligned chunks per factor bucket")
+    ap.add_argument("--async-heavy", dest="async_heavy",
+                    action="store_true",
+                    help="two-phase launch/land heavy pipeline: heavy "
+                         "overwrites compute against a snapshot and swap "
+                         "in --heavy-lag steps later (overlapped with "
+                         "training on a spare device when replicated)")
+    ap.add_argument("--heavy-lag", type=int, default=2,
+                    help="steps between a heavy launch (snapshot) and "
+                         "its landing (swap-in); 0 = same-step (exactly "
+                         "the synchronous numerics)")
     ap.add_argument("--curvature", default="auto",
                     choices=("auto", "none"),
                     help="auto: shard factor work across the mesh's first "
@@ -89,7 +99,10 @@ def main():
             weight_decay=1e-4, clip=0.5, T_updt=2, T_inv=10, T_brand=2,
             T_rsvd=10, T_corct=10, fallback_lr=optbase.constant(3e-3))
     kcfg = dataclasses.replace(kcfg, stagger=args.stagger,
-                               stagger_splits=args.stagger_splits)
+                               stagger_splits=args.stagger_splits,
+                               async_heavy=args.async_heavy,
+                               heavy_lag=args.heavy_lag if args.async_heavy
+                               else 0)
     opt = kfac_lib.Kfac(kcfg, lm.taps)
     curv_axis = None
     if args.curvature == "auto" and mesh is not None:
@@ -105,8 +118,13 @@ def main():
               f"{rep} factor slots replicated -> {dev}/device "
               f"({eng.describe()})")
     sched = opt.scheduler()
-    if args.stagger:
+    if args.stagger or args.async_heavy:
         print(f"[train] heavy-work scheduler: {sched.describe()}")
+    runner = (loop_lib.AsyncInverseRunner.for_opt(opt)
+              if args.async_heavy else None)
+    if runner is not None:
+        print(f"[train] async heavy pipeline: lag={kcfg.heavy_lag} "
+              f"offload={'spare device' if runner.device else 'in-thread'}")
 
     n_tokens = args.batch * args.seq
     stream = TokenStream(vocab=arch.vocab, batch=args.batch,
@@ -148,7 +166,9 @@ def main():
     ctx = mesh if mesh is not None else contextlib.nullcontext()
     with ctx:
         run_steps(args, sched, det, stream, step_fn, state,
-                  checkpointer, k0, t_start, losses)
+                  checkpointer, k0, t_start, losses, runner=runner)
+    if runner is not None:
+        runner.close()
     if checkpointer is not None:
         checkpointer.close()
     print(f"[train] done: loss {losses[0]:.4f} -> "
@@ -157,7 +177,7 @@ def main():
 
 
 def run_steps(args, sched, det, stream, step_fn, state, checkpointer,
-              k0, t_start, losses):
+              k0, t_start, losses, runner=None):
     for k in range(k0, args.steps):
         t0 = time.time()
         work = sched.work(k)
@@ -166,7 +186,10 @@ def run_steps(args, sched, det, stream, step_fn, state, checkpointer,
                                                    strag_lib.Action.NONE),
                                        work)
         batch = stream.batch_at(k)
-        state, loss = step_fn(state, batch, work)
+        landing = runner.landing(work) if runner is not None else None
+        state, loss = step_fn(state, batch, work, landing)
+        if runner is not None:
+            runner.launch(state.opt, work)
         losses.append(float(loss))
         if checkpointer is not None and k % args.ckpt_every == 0:
             checkpointer.submit(k, state)

@@ -27,6 +27,25 @@ import numpy as np
 
 SEP = "|"
 
+#: Manifest schema version — bump whenever the trained pytree structure
+#: changes incompatibly, and record the change here so restore failures
+#: can say what actually happened:
+#:   v1  seed .. PR 2   (KfacState without `phase`)
+#:   v2  PR 3           (KfacState.phase: schedule position for resume)
+#:   v3  PR 5           (KfacState.inflight: async heavy pipeline's
+#:                       in-flight snapshot buffers — saved mid-lag and
+#:                       restored so pending landings still fire)
+#: Leaf-compatible additions (e.g. inflight == {} when async is off)
+#: restore across versions; the schema is used to *explain* mismatches,
+#: not to reject compatible checkpoints.
+SCHEMA_VERSION = 3
+
+_SCHEMA_HISTORY = {
+    1: "seed..PR2 pytree (KfacState without `phase`)",
+    2: "PR3 pytree (added KfacState.phase)",
+    3: "PR5 pytree (added KfacState.inflight async buffers)",
+}
+
 
 def _key_str(k) -> str:
     for attr in ("key", "name", "idx"):
@@ -70,6 +89,7 @@ def save(directory: str, step: int, tree, extra: Optional[dict] = None
     np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
     manifest = {
         "step": step,
+        "schema": SCHEMA_VERSION,
         "time": time.time(),
         "n_arrays": len(arrays),
         "bytes": int(sum(a.nbytes for a in arrays.values())),
@@ -102,10 +122,22 @@ def latest_step(directory: str) -> Optional[int]:
     return m["step"] if m.get("done") else None
 
 
+class SchemaMismatchError(RuntimeError):
+    """A checkpoint's pytree structure does not match the template —
+    raised with the manifest schema versions so the operator knows
+    whether to migrate or re-run (instead of the opaque KeyError the
+    raw leaf lookup produces)."""
+
+
 def restore(directory: str, template, step: Optional[int] = None,
             shardings=None) -> Tuple[Any, dict]:
     """Load a checkpoint into the template's structure.  ``shardings`` (a
-    matching pytree of NamedSharding) re-lays the arrays onto any mesh."""
+    matching pytree of NamedSharding) re-lays the arrays onto any mesh.
+
+    A checkpoint written by an older pytree schema (e.g. pre-PR-3 states
+    without ``KfacState.phase``, or pre-async states restored into an
+    ``async_heavy`` template) fails with a :class:`SchemaMismatchError`
+    naming both schema versions and what changed between them."""
     if step is None:
         step = latest_step(directory)
         if step is None:
@@ -115,7 +147,22 @@ def restore(directory: str, template, step: Optional[int] = None,
         manifest = json.load(f)
     with np.load(os.path.join(path, "arrays.npz")) as z:
         arrays = {k: z[k] for k in z.files}
-    tree = _unflatten_into(template, arrays)
+    try:
+        tree = _unflatten_into(template, arrays)
+    except KeyError as e:
+        found = manifest.get("schema", 1)
+        raise SchemaMismatchError(
+            f"checkpoint {path} has manifest schema v{found} "
+            f"({_SCHEMA_HISTORY.get(found, 'unknown layout')}) but this "
+            f"build restores schema v{SCHEMA_VERSION} "
+            f"({_SCHEMA_HISTORY[SCHEMA_VERSION]}): leaf {e.args[0]!r} is "
+            f"missing from the saved arrays.  Re-run training from "
+            f"scratch, or migrate the checkpoint (load it with the "
+            f"writing build's state template, then re-save with this "
+            f"one).  Async note: a pre-async checkpoint restores fine "
+            f"when async_heavy is off; turning async on mid-run needs a "
+            f"fresh (or migrated) checkpoint because the in-flight "
+            f"buffers join the pytree.") from e
     if shardings is not None:
         tree = jax.tree_util.tree_map(
             lambda x, s: jax.device_put(x, s), tree, shardings)

@@ -3,16 +3,30 @@
 
 The K-FAC step computes grads w.r.t. (params, probes) in one backward pass;
 probe-grads and tapped activations feed the curvature machinery.
+
+:class:`AsyncInverseRunner` is the loop-level half of the async heavy
+pipeline (``KfacConfig.async_heavy``): right after a launch step writes a
+factor snapshot into ``KfacState.inflight``, the runner dispatches the
+heavy overwrite for those slots as a *separate* jitted program from a
+worker thread — pinned to a spare device when one exists — and hands the
+finished (U, D) back to the land step ``lag`` steps later.  The land step
+then only swaps arrays and replays interim Brand panels; the EVD/RSVD
+cost overlaps the lag window's training steps instead of sitting in any
+step's critical path.  Without a runner the land step computes the same
+function in-graph (same snapshot, same keys → same result), which is the
+semantics tests and the sharded engine use.
 """
 from __future__ import annotations
 
 import functools
+from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Callable, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import kfac as kfac_lib
+from repro.core import kfactor
 from repro.models import layers
 from repro.optim import base as optbase
 
@@ -58,24 +72,107 @@ def make_kfac_step(loss_fn: Callable, opt: kfac_lib.Kfac,
 
 def make_scheduled_kfac_step(loss_fn: Callable, opt: kfac_lib.Kfac,
                              n_tokens: int, probe_dtype=jnp.float32):
-    """Returns step(state, batch, work) with ``work`` a static
-    :class:`repro.core.schedule.StepWork` mask — jit with
+    """Returns step(state, batch, work, landing=None) with ``work`` a
+    static :class:`repro.core.schedule.StepWork` mask — jit with
     ``static_argnames=("work",)``.  The mask is hashable, so each distinct
     mask (at most #scheduler-units + O(1) over a schedule cycle) compiles
-    once to a lean HLO, exactly like the legacy bool variants."""
+    once to a lean HLO, exactly like the legacy bool variants.
 
-    def step(state: TrainState, batch, work):
+    ``landing`` carries pre-computed heavy results for this step's land
+    ranges (see :class:`AsyncInverseRunner`); ``None`` lands in-graph."""
+
+    def step(state: TrainState, batch, work, landing=None):
         rng, sub = jax.random.split(state.rng)
         probes = layers.make_probes(opt.taps, probe_dtype)
         loss, acts, gp, gprobe = kfac_grads(loss_fn, state.params, probes,
                                             batch)
         updates, opt_state = opt.update(
             gp, state.opt, state.params, acts=acts, probe_grads=gprobe,
-            n_tokens=n_tokens, rng=sub, work=work)
+            n_tokens=n_tokens, rng=sub, work=work, landing=landing)
         params = optbase.apply_updates(state.params, updates)
         return TrainState(params=params, opt=opt_state, rng=rng), loss
 
     return step
+
+
+class AsyncInverseRunner:
+    """Overlapped dispatch for the async heavy pipeline (replicated path).
+
+    ``launch(opt_state, work)`` — call right AFTER the step that executed
+    ``work`` (its launch mask wrote the snapshots being read here): slices
+    each launched range out of the in-flight buffer and submits the heavy
+    overwrite to a worker thread as its own jitted program.  With a spare
+    ``device`` the operands are committed there, so the program runs
+    concurrently with the main device's training steps (CPU host devices
+    and TPU cores both give real overlap); without one it still runs off
+    the critical path of the dispatching thread.
+
+    ``landing(work)`` — call right BEFORE the step that executes ``work``:
+    blocks on (usually long-finished) futures for this step's land ranges
+    and returns the ``landing`` operand for ``Kfac.update``.  A range
+    with no pending future (fresh resume mid-lag) maps to ``None`` and
+    lands in-graph from the restored snapshot — the graceful
+    re-snapshot-free resume path.
+    """
+
+    def __init__(self, opt: kfac_lib.Kfac, device=None, home=None):
+        self.opt = opt
+        self.device = device
+        self.home = home if home is not None else jax.devices()[0]
+        self._pool = ThreadPoolExecutor(max_workers=2)
+        self._fns: Dict = {}
+        self._pending: Dict = {}
+
+    @classmethod
+    def for_opt(cls, opt: kfac_lib.Kfac) -> Optional["AsyncInverseRunner"]:
+        """A runner on the first spare device, or None when the optimizer
+        does not pipeline (sync config, or a curvature engine attached —
+        the engine lands in-graph, sharded)."""
+        if not opt._async_buckets or opt.curvature is not None:
+            return None
+        devs = jax.devices()
+        return cls(opt, device=devs[1] if len(devs) > 1 else None)
+
+    def _fn(self, bi: int, count: int):
+        key = (bi, count)
+        if key not in self._fns:
+            spec = self.opt.factor_buckets[bi].spec
+            self._fns[key] = jax.jit(functools.partial(
+                kfactor.heavy_from_snapshot, spec, lo=0, hi=count))
+        return self._fns[key]
+
+    def _run(self, bi: int, count: int, buf_slice):
+        if self.device is not None:
+            buf_slice = jax.device_put(buf_slice, self.device)
+        U, D = self._fn(bi, count)(buf_slice)
+        out = jax.device_put((U, D), self.home)
+        jax.block_until_ready(out)
+        return out
+
+    def launch(self, opt_state, work) -> None:
+        for bi, ranges in enumerate(work.launch):
+            if not ranges:
+                continue
+            buf = opt_state.inflight[str(bi)]
+            for lo, hi in ranges:
+                buf_slice = jax.tree_util.tree_map(lambda x: x[lo:hi], buf)
+                self._pending[(bi, lo, hi)] = self._pool.submit(
+                    self._run, bi, hi - lo, buf_slice)
+
+    def landing(self, work):
+        out = {}
+        for bi, ranges in enumerate(work.land):
+            if not ranges:
+                continue
+            out[str(bi)] = tuple(
+                fut.result() if (fut := self._pending.pop((bi, lo, hi),
+                                                          None)) is not None
+                else None
+                for lo, hi in ranges)
+        return out or None
+
+    def close(self):
+        self._pool.shutdown(wait=False)
 
 
 def make_baseline_step(loss_fn: Callable, opt: optbase.Optimizer):
@@ -96,18 +193,26 @@ def make_baseline_step(loss_fn: Callable, opt: optbase.Optimizer):
 def run_kfac_training(loss_fn, opt: kfac_lib.Kfac, params, batches,
                       n_tokens: int, seed: int = 0, jit: bool = True,
                       callback=None, mesh=None, curvature_axis=None,
-                      state: Optional[TrainState] = None):
+                      state: Optional[TrainState] = None,
+                      overlap: bool = False):
     """Python-level driver: dispatches the statically-masked step variants
     per the paper's T_* schedules (work scheduler; ``cfg.stagger`` phases
-    heavy work).  ``mesh`` + ``curvature_axis`` attach the distributed
-    curvature engine so factor work shards across that mesh axis.
+    heavy work; ``cfg.async_heavy``/``heavy_lag`` pipeline it).  ``mesh``
+    + ``curvature_axis`` attach the distributed curvature engine so
+    factor work shards across that mesh axis.  ``overlap=True``
+    additionally dispatches launched heavy work through an
+    :class:`AsyncInverseRunner` (replicated async configs only);
+    otherwise landings compute in-graph — same result either way.
 
     Passing a restored ``state`` resumes: the schedule position is
     re-derived from ``state.opt.phase`` (step mod schedule cycle — kept
     inside the optimizer state exactly so an elastic restart that lost
     the global step counter continues the staggered heavy cadence
-    instead of re-spiking every bucket at once).  Returns (final
-    TrainState, losses)."""
+    instead of re-spiking every bucket at once).  An async config
+    additionally restores the in-flight snapshots from
+    ``state.opt.inflight``, so a landing scheduled before the save still
+    fires on time after the restore.  Returns (final TrainState,
+    losses)."""
     if mesh is not None and curvature_axis is not None:
         from repro.distributed import curvature as curvature_lib
         curvature_lib.CurvatureEngine.for_kfac(opt, mesh, curvature_axis)
@@ -118,13 +223,20 @@ def run_kfac_training(loss_fn, opt: kfac_lib.Kfac, params, batches,
                            rng=jax.random.PRNGKey(seed))
     else:
         k_off = int(jax.device_get(state.opt.phase))
+    runner = AsyncInverseRunner.for_opt(opt) if overlap else None
     step_fn = make_scheduled_kfac_step(loss_fn, opt, n_tokens)
     if jit:
         step_fn = jax.jit(step_fn, static_argnames=("work",))
     losses = []
     for k, batch in enumerate(batches):
-        state, loss = step_fn(state, batch, sched.work(k_off + k))
+        work = sched.work(k_off + k)
+        landing = runner.landing(work) if runner is not None else None
+        state, loss = step_fn(state, batch, work, landing)
+        if runner is not None:
+            runner.launch(state.opt, work)
         losses.append(float(loss))
         if callback is not None:
             callback(k, state, loss)
+    if runner is not None:
+        runner.close()
     return state, losses

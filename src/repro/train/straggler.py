@@ -89,5 +89,7 @@ def apply_to_work(action: Action, work):
     if action == Action.DROP_STATS:
         return dataclasses.replace(
             work, stats=False, light=False,
-            heavy=tuple(() for _ in work.heavy))
+            heavy=tuple(() for _ in work.heavy),
+            launch=tuple(() for _ in work.launch),
+            land=tuple(() for _ in work.land))
     return work

@@ -1,0 +1,26 @@
+"""Shared synthetic operands for optimizer-level parity tests.
+
+One generator for the (params, grads, acts, probe-grads) tuple used by
+the scheduler, distributed-curvature, and async-pipeline parity tests —
+keyed, so tests can drive *step-varying* stats (a drifting M is what
+makes staleness and scheduling bugs observable; constant operands make
+every heavy overwrite identical and parity trivially true).
+"""
+import jax
+
+
+def tap_data(taps, key=None):
+    """→ (params, grads, acts, probe_grads) for a TapInfo dict."""
+    key = jax.random.PRNGKey(0) if key is None else key
+    params, grads, acts, pgs = {}, {}, {}, {}
+    for i, (n, t) in enumerate(taps.items()):
+        shp = t.stack + (t.d_in, t.d_out)
+        params[n] = {"w": jax.random.normal(jax.random.fold_in(key, i),
+                                            shp) * 0.05}
+        grads[n] = {"w": jax.random.normal(jax.random.fold_in(key, 10 + i),
+                                           shp)}
+        acts[n] = jax.random.normal(jax.random.fold_in(key, 20 + i),
+                                    t.stack + (t.n_stat, t.d_in))
+        pgs[n] = jax.random.normal(jax.random.fold_in(key, 30 + i),
+                                   t.stack + (t.n_stat, t.d_out)) * 1e-3
+    return params, grads, acts, pgs

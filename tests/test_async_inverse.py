@@ -1,0 +1,287 @@
+"""Async double-buffered heavy-inverse pipeline (core/kfactor.py
+InflightState + core/schedule.py launch/land masks + train/loop.py
+AsyncInverseRunner): buffer semantics, staleness contract, overlapped ≡
+in-graph landing, and state-sharding of the in-flight buffers.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kfac as kfac_lib
+from repro.core import kfactor, policy, schedule
+from synthdata import tap_data
+from repro.core.kfactor import KFactorSpec, Mode
+from repro.optim import base as optbase
+
+
+def _taps():
+    return {
+        "fc":   kfac_lib.TapInfo("fc/w", 48, 32, n_stat=16),
+        "scan": kfac_lib.TapInfo("scan/w", 48, 48, stack=(3,), n_stat=16),
+    }
+
+
+def _data(taps, key=None):
+    return tap_data(taps, key)
+
+
+def _opt(variant="kfac", lag=0, **kw):
+    kwargs = dict(policy=policy.PolicyConfig(variant=variant, r=8,
+                                             max_dense_dim=8192),
+                  lr=optbase.constant(0.05), T_updt=1, T_brand=1, T_inv=4,
+                  T_rsvd=4, T_corct=4, stagger=True, stagger_splits=2,
+                  async_heavy=True, heavy_lag=lag)
+    kwargs.update(kw)
+    return kfac_lib.Kfac(kfac_lib.KfacConfig(**kwargs), _taps())
+
+
+# ---------------------------------------------------------------------------
+# buffer primitives
+# ---------------------------------------------------------------------------
+
+class TestInflightPrimitives:
+    def _spec(self, mode=Mode.BRAND_RSVD):
+        return KFactorSpec(d=24, r=6, n_stat=8, mode=mode)
+
+    def test_record_panel_ring_order(self):
+        spec = self._spec()
+        buf = kfactor.make_inflight(spec, total=2, n_replay=2)
+        xs = [jnp.full((2, 24, 8), float(i)) for i in range(3)]
+        for x in xs:
+            buf = kfactor.record_panel(buf, x)
+        # ring holds the last 2 panels, oldest first
+        np.testing.assert_array_equal(np.asarray(buf.panels[:, 0]),
+                                      np.asarray(xs[1]))
+        np.testing.assert_array_equal(np.asarray(buf.panels[:, 1]),
+                                      np.asarray(xs[2]))
+
+    def test_record_panel_noop_without_replay(self):
+        spec = self._spec()
+        buf = kfactor.make_inflight(spec, total=2, n_replay=0)
+        out = kfactor.record_panel(buf, jnp.ones((2, 24, 8)))
+        assert out.panels.shape == (2, 0, 24, 8)
+
+    def test_launch_snapshot_touches_only_range(self):
+        spec = self._spec()
+        key = jax.random.PRNGKey(1)
+        st = kfactor.make_state(24, spec.width, True)
+        st = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (3,) + x.shape) + 1.0, st)
+        keys = jax.random.split(key, 3)
+        buf = kfactor.make_inflight(spec, total=3, n_replay=0)
+        buf = kfactor.launch_snapshot(buf, st, keys, 1, 2)
+        np.testing.assert_array_equal(np.asarray(buf.M[1]),
+                                      np.asarray(st.M[1]))
+        assert float(jnp.abs(buf.M[0]).max()) == 0.0   # untouched slot
+        assert float(jnp.abs(buf.M[2]).max()) == 0.0
+        np.testing.assert_array_equal(np.asarray(buf.keys[1]),
+                                      np.asarray(keys[1]))
+
+    def test_land_swap_is_heavy_of_snapshot_plus_replay(self):
+        """The landed rep must equal heavy(snapshot) with the ring panels
+        replayed — computed here by hand from the same buffer."""
+        spec = self._spec(Mode.BRAND_RSVD)
+        key = jax.random.PRNGKey(2)
+        B = 2
+        X0 = jax.random.normal(key, (B, 24, 8))
+        st = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (B,) + x.shape), spec.init())
+        st = kfactor.stats_step(spec, st, X0, jnp.asarray(True))
+        keys = jax.random.split(key, B)
+        buf = kfactor.make_inflight(spec, total=B, n_replay=1)
+        panel = jax.random.normal(jax.random.fold_in(key, 9), (B, 24, 8))
+        buf = kfactor.record_panel(buf, panel)
+        buf = kfactor.launch_snapshot(buf, st, keys, 0, B)
+        assert bool(buf.live.all())
+        landed, buf_after = kfactor.land_swap(spec, st, buf, 0, B)
+        # reference: same pure functions, called explicitly
+        U_ref, D_ref = kfactor.heavy_from_snapshot(spec, buf, 0, B)
+        U_ref, D_ref = kfactor.replay_panels(spec, U_ref, D_ref,
+                                             buf.panels[0:B])
+        np.testing.assert_allclose(np.asarray(landed.U), np.asarray(U_ref))
+        np.testing.assert_allclose(np.asarray(landed.D), np.asarray(D_ref))
+        # M is never touched by a landing; the live flag is consumed
+        np.testing.assert_array_equal(np.asarray(landed.M),
+                                      np.asarray(st.M))
+        assert not bool(buf_after.live.any())
+
+    def test_land_without_launch_is_noop(self):
+        """A landing whose launch was dropped (straggler back-off) or
+        never fired (fresh resume) must leave the live state untouched —
+        NOT install the zero-initialized / consumed snapshot."""
+        spec = self._spec(Mode.BRAND_RSVD)
+        key = jax.random.PRNGKey(3)
+        B = 2
+        X0 = jax.random.normal(key, (B, 24, 8))
+        st = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (B,) + x.shape), spec.init())
+        st = kfactor.stats_step(spec, st, X0, jnp.asarray(True))
+        st = dataclasses.replace(st, U=st.U + 0.5, D=st.D + 1.0)
+        buf = kfactor.make_inflight(spec, total=B, n_replay=0)
+        out, buf2 = kfactor.land_swap(spec, st, buf, 0, B)
+        np.testing.assert_array_equal(np.asarray(out.U), np.asarray(st.U))
+        np.testing.assert_array_equal(np.asarray(out.D), np.asarray(st.D))
+        # a second landing after a consumed launch is also a no-op
+        keys = jax.random.split(key, B)
+        buf2 = kfactor.launch_snapshot(buf2, st, keys, 0, B)
+        mid, buf3 = kfactor.land_swap(spec, st, buf2, 0, B)
+        again, _ = kfactor.land_swap(spec, mid, buf3, 0, B)
+        np.testing.assert_array_equal(np.asarray(again.U),
+                                      np.asarray(mid.U))
+
+
+# ---------------------------------------------------------------------------
+# optimizer-level semantics
+# ---------------------------------------------------------------------------
+
+def _run(opt, steps=8, landing_fn=None):
+    """Drive the optimizer with *step-varying* stats operands — a drifting
+    M is what makes staleness observable (constant operands make every
+    heavy overwrite identical and async trivially equal to sync)."""
+    params = _data(opt.taps)[0]
+    sched = opt.scheduler()
+    st = opt.init(params)
+
+    def step(grads, st, acts, pgs, rng, work, landing=None):
+        return opt.update(grads, st, params, acts=acts, probe_grads=pgs,
+                          n_tokens=16, rng=rng, work=work, landing=landing)
+    step = jax.jit(step, static_argnames=("work",))
+    outs = []
+    for s in range(steps):
+        _, grads, acts, pgs = _data(opt.taps,
+                                    jax.random.PRNGKey(100 + s))
+        work = sched.work(s)
+        landing = landing_fn(st, work) if landing_fn else None
+        upd, st = step(grads, st, acts, pgs,
+                       jax.random.fold_in(jax.random.PRNGKey(7), s),
+                       work, landing)
+        outs.append(upd)
+    return outs, st
+
+
+def test_staleness_contract_lag_vs_sync():
+    """lag>0 is NOT sync shifted: inside a lag window the old inverse is
+    still live (sync already overwrote inline), and the landing swaps in
+    heavy-of-*snapshot*, not heavy-of-current.  With drifting stats the
+    two runs agree exactly on the warmup step and split from the first
+    in-flight window on."""
+    opt_sync = _opt("kfac", lag=0, async_heavy=False)
+    opt_lag = _opt("kfac", lag=2)
+    a, _ = _run(opt_sync, steps=8)
+    b, _ = _run(opt_lag, steps=8)
+    # step 0: warmup is inline in both — identical
+    for n in opt_sync.taps:
+        np.testing.assert_allclose(np.asarray(b[0][n]["w"]),
+                                   np.asarray(a[0][n]["w"]),
+                                   rtol=1e-5, atol=1e-6)
+    # first staggered firing (k=1) opens a lag window: sync's inverse is
+    # fresh, async's is still the warmup one — and the k=3 landing swaps
+    # in heavy of the k=1 snapshot, not of the k=3 state
+    diffs = [max(float(np.abs(np.asarray(b[k][n]["w"]) -
+                              np.asarray(a[k][n]["w"])).max())
+                 for n in opt_sync.taps) for k in range(8)]
+    assert max(diffs[1:]) > 1e-6, diffs
+
+
+def test_inflight_is_part_of_state_pytree():
+    opt = _opt("kfac", lag=2)
+    st = opt.init(_data(opt.taps)[0])
+    assert set(st.inflight) == {str(bi) for bi in opt._async_buckets}
+    leaves = jax.tree_util.tree_leaves(st.inflight)
+    assert leaves and all(l.ndim >= 1 for l in leaves)
+    # sync configs keep the pre-async pytree (empty inflight → no leaves)
+    opt_s = _opt("kfac", lag=0, async_heavy=False)
+    st_s = opt_s.init(_data(opt_s.taps)[0])
+    assert st_s.inflight == {}
+    assert not jax.tree_util.tree_leaves(st_s.inflight)
+
+
+def test_overlapped_landing_equals_in_graph():
+    """Feeding pre-computed heavy results through the ``landing`` operand
+    must give exactly the in-graph landing's numbers (same snapshot, same
+    keys, same function — just a different dispatch site)."""
+    opt_a, opt_b = _opt("kfac", lag=2), _opt("kfac", lag=2)
+
+    def precompute(st, work):
+        out = {}
+        for bi, ranges in enumerate(work.land):
+            if not ranges:
+                continue
+            spec = opt_b.factor_buckets[bi].spec
+            buf = st.inflight[str(bi)]
+            out[str(bi)] = tuple(
+                kfactor.heavy_from_snapshot(spec, buf, lo, hi)
+                for lo, hi in ranges)
+        return out or None
+
+    a, sta = _run(opt_a, steps=8)
+    b, stb = _run(opt_b, steps=8, landing_fn=precompute)
+    for k, (ua, ub) in enumerate(zip(a, b)):
+        for n in opt_a.taps:
+            np.testing.assert_allclose(np.asarray(ub[n]["w"]),
+                                       np.asarray(ua[n]["w"]),
+                                       rtol=1e-6, atol=1e-7,
+                                       err_msg=f"step {k} {n}")
+
+
+def test_async_runner_matches_in_graph_end_to_end():
+    """The threaded AsyncInverseRunner (overlapped dispatch, spare device
+    or not) reproduces the in-graph landing exactly through
+    run_kfac_training."""
+    from repro.models import layers
+    from repro.train import loop
+
+    taps = {"fc": kfac_lib.TapInfo("fc/w", 24, 8, n_stat=8)}
+    cfg = kfac_lib.KfacConfig(
+        policy=policy.PolicyConfig(variant="kfac", r=4),
+        lr=optbase.constant(0.05), T_updt=1, T_inv=4, stagger=True,
+        async_heavy=True, heavy_lag=2)
+    key = jax.random.PRNGKey(0)
+    params = {"fc": {"w": jax.random.normal(key, (24, 8)) * 0.1}}
+
+    def loss_fn(p, probes, batch):
+        x, y = batch
+        h, act = layers.tapped_matmul(p["fc"]["w"], x, probes.get("fc"), 8)
+        return jnp.mean((h - y) ** 2), {"fc": act}
+
+    batches = [(jax.random.normal(jax.random.fold_in(key, i), (8, 24)),
+                jax.random.normal(jax.random.fold_in(key, 50 + i), (8, 8)))
+               for i in range(8)]
+    opt_a = kfac_lib.Kfac(cfg, taps)
+    _, la = loop.run_kfac_training(loss_fn, opt_a, params, batches,
+                                   n_tokens=8)
+    opt_b = kfac_lib.Kfac(cfg, taps)
+    _, lb = loop.run_kfac_training(loss_fn, opt_b, params, batches,
+                                   n_tokens=8, overlap=True)
+    np.testing.assert_allclose(la, lb, rtol=1e-6)
+
+
+def test_async_requires_bucketed():
+    with pytest.raises(ValueError, match="bucketed"):
+        _opt("kfac", lag=2, bucketed=False)
+
+
+def test_inflight_sharding_rule():
+    """kfac_state_sharding shards the in-flight dense-M snapshot on the
+    curvature axis (like the live M) and replicates the rest."""
+    if len(jax.devices()) < 2:
+        pytest.skip("needs >1 device")
+    from jax.sharding import Mesh
+    from repro.distributed import sharding as shd
+    from repro.launch import mesh as mesh_lib
+    n = len(jax.devices())
+    mesh = mesh_lib.make_mesh((n,), ("curv",))
+    opt = _opt("kfac", lag=2)
+    st = jax.eval_shape(opt.init, _data(opt.taps)[0])
+    sh = shd.kfac_state_sharding(st, mesh, curvature_axis="curv")
+    for bi, buf_sh in sh.inflight.items():
+        total = opt.factor_buckets[int(bi)].total
+        spec_m = buf_sh.M.spec
+        if total % n == 0:
+            assert spec_m[0] == "curv", (bi, spec_m)
+        assert all(s is None for s in buf_sh.U.spec)
+        assert all(s is None for s in buf_sh.panels.spec)

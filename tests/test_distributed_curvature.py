@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import buckets, kfac as kfac_lib, policy
+from synthdata import tap_data
 from repro.distributed import curvature as curv
 from repro.launch import mesh as mesh_lib
 from repro.optim import base as optbase
@@ -37,19 +38,7 @@ def _mixed_taps():
 
 
 def _data(taps):
-    key = jax.random.PRNGKey(0)
-    params, grads, acts, pgs = {}, {}, {}, {}
-    for i, (n, t) in enumerate(taps.items()):
-        shp = t.stack + (t.d_in, t.d_out)
-        params[n] = {"w": jax.random.normal(jax.random.fold_in(key, i),
-                                            shp) * 0.05}
-        grads[n] = {"w": jax.random.normal(jax.random.fold_in(key, 10 + i),
-                                           shp)}
-        acts[n] = jax.random.normal(jax.random.fold_in(key, 20 + i),
-                                    t.stack + (t.n_stat, t.d_in))
-        pgs[n] = jax.random.normal(jax.random.fold_in(key, 30 + i),
-                                   t.stack + (t.n_stat, t.d_out)) * 1e-3
-    return params, grads, acts, pgs
+    return tap_data(taps)
 
 
 # ---------------------------------------------------------------------------
@@ -183,6 +172,80 @@ def test_sharded_staggered_matches_replicated_staggered(variant):
             rb = np.asarray(fb.U * fb.D[..., None, :]) @ \
                 np.swapaxes(np.asarray(fb.U), -1, -2)
             np.testing.assert_allclose(ra, rb, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# async launch/land pipeline, sharded ≡ replicated
+# ---------------------------------------------------------------------------
+
+def _run_async(taps, variant, *, sharded, lag, steps=5):
+    """Like _run but under the async pipeline with *step-varying* stats
+    operands — a drifting M is what makes staleness (and any sharding
+    bug in the launch/land plumbing) observable."""
+    pol = policy.PolicyConfig(variant=variant, r=8, max_dense_dim=8192)
+    cfg = kfac_lib.KfacConfig(policy=pol, lr=optbase.constant(0.05),
+                              T_updt=1, T_brand=1, T_inv=3, T_rsvd=3,
+                              T_corct=3, stagger=True, stagger_splits=2,
+                              async_heavy=True, heavy_lag=lag)
+    opt = kfac_lib.Kfac(cfg, taps)
+    if sharded:
+        mesh = mesh_lib.make_mesh((8,), ("curv",))
+        curv.CurvatureEngine.for_kfac(opt, mesh, "curv")
+    sched = opt.scheduler(align=8)
+    params = _data(taps)[0]
+    st = opt.init(params)
+
+    def step(grads, st, acts, pgs, rng, work):
+        return opt.update(grads, st, params, acts=acts, probe_grads=pgs,
+                          n_tokens=N_STAT, rng=rng, work=work)
+    step = jax.jit(step, static_argnames=("work",))
+    outs = []
+    for s in range(steps):
+        _, grads, acts, pgs = tap_data(taps,
+                                       jax.random.PRNGKey(200 + s))
+        upd, st = step(grads, st, acts, pgs,
+                       jax.random.fold_in(jax.random.PRNGKey(7), s),
+                       sched.work(s))
+        outs.append(upd)
+    return outs, st
+
+
+
+@pytest.mark.parametrize("variant", list(policy.VARIANTS))
+def test_async_lag0_sharded_matches_sync_replicated(variant):
+    """The exactness contract in its strongest form: lag=0 async on the
+    8-device sharded engine ≡ synchronous replicated, across all 5
+    policy variants (per-slot keys survive both the shard permutation
+    and the snapshot/land round-trip)."""
+    if len(jax.devices()) < 8:
+        pytest.skip("needs 8 host devices")
+    taps = _mixed_taps()
+    a, _ = _run_async(taps, variant, sharded=True, lag=0)
+    b, _ = _run_async(taps, variant, sharded=False, lag=0)
+    for ua, ub in zip(a, b):
+        _assert_close(ua, ub, taps, atol=1e-5)
+
+
+@pytest.mark.parametrize("variant", ["kfac", "bkfacc"])
+def test_async_lag_sharded_matches_replicated(variant):
+    """lag>0: the in-flight snapshot, panel ring, and landing swap all
+    shard — per-device pipeline ≡ replicated pipeline (dense-EVD and
+    randomized-correction-with-replay paths)."""
+    if len(jax.devices()) < 8:
+        pytest.skip("needs 8 host devices")
+    taps = _mixed_taps()
+    a, sta = _run_async(taps, variant, sharded=True, lag=2, steps=6)
+    b, stb = _run_async(taps, variant, sharded=False, lag=2, steps=6)
+    for ua, ub in zip(a, b):
+        _assert_close(ua, ub, taps, atol=1e-5)
+    # in-flight buffers themselves round-trip the shard permutation
+    for bi in sta.inflight:
+        np.testing.assert_allclose(np.asarray(sta.inflight[bi].M),
+                                   np.asarray(stb.inflight[bi].M),
+                                   atol=1e-5, rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(sta.inflight[bi].panels),
+                                   np.asarray(stb.inflight[bi].panels),
+                                   atol=1e-5, rtol=1e-4)
 
 
 def test_sharded_under_mesh_context_with_shardings():

@@ -55,6 +55,144 @@ class TestCheckpoint:
         with pytest.raises(ValueError):
             ckpt.restore(str(tmp_path), bad)
 
+    def test_manifest_carries_schema_version(self, tmp_path):
+        import json
+        path = ckpt.save(str(tmp_path), 0, self._tree())
+        with open(os.path.join(path, "manifest.json")) as f:
+            assert json.load(f)["schema"] == ckpt.SCHEMA_VERSION
+
+    def test_old_pytree_fails_with_actionable_schema_error(self, tmp_path):
+        """A checkpoint missing leaves the template has (the pre-PR-3 /
+        pre-async trap) must fail naming both schema versions, not with
+        an opaque KeyError."""
+        import json
+        path = ckpt.save(str(tmp_path), 0, self._tree())
+        # simulate an old writer: pre-schema manifest (v1 implied)
+        man = os.path.join(path, "manifest.json")
+        with open(man) as f:
+            m = json.load(f)
+        del m["schema"]
+        with open(man, "w") as f:
+            json.dump(m, f)
+        newer = dict(self._tree(), inflight={"0": jnp.zeros((2, 3))})
+        with pytest.raises(ckpt.SchemaMismatchError) as ei:
+            ckpt.restore(str(tmp_path), newer)
+        msg = str(ei.value)
+        assert "schema v1" in msg
+        assert f"schema v{ckpt.SCHEMA_VERSION}" in msg
+        assert "migrate" in msg
+
+    def test_leaf_compatible_old_checkpoint_still_restores(self, tmp_path):
+        """Schema is for explaining failures, not rejecting compatible
+        trees: a v-old checkpoint whose leaves match restores fine (the
+        async-off case — inflight={} adds no leaves)."""
+        tree = self._tree()
+        ckpt.save(str(tmp_path), 3, tree)
+        template = dict(tree, inflight={})     # new field, no leaves
+        got, _ = ckpt.restore(str(tmp_path), template)
+        assert got["inflight"] == {}
+
+
+class TestAsyncCheckpointRoundTrip:
+    """The async pipeline's in-flight buffers are part of the optimizer
+    pytree: a checkpoint taken mid-lag (heavy launched, not yet landed)
+    must restore so the landing still fires on schedule and the run
+    matches an uninterrupted one."""
+
+    def _setup(self):
+        from repro.core import kfac as kfac_lib
+        from repro.core import policy
+        from repro.models import layers
+        from repro.optim import base as optbase
+
+        taps = {"fc": kfac_lib.TapInfo("fc/w", 24, 8, n_stat=8)}
+        cfg = kfac_lib.KfacConfig(
+            policy=policy.PolicyConfig(variant="kfac", r=4),
+            lr=optbase.constant(0.05), T_updt=1, T_inv=4, stagger=True,
+            stagger_splits=2, async_heavy=True, heavy_lag=2)
+        key = jax.random.PRNGKey(0)
+        params = {"fc": {"w": jax.random.normal(key, (24, 8)) * 0.1}}
+
+        def loss_fn(p, probes, batch):
+            x, y = batch
+            h, act = layers.tapped_matmul(p["fc"]["w"], x,
+                                          probes.get("fc"), 8)
+            return jnp.mean((h - y) ** 2), {"fc": act}
+
+        batches = [(jax.random.normal(jax.random.fold_in(key, i),
+                                      (8, 24)),
+                    jax.random.normal(jax.random.fold_in(key, 50 + i),
+                                      (8, 8)))
+                   for i in range(8)]
+        return kfac_lib, cfg, taps, params, loss_fn, batches
+
+    def test_mid_lag_save_restore_matches_uninterrupted(self, tmp_path):
+        from repro.train import loop
+        kfac_lib, cfg, taps, params, loss_fn, batches = self._setup()
+
+        # uninterrupted 8-step reference
+        opt_a = kfac_lib.Kfac(cfg, taps)
+        ref_state, ref_losses = loop.run_kfac_training(
+            loss_fn, opt_a, params, batches, n_tokens=8)
+
+        # split run: stop at step 3 — the launch at step 2 (phase-2
+        # unit) is in flight, landing due at step 4
+        opt_b = kfac_lib.Kfac(cfg, taps)
+        sched = opt_b.scheduler()
+        assert any(sched.work(2).launch), "test premise: launch at k=2"
+        assert any(sched.work(4).land), "test premise: landing at k=4"
+        mid, head = loop.run_kfac_training(loss_fn, opt_b, params,
+                                           batches[:3], n_tokens=8)
+        assert any(x.size and float(jnp.abs(x).max()) > 0
+                   for x in jax.tree_util.tree_leaves(mid.opt.inflight)), \
+            "test premise: snapshot actually in flight at the save"
+        ckpt.save(str(tmp_path), 3, mid)
+
+        # restore into a fresh template and finish the run
+        opt_c = kfac_lib.Kfac(cfg, taps)
+        template = loop.TrainState(params=params,
+                                   opt=opt_c.init(params),
+                                   rng=mid.rng)
+        restored, manifest = ckpt.restore(str(tmp_path), template)
+        assert manifest["schema"] == ckpt.SCHEMA_VERSION
+        jax.tree_util.tree_map(
+            lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                       np.asarray(b)),
+            mid.opt.inflight, restored.opt.inflight)
+        end_state, tail_losses = loop.run_kfac_training(
+            loss_fn, opt_c, None, batches[3:], n_tokens=8,
+            state=restored)
+
+        np.testing.assert_allclose(head + tail_losses, ref_losses,
+                                   rtol=1e-6)
+        jax.tree_util.tree_map(
+            lambda a, b: np.testing.assert_allclose(np.asarray(a),
+                                                    np.asarray(b),
+                                                    rtol=1e-6, atol=1e-7),
+            end_state.params, ref_state.params)
+
+    def test_mid_lag_restore_with_overlap_runner(self, tmp_path):
+        """Resuming with the overlapped runner: the landing whose launch
+        predates the restore has no pending future and falls back to
+        in-graph compute from the restored snapshot — same numbers."""
+        from repro.train import loop
+        kfac_lib, cfg, taps, params, loss_fn, batches = self._setup()
+        opt_a = kfac_lib.Kfac(cfg, taps)
+        _, ref_losses = loop.run_kfac_training(loss_fn, opt_a, params,
+                                               batches, n_tokens=8)
+        opt_b = kfac_lib.Kfac(cfg, taps)
+        mid, head = loop.run_kfac_training(loss_fn, opt_b, params,
+                                           batches[:3], n_tokens=8)
+        ckpt.save(str(tmp_path), 3, mid)
+        opt_c = kfac_lib.Kfac(cfg, taps)
+        template = loop.TrainState(params=params, opt=opt_c.init(params),
+                                   rng=mid.rng)
+        restored, _ = ckpt.restore(str(tmp_path), template)
+        _, tail = loop.run_kfac_training(loss_fn, opt_c, None,
+                                         batches[3:], n_tokens=8,
+                                         state=restored, overlap=True)
+        np.testing.assert_allclose(head + tail, ref_losses, rtol=1e-6)
+
 
 @pytest.mark.slow
 class TestElastic:

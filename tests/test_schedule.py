@@ -228,6 +228,184 @@ def test_cycle_lcm():
     assert opt.scheduler().cycle == math.lcm(4, 6, 30)
 
 
+# ---------------------------------------------------------------------------
+# async launch/land pipeline
+# ---------------------------------------------------------------------------
+
+def test_async_launch_land_cadence():
+    """Each async unit launches at its regular firing steps (warmup stays
+    inline at 0) and lands exactly ``lag`` steps later; lag=0 launches
+    and lands on the same step."""
+    for lag in (0, 3):
+        opt = _opt("kfac", stagger=True, stagger_splits=4,
+                   async_heavy=True, heavy_lag=lag)
+        sched = opt.scheduler()
+        T = sched.T_heavy
+        for u in sched.units:
+            assert not u.sync_only
+        for k in range(3 * sched.cycle):
+            w = sched.work(k)
+            for u in sched.units:
+                fires = k % T == u.phase
+                in_launch = any(lo <= u.lo and u.hi <= hi
+                                for lo, hi in w.launch[u.bucket])
+                in_land = any(lo <= u.lo and u.hi <= hi
+                              for lo, hi in w.land[u.bucket])
+                in_heavy = any(lo <= u.lo and u.hi <= hi
+                               for lo, hi in w.heavy[u.bucket])
+                assert in_heavy == (k == 0), (lag, k, u)     # warmup only
+                assert in_launch == (fires and k > 0), (lag, k, u)
+                assert in_land == (k - lag > 0
+                                   and (k - lag) % T == u.phase), \
+                    (lag, k, u)
+
+
+def test_async_lag_bounds_validated():
+    with pytest.raises(ValueError, match="heavy_lag"):
+        _opt("kfac", async_heavy=True, heavy_lag=12).scheduler()   # = T_inv
+    with pytest.raises(ValueError, match="heavy_lag"):
+        _opt("kfac", async_heavy=True, heavy_lag=-1).scheduler()
+
+
+def test_async_unstaggered_lag0_masks_equal_sync_after_warmup():
+    """lag=0 async emits launch==land at exactly the sync heavy steps —
+    the masks carry the same ranges, just in the pipeline fields."""
+    opt_a = _opt("kfac", async_heavy=True, heavy_lag=0)
+    opt_s = _opt("kfac")
+    sa, ss = opt_a.scheduler(), opt_s.scheduler()
+    for k in range(1, 2 * sa.cycle):
+        wa, ws = sa.work(k), ss.work(k)
+        assert wa.launch == wa.land == ws.heavy, k
+        assert not wa.any_heavy, k
+    assert sa.work(0).heavy == ss.work(0).heavy      # inline warmup
+
+
+def test_async_brand_bucket_pins_sync_when_period_not_divisible():
+    """T_brand ∤ T_heavy: the interim-panel count would vary per firing,
+    so Brand-family buckets must stay synchronous (inline heavy), while
+    divisible configs pipeline with a static replay count."""
+    opt = _opt("brkfac", stagger=True, T_brand=3, T_rsvd=10,
+               async_heavy=True, heavy_lag=2)
+    sched = opt.scheduler()
+    brand = kfactor._HAS_BRAND
+    assert sched.units
+    for u in sched.units:
+        assert opt.factor_buckets[u.bucket].spec.mode in brand
+        assert u.sync_only, u
+    # a non-Brand (RSVD) factor under the same config would still
+    # pipeline: the pinning is the Brand coupling, not a global off
+    narrow = policy.make_factor_spec(opt.cfg.policy, d=20, n_stat=16)
+    assert narrow.mode is kfactor.Mode.RSVD
+    assert schedule.bucket_is_async(opt.cfg, narrow)
+    # sync_only units keep the legacy inline cadence exactly
+    legacy = opt.scheduler(async_heavy=False)
+    for k in range(2 * sched.cycle):
+        wa, wl = sched.work(k), legacy.work(k)
+        for bi, b in enumerate(opt.factor_buckets):
+            if b.spec.mode in brand:
+                assert wa.heavy[bi] == wl.heavy[bi], (k, bi)
+                assert wa.launch[bi] == () and wa.land[bi] == (), (k, bi)
+
+
+def test_async_replay_count_static_rule():
+    cfg24 = _cfg("brkfac", T_brand=3, T_rsvd=24, async_heavy=True,
+                 heavy_lag=7)
+    cfg_nd = _cfg("brkfac", T_brand=3, T_rsvd=10, async_heavy=True,
+                  heavy_lag=7)
+    opt = _opt("brkfac", T_brand=3, T_rsvd=24)
+    for b in opt.factor_buckets:
+        if b.spec.mode in kfactor._HAS_BRAND:
+            assert schedule.bucket_is_async(cfg24, b.spec)
+            assert schedule.n_replay_panels(cfg24, b.spec) == 7 // 3
+            assert not schedule.bucket_is_async(cfg_nd, b.spec)
+            assert schedule.n_replay_panels(cfg_nd, b.spec) == 0
+        elif kfactor.has_heavy_op(b.spec):
+            assert schedule.bucket_is_async(cfg24, b.spec)
+            assert schedule.n_replay_panels(cfg24, b.spec) == 0
+
+
+def test_async_brand_landings_replay_exact_window():
+    """Launches of async Brand-family units sit on light steps (snapped),
+    so the light steps strictly inside every (launch, land] window number
+    exactly lag // T_brand — the static ring size."""
+    opt = _opt("bkfacc", stagger=True, stagger_splits=4, T_brand=3,
+               T_corct=30, async_heavy=True, heavy_lag=7)
+    sched = opt.scheduler()
+    T, lag = sched.T_heavy, sched.lag
+    brand = kfactor._HAS_BRAND
+    for u in sched.units:
+        if opt.factor_buckets[u.bucket].spec.mode not in brand:
+            continue
+        assert u.phase % opt.cfg.T_brand == 0, u
+        for i in range(1, 4):
+            kl = u.phase + i * T
+            interim = [k for k in range(kl + 1, kl + lag + 1)
+                       if k % opt.cfg.T_brand == 0]
+            assert len(interim) == lag // opt.cfg.T_brand, (u, kl)
+
+
+def test_straggler_backoff_clears_async_masks():
+    from repro.train import straggler
+    opt = _opt("kfac", stagger=True, async_heavy=True, heavy_lag=2)
+    sched = opt.scheduler()
+    w = next(sched.work(k) for k in range(1, 3 * sched.cycle)
+             if sched.work(k).any_async)
+    out = straggler.apply_to_work(straggler.Action.DROP_STATS, w)
+    assert not out.any
+    assert out.launch == tuple(() for _ in opt.factor_buckets)
+    assert out.land == tuple(() for _ in opt.factor_buckets)
+
+
+@pytest.mark.parametrize("variant", list(policy.VARIANTS))
+def test_async_lag0_update_equals_sync_all_variants(variant):
+    """The exactness contract, replicated: lag=0 async ≡ sync through
+    Kfac.update on the mixed FC+scanned+MoE model, step by step, with
+    step-varying stats (a drifting M is what makes any scheduling bug
+    visible — constant operands make all heavy overwrites identical)."""
+    import jax
+    import numpy as np
+
+    from repro.optim import base as optbase
+
+    from synthdata import tap_data
+
+    taps = _mixed_taps()
+
+    def data(key):
+        return tap_data(taps, key)
+
+    def run(async_heavy):
+        cfg = _cfg(variant, T_updt=1, T_brand=1, T_inv=3, T_rsvd=3,
+                   T_corct=3, lr=optbase.constant(0.05), stagger=True,
+                   stagger_splits=2, async_heavy=async_heavy, heavy_lag=0)
+        opt = kfac_lib.Kfac(cfg, taps)
+        sched = opt.scheduler()
+        params = data(jax.random.PRNGKey(0))[0]
+        st = opt.init(params)
+
+        def step(grads, st, acts, pgs, rng, work):
+            return opt.update(grads, st, params, acts=acts,
+                              probe_grads=pgs, n_tokens=16, rng=rng,
+                              work=work)
+        step = jax.jit(step, static_argnames=("work",))
+        outs = []
+        for s in range(5):
+            _, grads, acts, pgs = data(jax.random.PRNGKey(100 + s))
+            upd, st = step(grads, st, acts, pgs,
+                           jax.random.fold_in(jax.random.PRNGKey(7), s),
+                           sched.work(s))
+            outs.append(upd)
+        return outs
+
+    a, b = run(True), run(False)
+    for k, (ua, ub) in enumerate(zip(a, b)):
+        for n in taps:
+            np.testing.assert_allclose(np.asarray(ua[n]["w"]),
+                                       np.asarray(ub[n]["w"]),
+                                       atol=1e-6, rtol=1e-5,
+                                       err_msg=f"{variant} step {k} {n}")
+
+
 def test_resume_from_state_phase_continues_cadence():
     """run_kfac_training(state=restored) must continue the staggered
     schedule from state.opt.phase instead of re-spiking at work(0) —
