@@ -17,10 +17,18 @@ regressed.  This script closes that loop:
     exceed its baseline by more than ``--threshold`` (default 20%),
     *after machine-speed normalization*: baselines are committed from
     whatever machine produced them, so absolute times are meaningless
-    across hosts.  We scale by the median fresh/baseline ratio over all
-    compared rows — a uniformly slower machine moves every row equally
-    and trips nothing, while a single hot row sticking out past the
-    fleet median by >threshold is a genuine relative regression.
+    across hosts.  The scale comes from a **calibration workload** — a
+    fixed numpy GEMM loop, independent of the repo's code — measured at
+    gate time and stamped into every artifact as ``calibration_us``.
+    Its fresh/baseline ratio moves with machine speed only, so a
+    uniform *code* slowdown (every bench row 2x slower) cannot
+    normalize itself away.  When the committed baseline predates the
+    calibration stamp, the fallback scale is the median over the
+    *fastest* rows' fresh/baseline ratios (those within threshold of
+    the minimum ratio): a machine-speed shift moves every row by the
+    same factor, while regressed rows sit above it — medianing over ALL
+    rows, as this gate originally did, let any majority-uniform real
+    slowdown self-normalize and trip nothing.
 
 Shared-runner noise defense, two layers:
 
@@ -54,6 +62,7 @@ import re
 import subprocess
 import sys
 import tempfile
+import time
 from typing import Dict, List, Optional, Tuple
 
 HERE = os.path.dirname(os.path.abspath(__file__))
@@ -68,6 +77,25 @@ BENCHES = {
 _FALSE_MARK = re.compile(r"\b\w+=False\b")
 
 
+def measure_calibration(reps: int = 5) -> float:
+    """Machine-speed reference: a fixed numpy workload (chained BLAS
+    GEMMs) whose runtime depends on the host, never on this repo's code.
+    min-of-reps in microseconds — the same hardware-floor statistic the
+    bench rows use."""
+    import numpy as _np
+    rng = _np.random.default_rng(0)
+    A = rng.standard_normal((384, 384)).astype(_np.float32) * 0.05
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        B = A
+        for _ in range(8):
+            B = B @ A
+        float(B.sum())              # force materialization
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
 def run_bench(script: str, out_path: str, quick: bool) -> None:
     cmd = [sys.executable, os.path.join(HERE, script),
            "--out", out_path] + (["--quick"] if quick else [])
@@ -78,10 +106,28 @@ def run_bench(script: str, out_path: str, quick: bool) -> None:
     subprocess.run(cmd, check=True, env=env, cwd=REPO)
 
 
-def load_rows(path: str) -> Dict[str, dict]:
+def load_artifact(path: str) -> Tuple[Dict[str, dict], Optional[float]]:
+    """→ (rows by name, calibration_us or None for pre-stamp artifacts)."""
     with open(path) as f:
         artifact = json.load(f)
-    return {r["name"]: r for r in artifact["rows"]}
+    cal = artifact.get("calibration_us")
+    return ({r["name"]: r for r in artifact["rows"]},
+            float(cal) if cal else None)
+
+
+def load_rows(path: str) -> Dict[str, dict]:
+    return load_artifact(path)[0]
+
+
+def stamp_calibration(path: str, cal_us: float) -> None:
+    """Write the gate-time calibration measurement into an artifact (the
+    bench scripts don't know about it; the gate owns the stamp)."""
+    with open(path) as f:
+        artifact = json.load(f)
+    artifact["calibration_us"] = round(float(cal_us), 1)
+    with open(path, "w") as f:
+        json.dump(artifact, f, indent=2)
+        f.write("\n")
 
 
 def row_p50(row: dict) -> Optional[float]:
@@ -128,8 +174,36 @@ def merge_min(a: Dict[str, dict], b: Dict[str, dict],
     return out
 
 
+def machine_scale(ratios: List[float], threshold: float,
+                  base_cal: Optional[float] = None,
+                  fresh_cal: Optional[float] = None
+                  ) -> Tuple[float, str]:
+    """Machine-speed normalization factor for fresh/baseline timings.
+
+    Preferred source: the calibration workload's own fresh/base ratio —
+    it cannot be moved by a regression in the repo's code, so a uniform
+    real slowdown of every bench row stays visible.  Fallback (baseline
+    predates the stamp): the median over the *fastest* rows' ratios,
+    where "fastest" = within (1+threshold) of the minimum ratio.  A
+    machine-speed shift moves every row by the same factor so the
+    fastest rows track it; genuinely regressed rows sit above the band
+    and are excluded — unlike an all-rows median, which a slowdown
+    hitting half the fleet (or all of it uniformly) drags along with
+    itself."""
+    if base_cal and fresh_cal:
+        return (fresh_cal / base_cal,
+                f"calibration {base_cal:.0f}us -> {fresh_cal:.0f}us")
+    srt = sorted(ratios)
+    pool = [r for r in srt if r <= srt[0] * (1.0 + threshold)]
+    return (pool[len(pool) // 2],
+            f"median of {len(pool)}/{len(srt)} fastest-row ratios; "
+            f"no calibration in baseline")
+
+
 def compare(base: Dict[str, dict], fresh: Dict[str, dict],
-            threshold: float, label: str, noise_cap: float = 2.0
+            threshold: float, label: str, noise_cap: float = 2.0,
+            base_cal: Optional[float] = None,
+            fresh_cal: Optional[float] = None
             ) -> Tuple[List[str], List[str]]:
     """→ (failures, report lines)."""
     failures = list(parity_failures(fresh, label))
@@ -146,10 +220,10 @@ def compare(base: Dict[str, dict], fresh: Dict[str, dict],
             common.append((name, b, f, max(noise, 1.0)))
     if not common:
         return failures, [f"{label}: no timed rows in common"]
-    ratios = sorted(f / b for _, b, f, _ in common)
-    scale = ratios[len(ratios) // 2]          # median fresh/base ratio
-    report = [f"{label}: machine-speed scale (median fresh/base) = "
-              f"{scale:.2f}x, threshold = +{threshold:.0%} x per-row "
+    scale, scale_src = machine_scale([f / b for _, b, f, _ in common],
+                                     threshold, base_cal, fresh_cal)
+    report = [f"{label}: machine-speed scale = {scale:.2f}x "
+              f"({scale_src}), threshold = +{threshold:.0%} x per-row "
               f"observed noise"]
     for name, b, f, noise in common:
         norm = f / (b * scale)
@@ -197,12 +271,20 @@ def main() -> int:
 
     fresh_dir = args.fresh_dir or tempfile.mkdtemp(prefix="bench_fresh_")
     os.makedirs(fresh_dir, exist_ok=True)
+    cal_us = measure_calibration()
+    print(f"calibration workload: {cal_us:.0f}us "
+          f"(machine-speed reference)")
+
+    def run_and_stamp(script: str, path: str) -> None:
+        run_bench(script, path, args.quick)
+        stamp_calibration(path, cal_us)
+
     failures: List[str] = []
     for bench, (script, artifact) in BENCHES.items():
         fresh_path = os.path.join(fresh_dir, artifact)
         if not args.skip_run:
-            run_bench(script, fresh_path, args.quick)
-        fresh = load_rows(fresh_path)
+            run_and_stamp(script, fresh_path)
+        fresh, fresh_cal = load_artifact(fresh_path)
         if args.update_baseline and not args.skip_run:
             # a committed baseline should be the row-wise noise *floor*:
             # min-of-runs is hardware-bound from below, so extra runs only
@@ -210,23 +292,22 @@ def main() -> int:
             # the row's demonstrated run-to-run noise, committed as
             # p50_noise and honored by every future gate
             for _ in range(args.retries):
-                run_bench(script, fresh_path, args.quick)
+                run_and_stamp(script, fresh_path)
                 fresh = merge_min(fresh, load_rows(fresh_path),
                                   track_noise=True)
         base_path = os.path.join(args.baseline_dir, artifact)
         if not os.path.exists(base_path):
             if args.update_baseline:
-                base_rows = fresh
+                base, base_cal = fresh, fresh_cal
             else:
                 failures.append(
                     f"{bench}: no committed baseline {base_path} "
                     f"(run with --update-baseline to create it)")
                 continue
         else:
-            base_rows = load_rows(base_path)
-        base = base_rows
+            base, base_cal = load_artifact(base_path)
         fails, report = compare(base, fresh, args.threshold, bench,
-                                args.noise_cap)
+                                args.noise_cap, base_cal, fresh_cal)
         retries = 0 if args.skip_run or args.update_baseline else \
             args.retries
         merged = False
@@ -236,11 +317,11 @@ def main() -> int:
                   f"regressions ({retries} "
                   f"retr{'y' if retries == 1 else 'ies'} left)")
             retries -= 1
-            run_bench(script, fresh_path, args.quick)
+            run_and_stamp(script, fresh_path)
             fresh = merge_min(fresh, load_rows(fresh_path))
             merged = True
             fails, report = compare(base, fresh, args.threshold, bench,
-                                    args.noise_cap)
+                                    args.noise_cap, base_cal, fresh_cal)
         if merged:
             # the artifact on disk must be the rows the gate actually
             # judged, not the last raw re-run — anyone debugging from the

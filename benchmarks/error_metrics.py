@@ -91,6 +91,10 @@ class Alg:
         self.n_updates += 1
 
     def inverses(self, lam_phi=0.1):
+        if self.spec.mode is Mode.NS:
+            # NS holds the dense damped inverse itself (λ̂ = ns_phi·λ_max
+            # baked at refresh — same φ as lam_phi here)
+            return [self.stA.U, self.stG.U]
         out = []
         for st in (self.stA, self.stG):
             lam = precond.damping_from_spectrum(st.D, lam_phi)
@@ -101,6 +105,8 @@ class Alg:
         return out
 
     def step_vec(self, J, lam_phi=0.1):
+        if self.spec.mode is Mode.NS:
+            return self.stG.U @ J @ self.stA.U
         lamA = precond.damping_from_spectrum(self.stA.D, lam_phi)
         DA, lamA = precond.spectrum_continuation(self.stA.D, lamA)
         lamG = precond.damping_from_spectrum(self.stG.D, lam_phi)
@@ -181,6 +187,7 @@ def make_algs() -> List[Alg]:
         Alg("rkfac_T50", Mode.RSVD, T_light=T_UPDT, T_heavy=50),
         Alg("rkfac_T300", Mode.RSVD, T_light=T_UPDT, T_heavy=300),
         Alg("kfac_T50", Mode.EVD, T_light=T_UPDT, T_heavy=50),
+        Alg("nskfac_T50", Mode.NS, T_light=T_UPDT, T_heavy=50),
         # async pipeline variants: lag=0 must reproduce the synchronous
         # algorithm; lag=20 measures the staleness cost of overlapping
         # the heavy op with 2 optimizer updates' worth of training
@@ -267,6 +274,87 @@ def run(quick: bool = False) -> List[dict]:
     for cname, ok in claims.items():
         rows.append({"name": f"error_metrics/{cname}", "us_per_call": 0.0,
                      "derived": str(bool(ok))})
+    by_name = {a.name: a for a in algs}
+    by_name["ref_exact"] = ref
+    rows.extend(ns_inversion_rows(XsA, n_steps, by_name))
+    return rows
+
+
+def ns_inversion_rows(XsA, n_steps, by_name) -> List[dict]:
+    """Newton–Schulz iterations-vs-inversion-error curves (tentpole).
+
+    Two families of rows against the *true dense* damped inverse
+    (M_EA + λI)⁻¹ of the exact EA K-factor (oracle built with eigh —
+    benchmark-side only, the shipped NS path stays matmul-only):
+
+      * ``inv_err_<alg>``   — the delivered inverse of each algorithm
+        family (truncated EVD / RSVD / Brand and the NS refinement) at
+        the end of the stream; these are the horizontal reference lines
+        the NS curve is read against.
+      * ``ns_iters_K{K}``   — cold-start NS at exactly K steps of the
+        raw recurrence X ← 2X − X(M̂X) from the α·I prescale (fallback
+        bypassed so the curve shows the iteration, not the repair);
+        quadratic convergence means the error square-roots per column.
+      * ``ns_overwrite_K8`` — the full shipped heavy path (power-iter
+        prescale + warm guard + residual check) at the default K=8,
+        timed; this row powers the acceptance claim below.
+    """
+    from repro.kernels import ops as kops
+
+    used = [XsA[k // T_UPDT] for k in range(0, n_steps, T_UPDT)]
+    M_exact = kfactor.exact_ea(used, RHO)
+    Msym = 0.5 * (M_exact + M_exact.T)
+    lmax = float(jnp.max(jnp.linalg.eigvalsh(Msym)))
+    lam_ref = 0.1 * lmax
+    want = jnp.linalg.inv(Msym + lam_ref * jnp.eye(D))
+    nw = float(jnp.linalg.norm(want))
+
+    rows, inv_errs = [], {}
+    for name in ("ref_exact", "kfac_T50", "rkfac_T50", "bkfac",
+                 "nskfac_T50"):
+        Ainv = by_name[name].inverses()[0]
+        inv_errs[name] = float(jnp.linalg.norm(Ainv - want) / nw)
+        rows.append({"name": f"error_metrics/inv_err_{name}",
+                     "us_per_call": 0.0,
+                     "derived": f"inv_err={inv_errs[name]:.3e}"})
+
+    # raw-recurrence curve: same prescale the shipped path uses, but λ̂
+    # and α from the oracle λ_max so the curve isolates iteration count
+    Mhat = Msym + lam_ref * jnp.eye(D)
+    X = (2.0 / (lmax + 2.0 * lam_ref)) * jnp.eye(D)
+    step = jax.jit(kops.ns_step)
+    for K in range(1, 9):
+        X = step(Mhat, X)
+        if K in (1, 2, 4, 8):
+            err = float(jnp.linalg.norm(X - want) / nw)
+            rows.append({"name": f"error_metrics/ns_iters_K{K}",
+                         "us_per_call": 0.0,
+                         "derived": f"inv_err={err:.3e}"})
+
+    # shipped heavy path at default K=8, timed
+    spec8 = KFactorSpec(d=D, r=R_TRUNC, n_stat=NBS, mode=Mode.NS, rho=RHO)
+    st0 = kfactor.KFactorState(U=jnp.zeros((D, D)), D=jnp.zeros((D,)),
+                               M=M_exact)
+    fn = jax.jit(lambda s: kfactor.ns_overwrite(spec8, s))
+    out = jax.block_until_ready(fn(st0))          # compile + warm
+    t0 = time.perf_counter()
+    out = jax.block_until_ready(fn(st0))
+    dt = time.perf_counter() - t0
+    lam8 = float(out.D[0])
+    want8 = jnp.linalg.inv(Msym + lam8 * jnp.eye(D))
+    err8 = float(jnp.linalg.norm(out.U - want8) / jnp.linalg.norm(want8))
+    rows.append({"name": "error_metrics/ns_overwrite_K8",
+                 "us_per_call": dt * 1e6,
+                 "derived": f"inv_err={err8:.3e} "
+                            f"resF={float(out.D[1]):.3e}"})
+
+    # acceptance: NS at K ≤ 8 is within 2x of the EVD baseline's
+    # delivered inverse — in practice orders of magnitude below it
+    # (NS converges to the dense damped inverse; truncated EVD pays
+    # the rank cut)
+    ok = err8 <= 2.0 * inv_errs["ref_exact"] + 1e-9
+    rows.append({"name": "error_metrics/claim_ns_within_2x_evd",
+                 "us_per_call": 0.0, "derived": str(bool(ok))})
     return rows
 
 

@@ -186,9 +186,54 @@ def run(quick: bool = False) -> List[dict]:
                        f"precond_buckets={len(opt_b.precond_buckets)} "
                        f"allclose=True",
         })
+    rows.extend(run_ns_vs_evd(taps, params, grads, acts, pgs, N, quick))
     rows.extend(run_sharded(taps, params, grads, acts, pgs, N, quick))
     rows.extend(run_staggered(taps, params, grads, acts, pgs, N, quick))
     rows.extend(run_async(taps, params, grads, acts, pgs, N, quick))
+    return rows
+
+
+def run_ns_vs_evd(taps, params, grads, acts, pgs, N, quick) -> List[dict]:
+    """Heavy-step cost of the Newton–Schulz refinement variant vs the
+    EVD baseline at identical cadence: one full ``Kfac.update`` with the
+    heavy flag live, bucketed, on the mixed-shape model.  NS's heavy
+    firing is K GEMM pairs (matmul-only — no factorization primitive),
+    so it rides the accelerator's dense-FLOP path the eigendecomposition
+    can't; on CPU the ratio mostly reflects FLOP counts, on real
+    accelerators the gap widens.  Finiteness of both updates is asserted
+    (the two algorithms produce different — both valid — directions, so
+    there is no allclose between them)."""
+    rows = []
+    opt_ns = _opt(taps, bucketed=True, quick=quick, variant="nskfac")
+    opt_ev = _opt(taps, bucketed=True, quick=quick, variant="kfac")
+    flags = (True, False, True)
+    rng = jax.random.PRNGKey(7)
+    steps, states = {}, {}
+    for label, opt in (("ns", opt_ns), ("evd", opt_ev)):
+        st = opt.init(params)
+        warm = _step_fn(opt, params, acts, pgs, N, (True, False, False))
+        _, st = warm(grads, st, rng)
+        steps[label] = _step_fn(opt, params, acts, pgs, N, flags)
+        states[label] = st
+        upd, _ = steps[label](grads, st, rng)
+        for name in taps:
+            assert np.isfinite(np.asarray(upd[name]["w"])).all(), \
+                (label, name)
+    sn, se = _timeit_pair(
+        lambda: steps["ns"](grads, states["ns"], rng)[0],
+        lambda: steps["evd"](grads, states["evd"], rng)[0],
+        reps=10, rounds=2)
+    t_n, t_e = float(np.min(sn)), float(np.min(se))
+    rows.append({
+        "name": "step/ns_vs_evd",
+        "us_per_call": t_n * 1e6,
+        **_pcts(sn),
+        "derived": f"evd_us={t_e * 1e6:.1f} "
+                   f"evd_p99_us={np.percentile(se, 99) * 1e6:.1f} "
+                   f"evd/ns={t_e / t_n:.2f}x "
+                   f"ns_iters={opt_ns.cfg.policy.ns_iters} "
+                   f"finite=True",
+    })
     return rows
 
 

@@ -1,5 +1,5 @@
 """The K-FAC optimizer family (K-FAC / R-KFAC / B-KFAC / B-R-KFAC /
-B-KFAC-C) as a single policy-driven JAX optimizer.
+B-KFAC-C / NS-KFAC) as a single policy-driven JAX optimizer.
 
 Model contract
 --------------
@@ -28,7 +28,7 @@ uniform mask:
 
   do_stats  = k % T_updt == 0                      (EA absorb, all variants)
   do_light  = k % T_brand == 0   (B-variants: Brand update;   else no-op)
-  do_heavy  = k % T_inv  == 0    (kfac: EVD, rkfac: RSVD)
+  do_heavy  = k % T_inv  == 0    (kfac: EVD, rkfac: RSVD, nskfac: NS)
             = k % T_rsvd == 0    (brkfac: RSVD overwrite)
             = k % T_corct == 0   (bkfacc: light correction)
 """
@@ -304,16 +304,21 @@ class Kfac:
         """
         use_k = self.cfg.use_kernels
         cont = self.cfg.spectrum_continuation
+        # NS-mode sides hold a dense damped inverse in U — plain GEMM apply
+        dense_g = self.specs[name]["G"].mode is kfactor.Mode.NS
+        dense_a = self.specs[name]["A"].mode is kfactor.Mode.NS
         if self.taps[name].linear_apply:
             # Alg 8: step from gradient factors; grad_w is unused (stop-grad)
             S = precond.precondition_linear_with_damping(
                 g_factor, a_factor, st.G.U, st.G.D, st.A.U, st.A.D, phi,
-                continuation=cont, use_kernel=use_k)
+                continuation=cont, use_kernel=use_k,
+                dense_g=dense_g, dense_a=dense_a)
         else:
             J = jnp.swapaxes(grad_w, -1, -2).astype(jnp.float32)
             S = precond.precondition_with_damping(
                 J, st.G.U, st.G.D, st.A.U, st.A.D, phi,
-                continuation=cont, use_kernel=use_k)
+                continuation=cont, use_kernel=use_k,
+                dense_g=dense_g, dense_a=dense_a)
         return jnp.swapaxes(S, -1, -2)       # back to (d_in, d_out) layout
 
     # -- bucketed (cross-layer) pieces --------------------------------------
@@ -412,6 +417,10 @@ class Kfac:
         out = {}
         for bucket in self.precond_buckets:
             ent = bucket.entries
+            # role swap: the positional "g" slot below carries the A factor
+            # (and vice versa), so the NS dense flags swap with it
+            dense_swap_g = bucket.spec_a.mode is kfactor.Mode.NS
+            dense_swap_a = bucket.spec_g.mode is kfactor.Mode.NS
             key = lambda e: (e.name, "")
             U_g = buckets.gather(ent, {key(e): factors[e.name].G.U
                                        for e in ent})
@@ -433,14 +442,16 @@ class Kfac:
                     -1, -2).astype(jnp.float32)      # (B, d_in, n)
                 S = precond.precondition_linear_with_damping(
                     afac, gfac, U_a, D_a, U_g, D_g, phi,
-                    continuation=cont, use_kernel=use_k)
+                    continuation=cont, use_kernel=use_k,
+                    dense_g=dense_swap_g, dense_a=dense_swap_a)
             else:
                 J = buckets.gather(ent, {
                     key(e): get_path(grads, self.taps[e.name].param_path)
                     for e in ent}).astype(jnp.float32)  # (B, d_in, d_out)
                 S = precond.precondition_with_damping(
                     J, U_a, D_a, U_g, D_g, phi,
-                    continuation=cont, use_kernel=use_k)
+                    continuation=cont, use_kernel=use_k,
+                    dense_g=dense_swap_g, dense_a=dense_swap_a)
             out.update({name: Se for (name, _), Se
                         in buckets.scatter(ent, S).items()})
         return out

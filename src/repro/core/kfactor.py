@@ -13,11 +13,14 @@ A K-factor is the exponential average  M_k = ρ M_{k-1} + (1-ρ) X_k X_kᵀ
                          every T_rsvd
   BRAND_CORR  yes        Brand every T_brand + light correction   B-KFAC-C
                          (Alg 6) every T_corct
+  NS          yes        Newton–Schulz refinement of the held     NS-KFAC
+                         dense inverse every T_inv (matmul-only)  (§iter.)
 
 The state is a pytree with static shapes so it can live inside a jitted,
 sharded train step and be vmapped across scan-stacked layers / experts.
-``width`` (the number of held modes) is r + n_stat for Brand-family modes and
-r for RSVD/EVD modes — always static.
+``width`` (the number of held modes) is r + n_stat for Brand-family modes,
+d for NS (U holds the dense refined inverse) and r for RSVD/EVD modes —
+always static.
 """
 from __future__ import annotations
 
@@ -40,10 +43,11 @@ class Mode(enum.Enum):
     BRAND = "brand"            # B-KFAC  (pure; low-memory, M never formed)
     BRAND_RSVD = "brand_rsvd"  # B-R-KFAC
     BRAND_CORR = "brand_corr"  # B-KFAC-C
+    NS = "ns"                  # NS-KFAC (Newton–Schulz inverse refinement)
 
 
 # Modes that must materialize the dense d×d EA factor.
-_NEEDS_M = {Mode.EVD, Mode.RSVD, Mode.BRAND_RSVD, Mode.BRAND_CORR}
+_NEEDS_M = {Mode.EVD, Mode.RSVD, Mode.BRAND_RSVD, Mode.BRAND_CORR, Mode.NS}
 # Modes that run the Brand online update.
 _HAS_BRAND = {Mode.BRAND, Mode.BRAND_RSVD, Mode.BRAND_CORR}
 
@@ -82,9 +86,14 @@ class KFactorSpec:
     r_o: int = 10               # RSVD oversampling
     n_pwr_iter: int = 2
     n_crc: int = 0              # correction subspace size (BRAND_CORR)
+    ns_iters: int = 8           # Newton–Schulz steps per heavy firing (NS)
+    ns_phi: float = 0.1         # NS damping ratio λ̂ = ns_phi·λ_max(M)
+    ns_guard: float = 0.9       # warm-start guard: ‖I − M̂X₀‖₂ must sit below
 
     @property
     def width(self) -> int:
+        if self.mode is Mode.NS:
+            return self.d       # U holds the dense refined inverse
         if self.mode in _HAS_BRAND:
             return min(self.r + self.n_stat, self.d)
         return min(self.r, self.d)
@@ -179,16 +188,125 @@ def light_correction(spec: KFactorSpec, st: KFactorState, key: Array
     return KFactorState(U=U_new, D=D_new, M=st.M)
 
 
+_NS_PWR_ITERS = 12   # power-iteration steps for the λ_max(M) prescale
+_NS_RES_MAX = 0.5    # Frobenius residual past which a slot falls back
+
+
+def _ns_sym(x: Array) -> Array:
+    return 0.5 * (x + jnp.swapaxes(x, -1, -2))
+
+
+def _ns_lmax(M: Array) -> Array:
+    """λ_max estimate of a symmetric psd M (*stack, d, d) → (*stack,) by
+    deterministic power iteration (matmul-only; Rayleigh quotient).  The
+    deterministic all-ones start keeps the heavy firing key-free and
+    reproducible across replicated/sharded runs; an adversarial M exactly
+    orthogonal to it would underestimate, which the residual fallback in
+    ``ns_overwrite`` catches."""
+    d = M.shape[-1]
+    v0 = jnp.full(M.shape[:-1] + (1,), 1.0 / jnp.sqrt(d), M.dtype)
+
+    def body(_, v):
+        w = M @ v
+        nrm = jnp.sqrt(jnp.sum(w * w, axis=(-2, -1), keepdims=True))
+        return w / jnp.maximum(nrm, 1e-30)
+
+    # rolled loop (not unrolled python): the iteration body is traced
+    # once, keeping the heavy firing's XLA graph — and compile time —
+    # independent of the iteration count
+    v = jax.lax.fori_loop(0, _NS_PWR_ITERS, body, v0)
+    return jnp.sum(v * (M @ v), axis=(-2, -1))
+
+
+def _ns_resnorm(R: Array, iters: int = 8) -> Array:
+    """Spectral-norm estimate ‖R‖₂ of (*stack, d, d) → (*stack,) by power
+    iteration on RᵀR (matmul-only)."""
+    d = R.shape[-1]
+    Rt = jnp.swapaxes(R, -1, -2)
+    v0 = jnp.full(R.shape[:-1] + (1,), 1.0 / jnp.sqrt(d), R.dtype)
+
+    def body(_, v):
+        w = Rt @ (R @ v)
+        nrm = jnp.sqrt(jnp.sum(w * w, axis=(-2, -1), keepdims=True))
+        return w / jnp.maximum(nrm, 1e-30)
+
+    v = jax.lax.fori_loop(0, iters, body, v0)
+    w = R @ v
+    return jnp.sqrt(jnp.sum(w * w, axis=(-2, -1)))
+
+
+def ns_overwrite(spec: KFactorSpec, st: KFactorState) -> KFactorState:
+    """Newton–Schulz heavy refresh (Mode.NS): refine X ≈ M̂⁻¹ = (M + λ̂I)⁻¹
+    with ``spec.ns_iters`` Hotelling steps X ← X(2I − M̂X) — pure GEMMs via
+    ``kops.ns_step``, no eigh/qr/svd anywhere in the firing.
+
+    Prescale and warm start (the convergence safeguard, part 1):
+      * λ̂ = ns_phi · λ_max(M) from a matmul-only power iteration, so
+        κ(M̂) ≤ (1 + ns_phi)/ns_phi regardless of M's conditioning;
+      * warm start from the stale inverse held in U when its estimated
+        residual ‖I − M̂ U‖₂ clears ``ns_guard``; otherwise cold-start from
+        α·I with α = 2/(λ_max + 2λ̂), which puts the eigenvalues of αM̂ in
+        (0, 2) and the initial residual at ≈ (κ−1)/(κ+1) < 1.  Either way
+        the quadratic contraction r ← r² converges well within K = 8 at
+        the default ns_phi = 0.1.
+
+    Divergence fallback (part 2): if any slot's final Frobenius residual
+    ‖I − M̂X‖_F fails to clear ``_NS_RES_MAX`` (NaN/Inf included — the
+    comparison is written to catch them), a dense LU solve replaces that
+    slot (``jnp.linalg.inv`` — still factorization-of-last-resort only, and
+    still eigh/qr/svd-free).  The solve sits under ``lax.cond`` so healthy
+    steps never pay for it, and a per-slot ``where`` inside keeps converged
+    slots' NS results bit-identical whether or not a sibling slot diverged
+    (preserving replicated ≡ sharded parity).
+
+    Stacked-native over arbitrary leading axes; deterministic (key-free).
+    The damping λ̂ is baked into the refreshed inverse — U is the inverse
+    of the *damped* factor, refreshed with the spec's own ns_phi — and
+    D carries metadata, not a spectrum: D[..., 0] = λ̂, D[..., 1] = final
+    residual (diagnostic; ≥ _NS_RES_MAX flags that the fallback fired).
+    """
+    from repro.kernels import ops as kops
+
+    d = spec.d
+    M = _ns_sym(st.M)
+    lmax = jnp.maximum(_ns_lmax(M), 1e-12)
+    lam = spec.ns_phi * lmax                               # (*stack,)
+    eye = jnp.eye(d, dtype=M.dtype)
+    Mhat = M + lam[..., None, None] * eye
+    alpha = 2.0 / (lmax + 2.0 * lam)
+    X_cold = alpha[..., None, None] * eye
+    X_warm = _ns_sym(st.U)
+    r_warm = _ns_resnorm(eye - Mhat @ X_warm)
+    use_warm = r_warm < spec.ns_guard                      # NaN-safe: False
+    X = jnp.where(use_warm[..., None, None], X_warm, X_cold)
+    X = jax.lax.fori_loop(0, spec.ns_iters,
+                          lambda _, x: kops.ns_step(Mhat, x), X)
+    R = eye - Mhat @ X
+    res = jnp.sqrt(jnp.sum(R * R, axis=(-2, -1)))
+    bad = ~(res < _NS_RES_MAX)                             # NaN/Inf → True
+
+    def _fallback(x):
+        dense = jnp.linalg.inv(Mhat)                       # LU, no eigh/qr/svd
+        return jnp.where(bad[..., None, None], dense, x)
+
+    X = jax.lax.cond(jnp.any(bad), _fallback, lambda x: x, X)
+    D = jnp.zeros(st.D.shape, st.D.dtype)
+    D = D.at[..., 0].set(lam.astype(st.D.dtype))
+    if d > 1:
+        D = D.at[..., 1].set(res.astype(st.D.dtype))
+    return KFactorState(U=X.astype(st.U.dtype), D=D, M=st.M)
+
+
 # ---------------------------------------------------------------------------
 # fused per-step transition: stats step + (scheduled) inverse-rep step
 # ---------------------------------------------------------------------------
 
 def has_heavy_op(spec: KFactorSpec) -> bool:
     """True iff the mode has a periodic heavy op (EVD / RSVD overwrite /
-    correction) — pure BRAND maintains its inverse rep with light work
-    only, so the scheduler never assigns it a heavy phase."""
+    correction / NS refinement) — pure BRAND maintains its inverse rep with
+    light work only, so the scheduler never assigns it a heavy phase."""
     return spec.mode in (Mode.EVD, Mode.RSVD, Mode.BRAND_RSVD,
-                         Mode.BRAND_CORR)
+                         Mode.BRAND_CORR, Mode.NS)
 
 
 def has_work(spec: KFactorSpec, do_stats: bool, do_light: bool,
@@ -236,6 +354,9 @@ def inverse_rep_step(spec: KFactorSpec, st: KFactorState, X: Array,
     if spec.mode is Mode.RSVD:
         return jax.lax.cond(heavy, lambda s: rsvd_overwrite(spec, s, key),
                             lambda s: s, st)
+    if spec.mode is Mode.NS:
+        return jax.lax.cond(heavy, lambda s: ns_overwrite(spec, s),
+                            lambda s: s, st)
     if spec.mode is Mode.BRAND:
         return brand_step(spec, st, X, first, use_kernel)
     if spec.mode is Mode.BRAND_RSVD:
@@ -258,6 +379,11 @@ def heavy_overwrite_batched(spec: KFactorSpec, st: KFactorState,
     ever enters the graph on steps (or slots) that skip heavy work."""
     if spec.mode is Mode.EVD:
         return jax.vmap(lambda s: evd_overwrite(spec, s))(st)
+    if spec.mode is Mode.NS:
+        # stacked-native (and its batched GEMMs must stay one launch, not a
+        # vmap of launches); the divergence fallback is bucket-level cond +
+        # per-slot where, which a vmap would defeat
+        return ns_overwrite(spec, st)
     if spec.mode in (Mode.RSVD, Mode.BRAND_RSVD):
         return jax.vmap(lambda s, k: rsvd_overwrite(spec, s, k))(st, keys)
     if spec.mode is Mode.BRAND_CORR:

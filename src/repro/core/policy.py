@@ -24,6 +24,7 @@ _VARIANT_MODES = {
     "bkfac":  (Mode.BRAND, Mode.RSVD),
     "brkfac": (Mode.BRAND_RSVD, Mode.RSVD),
     "bkfacc": (Mode.BRAND_CORR, Mode.RSVD),
+    "nskfac": (Mode.NS, Mode.NS),
 }
 
 VARIANTS = tuple(_VARIANT_MODES)
@@ -42,6 +43,7 @@ _VARIANT_HEAVY_PERIOD = {
     "bkfac":  None,
     "brkfac": "T_rsvd",
     "bkfacc": "T_corct",
+    "nskfac": "T_inv",
 }
 
 
@@ -74,6 +76,9 @@ class PolicyConfig:
     rho: float = 0.95
     phi_crc: float = 0.5         # n_crc = phi_crc * r  (B-KFAC-C)
     max_dense_dim: int = 8192    # memory gate for forming the d×d factor
+    ns_iters: int = 8            # NS-KFAC: Newton–Schulz steps per firing
+    ns_phi: float = 0.1          # NS-KFAC: λ̂ = ns_phi·λ_max(M)
+    ns_guard: float = 0.9        # NS-KFAC: warm-start residual guard
 
 
 def select_mode(cfg: PolicyConfig, d: int, n_stat: int) -> Mode:
@@ -89,18 +94,24 @@ def select_mode(cfg: PolicyConfig, d: int, n_stat: int) -> Mode:
       * ``d ≤ r + r_o`` → EVD override, applied LAST: a factor this
         small is exact and cheapest under dense EVD even when the
         memory gate just degraded it (its M is tiny by construction).
+        NS is exempt — its whole point is an eigh-free heavy path, and
+        at tiny d the K GEMM steps are as cheap as anything else.
     """
     _check_variant(cfg.variant)
     wide_mode, narrow_mode = _VARIANT_MODES[cfg.variant]
     r = min(cfg.r, d)
     b_applicable = d > r + n_stat          # paper's applicability condition
     mode = wide_mode if b_applicable else narrow_mode
-    # memory gate: cannot form M → must be pure Brand (low-memory property)
+    # memory gate: cannot form M → must be pure Brand (low-memory property).
+    # NS holds M *and* a dense inverse (2·d² floats), so it degrades at the
+    # same gate.
     if d > cfg.max_dense_dim and mode in (Mode.EVD, Mode.RSVD,
-                                          Mode.BRAND_RSVD, Mode.BRAND_CORR):
+                                          Mode.BRAND_RSVD, Mode.BRAND_CORR,
+                                          Mode.NS):
         mode = Mode.BRAND
-    # tiny factors: EVD is exact and cheapest of all
-    if d <= r + cfg.r_o:
+    # tiny factors: EVD is exact and cheapest of all (except for NS, which
+    # must stay factorization-free)
+    if d <= r + cfg.r_o and mode is not Mode.NS:
         mode = Mode.EVD
     return mode
 
@@ -110,4 +121,6 @@ def make_factor_spec(cfg: PolicyConfig, d: int, n_stat: int) -> KFactorSpec:
     r = min(cfg.r, d)
     n_crc = max(1, int(cfg.phi_crc * r)) if mode == Mode.BRAND_CORR else 0
     return KFactorSpec(d=d, r=r, n_stat=n_stat, mode=mode, rho=cfg.rho,
-                       r_o=cfg.r_o, n_pwr_iter=cfg.n_pwr_iter, n_crc=n_crc)
+                       r_o=cfg.r_o, n_pwr_iter=cfg.n_pwr_iter, n_crc=n_crc,
+                       ns_iters=cfg.ns_iters, ns_phi=cfg.ns_phi,
+                       ns_guard=cfg.ns_guard)

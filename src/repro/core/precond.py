@@ -49,12 +49,31 @@ def damping_from_spectrum(D: Array, phi: Array) -> Array:
     return phi * jnp.maximum(jnp.max(D, axis=-1), 1e-12)
 
 
+#: floor for λ in the inverse-diagonal split.  The decomposition
+#: (D+λ)⁻¹ − 1/λ (+ J/λ off-span) divides by λ itself, so an undamped
+#: config (φ = 0) or a fully-clamped spectrum (max D = 0 → λ = 0) would
+#: emit inf/NaN that propagates silently through the whole application.
+#: Flooring λ keeps the limit exact where it is finite: on the span the
+#: diagonal tends to D⁻¹ − 1/λ_eps which recombines with the 1/λ_eps
+#: off-span term to plain D⁻¹, and rank-deficient directions get the
+#: (huge but finite) 1/λ_eps instead of inf.
+_LAM_EPS = 1e-12
+
+
 def lowrank_inv_diag(D: Array, lam: Array) -> Array:
     """The diagonal (D+λ)⁻¹ − 1/λ used on the span (negative values —
     it *removes* the over-counted 1/λ there).  lam broadcasts over the
-    trailing mode axis."""
-    lam = jnp.asarray(lam)[..., None]
-    return 1.0 / (D + lam) - 1.0 / lam
+    trailing mode axis.  λ is floored at ``_LAM_EPS`` (see above); D+λ is
+    floored too so a clamped-to-zero mode cannot divide by zero."""
+    lam = jnp.maximum(jnp.asarray(lam), _LAM_EPS)[..., None]
+    return 1.0 / jnp.maximum(D + lam, _LAM_EPS) - 1.0 / lam
+
+
+def _lam_safe(lam: Array) -> Array:
+    """The same λ floor for the off-span J/λ term — every caller pairing
+    ``lowrank_inv_diag`` with a 1/λ residual must divide by the *same*
+    floored λ or the split stops telescoping."""
+    return jnp.maximum(jnp.asarray(lam), _LAM_EPS)
 
 
 def apply_inv_right(J: Array, U: Array, D: Array, lam: Array,
@@ -64,6 +83,7 @@ def apply_inv_right(J: Array, U: Array, D: Array, lam: Array,
     J: (..., p, d), U: (..., d, w).  O(p·d·w): two tall-skinny matmuls +
     rank-1 work.
     """
+    lam = _lam_safe(lam)
     if use_kernel:
         from repro.kernels import ops as kops
         return kops.lowrank_apply(J, U, lowrank_inv_diag(D, lam), lam)
@@ -82,7 +102,8 @@ def apply_inv_left(J: Array, U: Array, D: Array, lam: Array,
 def kfac_precondition(J: Array,
                       U_g: Array, D_g: Array, lam_g: Array,
                       U_a: Array, D_a: Array, lam_a: Array,
-                      use_kernel: bool = False) -> Array:
+                      use_kernel: bool = False,
+                      dense_g: bool = False, dense_a: bool = False) -> Array:
     """Full quadratic application (Alg 1): S = Γ̄⁻¹ J Ā⁻¹.
 
     J is the layer gradient in matrix form (d_out, d_in) = Mat(g);
@@ -91,9 +112,20 @@ def kfac_precondition(J: Array,
     With ``use_kernel`` the whole two-sided application dispatches to the
     fused Pallas path (one launch sequence, J resident, no transposes, no
     HBM intermediate) instead of two ``lowrank_apply`` round-trips.
+
+    ``dense_g``/``dense_a`` mark NS-mode factors: U on that side *is* the
+    dense damped inverse (U ≈ (M + λ̂I)⁻¹, symmetric), so the application
+    is a plain GEMM and the (D, λ) arguments on that side are ignored —
+    λ̂ was baked in at the NS refresh.
     """
+    if dense_g or dense_a:
+        M = J @ U_a if dense_a else apply_inv_right(J, U_a, D_a, lam_a,
+                                                    use_kernel)
+        return U_g @ M if dense_g else apply_inv_left(M, U_g, D_g, lam_g,
+                                                      use_kernel)
     if use_kernel:
         from repro.kernels import ops as kops
+        lam_g, lam_a = _lam_safe(lam_g), _lam_safe(lam_a)
         return kops.precond_fused(J,
                                   U_g, lowrank_inv_diag(D_g, lam_g), lam_g,
                                   U_a, lowrank_inv_diag(D_a, lam_a), lam_a)
@@ -104,7 +136,9 @@ def kfac_precondition(J: Array,
 def kfac_precondition_linear(G: Array, A: Array,
                              U_g: Array, D_g: Array, lam_g: Array,
                              U_a: Array, D_a: Array, lam_a: Array,
-                             use_kernel: bool = False) -> Array:
+                             use_kernel: bool = False,
+                             dense_g: bool = False, dense_a: bool = False
+                             ) -> Array:
     """Alg 8 — linear-in-d application from gradient factors.
 
     The layer gradient is Mat(g) = G Aᵀ with G (d_out, n), A (d_in, n)
@@ -113,10 +147,13 @@ def kfac_precondition_linear(G: Array, A: Array,
         S = (Γ̄⁻¹ G) (Aᵀ Ā⁻¹)        — O(r·d·n) instead of O(r·d²).
 
     Only beneficial (and only used) when n < d (paper's applicability
-    condition; holds for FC layers with n = batch).
+    condition; holds for FC layers with n = batch).  ``dense_g``/
+    ``dense_a`` as in ``kfac_precondition`` (NS sides apply by GEMM).
     """
-    Gp = apply_inv_left(G, U_g, D_g, lam_g, use_kernel)      # (..., d_out, n)
-    Ap = apply_inv_right(_mt(A), U_a, D_a, lam_a, use_kernel)  # (..., n, d_in)
+    Gp = (U_g @ G if dense_g
+          else apply_inv_left(G, U_g, D_g, lam_g, use_kernel))
+    Ap = (_mt(A) @ U_a if dense_a
+          else apply_inv_right(_mt(A), U_a, D_a, lam_a, use_kernel))
     return Gp @ Ap
 
 
@@ -134,17 +171,28 @@ def precondition_with_damping(J: Array,
                               U_a: Array, D_a: Array,
                               phi: Array, *,
                               continuation: bool = True,
-                              use_kernel: bool = False) -> Array:
+                              use_kernel: bool = False,
+                              dense_g: bool = False,
+                              dense_a: bool = False) -> Array:
     """Damping + spectrum continuation + full quadratic application for a
     whole (possibly stacked) tap in one call.
 
     J: (*stack, d_out, d_in); U/D stacked alike; per-element λ is derived
     from each element's spectrum.  This is the entry point the optimizer
     uses — stacked taps become one batched fused kernel launch.
+
+    A ``dense_*`` (NS-mode) side skips damping/continuation entirely: its
+    U is already the inverse of the damped factor (λ̂ = ns_phi·λ_max baked
+    in at the heavy refresh, D carries metadata rather than a spectrum),
+    so deriving λ from D here would be meaningless.
     """
-    D_a, lam_a = _damped(D_a, phi, continuation)
-    D_g, lam_g = _damped(D_g, phi, continuation)
-    return kfac_precondition(J, U_g, D_g, lam_g, U_a, D_a, lam_a, use_kernel)
+    lam_a = lam_g = jnp.asarray(1.0)
+    if not dense_a:
+        D_a, lam_a = _damped(D_a, phi, continuation)
+    if not dense_g:
+        D_g, lam_g = _damped(D_g, phi, continuation)
+    return kfac_precondition(J, U_g, D_g, lam_g, U_a, D_a, lam_a, use_kernel,
+                             dense_g=dense_g, dense_a=dense_a)
 
 
 def precondition_linear_with_damping(G: Array, A: Array,
@@ -152,13 +200,20 @@ def precondition_linear_with_damping(G: Array, A: Array,
                                      U_a: Array, D_a: Array,
                                      phi: Array, *,
                                      continuation: bool = True,
-                                     use_kernel: bool = False) -> Array:
+                                     use_kernel: bool = False,
+                                     dense_g: bool = False,
+                                     dense_a: bool = False) -> Array:
     """Damping + continuation + Alg-8 linear application (from gradient
-    factors) — the linear-apply counterpart of precondition_with_damping."""
-    D_a, lam_a = _damped(D_a, phi, continuation)
-    D_g, lam_g = _damped(D_g, phi, continuation)
+    factors) — the linear-apply counterpart of precondition_with_damping.
+    ``dense_*`` sides (NS) skip damping, as in the quadratic entry point."""
+    lam_a = lam_g = jnp.asarray(1.0)
+    if not dense_a:
+        D_a, lam_a = _damped(D_a, phi, continuation)
+    if not dense_g:
+        D_g, lam_g = _damped(D_g, phi, continuation)
     return kfac_precondition_linear(G, A, U_g, D_g, lam_g,
-                                    U_a, D_a, lam_a, use_kernel)
+                                    U_a, D_a, lam_a, use_kernel,
+                                    dense_g=dense_g, dense_a=dense_a)
 
 
 def dense_inv_apply(J: Array, M_g: Array, lam_g: Array,

@@ -39,6 +39,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels import ea_syrk as _ea
+from repro.kernels import ns_inverse as _ns
 from repro.kernels import brand_panel as _bp
 from repro.kernels import cholqr as _cq
 from repro.kernels import lowrank_apply as _la
@@ -212,6 +213,34 @@ def ea_syrk(M: Array, X: Array, rho, first) -> Array:
     bm, bn, bk = syrk_blocks(pd, pn)
     out = _ea.ea_syrk_batched_pallas(Mp, Xp, keep, coef, bm=bm, bn=bn, bk=bk,
                                      interpret=(mode == "interpret"))
+    return out[..., :d, :d].reshape(stack + (d, d))
+
+
+def ns_step(Mhat: Array, X: Array) -> Array:
+    """One Newton–Schulz step X ← 2X − X(M̂X) — two fused-epilogue GEMM
+    launches of the ``ns_inverse`` kernel (ea_syrk tiling; same pad-to-tile
+    dispatch).  Mhat, X: (*stack, d, d).  Zero padding is exact: padded
+    rows/columns of M̂ and X are zero, stay zero through both products
+    (2·0 − 0·0 = 0), and are sliced away."""
+    mode = _mode()
+    d = X.shape[-1]
+    if mode == "ref" or not _pad_ok((d, _LANE)):
+        return ref.ns_step(Mhat, X)
+    stack = _common_stack((Mhat, 2), (X, 2))
+    Mb = _flat(Mhat, 2, stack)
+    Xb = _flat(X, 2, stack)
+    pd = _round_up(d, _LANE)
+    Mp = _pad_tail(Mb, pd, pd)
+    Xp = _pad_tail(Xb, pd, pd)
+    bm, bn, bk = syrk_blocks(pd, pd)
+    interp = mode == "interpret"
+    # T = M̂ X  (C operand rides along unused: alpha = 0)
+    T = _ns.gemm_update_batched_pallas(Xp, Mp, Xp, 0.0, 1.0,
+                                       bm=bm, bn=bn, bk=bk, interpret=interp)
+    # X' = 2X − X T
+    out = _ns.gemm_update_batched_pallas(Xp, Xp, T, 2.0, -1.0,
+                                         bm=bm, bn=bn, bk=bk,
+                                         interpret=interp)
     return out[..., :d, :d].reshape(stack + (d, d))
 
 

@@ -60,6 +60,15 @@ def lowrank_apply(X: Array, U: Array, s: Array, lam) -> Array:
     return T @ _mt(U) + X / _scal(lam, X)
 
 
+def ns_step(Mhat: Array, X: Array) -> Array:
+    """One Newton–Schulz/Hotelling inverse-refinement step
+    X ← X(2I − M̂X) = 2X − X(M̂X) — two GEMMs, no factorization.
+    Mhat, X: (..., d, d).  Converges quadratically to M̂⁻¹ when
+    ‖I − M̂X‖₂ < 1 (the caller's prescale/guard establishes this)."""
+    T = Mhat @ X
+    return 2.0 * X - X @ T
+
+
 def syrk_tn(A: Array) -> Array:
     """Gram matrix G = AᵀA in float32 (the CholeskyQR SYRK pass)."""
     A32 = A.astype(jnp.float32)

@@ -81,6 +81,7 @@ class TestInflightPrimitives:
         np.testing.assert_array_equal(np.asarray(buf.keys[1]),
                                       np.asarray(keys[1]))
 
+    @pytest.mark.slow
     def test_land_swap_is_heavy_of_snapshot_plus_replay(self):
         """The landed rep must equal heavy(snapshot) with the ring panels
         replayed — computed here by hand from the same buffer."""
@@ -109,6 +110,7 @@ class TestInflightPrimitives:
                                       np.asarray(st.M))
         assert not bool(buf_after.live.any())
 
+    @pytest.mark.slow
     def test_land_without_launch_is_noop(self):
         """A landing whose launch was dropped (straggler back-off) or
         never fired (fresh resume) must leave the live state untouched —
@@ -163,6 +165,7 @@ def _run(opt, steps=8, landing_fn=None):
     return outs, st
 
 
+@pytest.mark.slow
 def test_staleness_contract_lag_vs_sync():
     """lag>0 is NOT sync shifted: inside a lag window the old inverse is
     still live (sync already overwrote inline), and the landing swaps in
@@ -187,6 +190,7 @@ def test_staleness_contract_lag_vs_sync():
     assert max(diffs[1:]) > 1e-6, diffs
 
 
+@pytest.mark.slow
 def test_inflight_is_part_of_state_pytree():
     opt = _opt("kfac", lag=2)
     st = opt.init(_data(opt.taps)[0])
@@ -200,6 +204,7 @@ def test_inflight_is_part_of_state_pytree():
     assert not jax.tree_util.tree_leaves(st_s.inflight)
 
 
+@pytest.mark.slow
 def test_overlapped_landing_equals_in_graph():
     """Feeding pre-computed heavy results through the ``landing`` operand
     must give exactly the in-graph landing's numbers (same snapshot, same
@@ -228,6 +233,7 @@ def test_overlapped_landing_equals_in_graph():
                                        err_msg=f"step {k} {n}")
 
 
+@pytest.mark.slow
 def test_async_runner_matches_in_graph_end_to_end():
     """The threaded AsyncInverseRunner (overlapped dispatch, spare device
     or not) reproduces the in-graph landing exactly through

@@ -111,6 +111,7 @@ def test_odd_shape_falls_out_into_singleton_bucket():
 # gather / scatter round-trips
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_gather_scatter_roundtrip():
     entries = (buckets.Entry("a", "A", (), 0, 1),
                buckets.Entry("b", "A", (2, 3), 1, 6),
@@ -206,6 +207,7 @@ def test_bucketed_randomized_heavy_modes_run():
                 <= 0.5 * (np.linalg.norm(x) + np.linalg.norm(y))
 
 
+@pytest.mark.slow
 def test_bucketed_kernel_path_matches_jnp(monkeypatch):
     """Bucketed + use_kernels (interpret) ≡ bucketed jnp oracles, end to
     end on the mixed model — the acceptance gate of the PR."""

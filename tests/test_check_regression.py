@@ -1,0 +1,109 @@
+"""Unit tests for the perf-regression gate's comparison logic.
+
+The load-bearing case is the normalization fix: the gate originally
+scaled by the median fresh/baseline ratio over ALL rows, so a uniform
+real slowdown (every row 2x — e.g. a jit cache disabled repo-wide)
+self-normalized to scale=2.0 and tripped nothing.  Now the scale comes
+from a code-independent calibration workload when both artifacts carry
+one, and otherwise from the fastest-row band only.
+"""
+import importlib.util
+import os
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+_SPEC = importlib.util.spec_from_file_location(
+    "check_regression",
+    os.path.join(HERE, os.pardir, "benchmarks", "check_regression.py"))
+cr = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(cr)
+
+
+def _rows(times, **extra_fields):
+    out = {}
+    for name, t in times.items():
+        row = {"name": name, "p50_us": float(t), "derived": ""}
+        row.update(extra_fields.get(name, {}))
+        out[name] = row
+    return out
+
+
+class TestMachineScale:
+    def test_calibration_wins(self):
+        scale, src = cr.machine_scale([2.0, 2.0, 2.0], 0.2,
+                                      base_cal=500.0, fresh_cal=500.0)
+        assert scale == 1.0 and "calibration" in src
+
+    def test_calibration_tracks_machine(self):
+        scale, _ = cr.machine_scale([2.0, 2.0], 0.2,
+                                    base_cal=500.0, fresh_cal=1000.0)
+        assert scale == 2.0
+
+    def test_fallback_uses_fastest_band(self):
+        # 2 honest rows at ~1.0, 6 regressed at 2.0: the scale must come
+        # from the honest band, not the all-rows median (which is 2.0)
+        scale, src = cr.machine_scale([1.0, 1.02] + [2.0] * 6, 0.2)
+        assert scale <= 1.02, (scale, src)
+
+
+class TestCompare:
+    def test_uniform_regression_caught_with_calibration(self):
+        """THE regression this PR fixes: every row uniformly 2x slower
+        with an unchanged machine (equal calibrations) must fail — the
+        original all-rows-median scale absorbed it completely."""
+        names = [f"r{i}" for i in range(6)]
+        base = _rows({n: 100.0 for n in names})
+        fresh = _rows({n: 200.0 for n in names})
+        fails, _ = cr.compare(base, fresh, 0.2, "t",
+                              base_cal=500.0, fresh_cal=500.0)
+        assert len(fails) == len(names), fails
+
+    def test_machine_slowdown_not_flagged(self):
+        """Same 2x on every row, but the calibration moved 2x too: a
+        slower machine, not a regression."""
+        names = [f"r{i}" for i in range(6)]
+        base = _rows({n: 100.0 for n in names})
+        fresh = _rows({n: 200.0 for n in names})
+        fails, _ = cr.compare(base, fresh, 0.2, "t",
+                              base_cal=500.0, fresh_cal=1000.0)
+        assert not fails, fails
+
+    def test_majority_regression_caught_without_calibration(self):
+        """Legacy baseline (no calibration stamp): 6 of 8 rows at 2x
+        must still fail via the fastest-band fallback.  The all-rows
+        median would have scaled by 2.0 and passed everything."""
+        base = _rows({f"r{i}": 100.0 for i in range(8)})
+        fresh = _rows({f"r{i}": (100.0 if i < 2 else 200.0)
+                       for i in range(8)})
+        fails, _ = cr.compare(base, fresh, 0.2, "t")
+        assert len(fails) == 6, fails
+        assert all("r0" not in f and "r1:" not in f for f in fails)
+
+    def test_single_hot_row_flagged(self):
+        base = _rows({f"r{i}": 100.0 for i in range(6)})
+        times = {f"r{i}": 101.0 for i in range(6)}
+        times["r3"] = 160.0
+        fails, _ = cr.compare(base, _rows(times), 0.2, "t",
+                              base_cal=500.0, fresh_cal=500.0)
+        assert len(fails) == 1 and "r3" in fails[0], fails
+
+    def test_noise_allowance(self):
+        """A row whose own baseline demonstrated 1.5x run-to-run jitter
+        gets threshold x that allowance; a stable row does not."""
+        base = _rows({"jittery": 100.0, "stable": 100.0},
+                     jittery={"p50_noise": 1.5})
+        fresh = _rows({"jittery": 160.0, "stable": 160.0})
+        fails, _ = cr.compare(base, fresh, 0.2, "t",
+                              base_cal=500.0, fresh_cal=500.0)
+        assert len(fails) == 1 and "stable" in fails[0], fails
+
+    def test_parity_flip_and_missing_row_fail(self):
+        base = _rows({"a": 100.0, "gone": 50.0})
+        fresh = _rows({"a": 100.0, "claim": 0.0})
+        fresh["a"]["derived"] = "speedup=2.0x allclose=False"
+        fresh["claim"]["derived"] = "False"
+        del fresh["claim"]["p50_us"]
+        fails, _ = cr.compare(base, fresh, 0.2, "t",
+                              base_cal=1.0, fresh_cal=1.0)
+        msgs = "\n".join(fails)
+        assert "allclose=False" in msgs
+        assert "claim" in msgs and "missing" in msgs, msgs

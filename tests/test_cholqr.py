@@ -47,8 +47,10 @@ def _no_fallback(monkeypatch, *names):
 
 @pytest.mark.parametrize("stack,d,n,dtype", [
     ((), 256, 128, jnp.float32),
-    ((), 300, 72, jnp.float32),       # misaligned dims
-    ((2,), 256, 128, jnp.float32),    # stacked
+    pytest.param((), 300, 72, jnp.float32,
+                 marks=pytest.mark.slow),   # misaligned dims
+    pytest.param((2,), 256, 128, jnp.float32,
+                 marks=pytest.mark.slow),   # stacked
     ((), 256, 128, jnp.bfloat16),
 ])
 def test_cholqr2_orthonormal_and_reconstructs(stack, d, n, dtype):
@@ -80,7 +82,9 @@ def test_cholqr2_rank_deficient_panel_is_finite():
     np.testing.assert_allclose(np.asarray(Q @ R), np.asarray(A), atol=1e-4)
 
 
-@pytest.mark.parametrize("cond", [1e2, 1e4, 1e6, 1e8])
+@pytest.mark.parametrize("cond", [
+    1e2, pytest.param(1e4, marks=pytest.mark.slow),
+    pytest.param(1e6, marks=pytest.mark.slow), 1e8])
 def test_cholqr2_ill_conditioned_panel_stays_projector(cond):
     """For any fp32 conditioning, QᵀQ must be a rank-k projector to
     machine precision (sub-noise-floor directions become an exactly-null
@@ -164,10 +168,8 @@ def test_tiny_panel_falls_back_to_oracle(interpret_mode):
 # Brand-update wiring
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("stack", [
-    (),
-    pytest.param((3,), marks=pytest.mark.slow),  # CI kernel-parity runs it
-])
+@pytest.mark.slow
+@pytest.mark.parametrize("stack", [(), (3,)])  # CI kernel-parity runs both
 def test_sym_brand_update_kernel_path_matches_jnp(interpret_mode, stack):
     """use_kernel=True (Pallas panel + CholeskyQR2) and the default
     Householder path represent the same matrix and spectrum."""

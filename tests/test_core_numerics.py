@@ -1,4 +1,6 @@
 """Unit tests for the core numerics: Brand updates, RSVD, preconditioning."""
+import functools
+
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -161,6 +163,62 @@ class TestPrecond:
         got = precond.apply_inv_right(J, U, D, jnp.asarray(0.5))
         np.testing.assert_allclose(got, J / 0.5, atol=1e-6)
 
+    def test_lam_zero_is_finite(self):
+        """λ = 0 (undamped config) used to emit inf/NaN from the
+        (D+λ)⁻¹ − 1/λ split; the eps floor must keep every quantity
+        finite, and exact on the span (the 1/λ_eps terms telescope)."""
+        diag = precond.lowrank_inv_diag(jnp.array([2.0, 1.0, 0.0]), 0.0)
+        assert np.isfinite(np.asarray(diag)).all()
+        # fully-clamped spectrum at λ = 0 — the worst case of both bugs
+        diag0 = precond.lowrank_inv_diag(jnp.zeros((4,)), 0.0)
+        assert np.isfinite(np.asarray(diag0)).all()
+        # full application at λ = 0 stays finite (the floor's contract is
+        # inf/NaN protection, not accuracy recovery — at λ = λ_eps the
+        # 1/λ-scale intermediates dwarf fp32 precision by design)
+        d = 12
+        M = _rand_psd_lowrank(jax.random.PRNGKey(17), d, 24)
+        U, D = rsvd.exact_evd(M)
+        J = jax.random.normal(jax.random.PRNGKey(18), (8, d))
+        got = precond.apply_inv_right(J, U, D, jnp.asarray(0.0))
+        assert np.isfinite(np.asarray(got)).all()
+        # ...and an ordinary small λ is untouched by the floor
+        got1 = precond.apply_inv_right(J, U, D, jnp.asarray(1e-3))
+        want1 = J @ jnp.linalg.inv(M + 1e-3 * jnp.eye(d))
+        np.testing.assert_allclose(np.asarray(got1), np.asarray(want1),
+                                   rtol=2e-2, atol=2e-3)
+
+    def test_continuation_shift_parity_rank_deficient(self):
+        """Satellite audit of the §3.5 λ-shift: at a rank-deficient factor
+        the shifted spectrum D − dmin and the shifted λ + dmin must be
+        used *together* in both the low-rank diagonal and the dense J/λ
+        term — mixing shifted D with unshifted λ over-damps the null
+        space.  Every caller was audited to route both through
+        ``precondition_with_damping`` / ``apply_inv_right`` with the pair
+        from ``spectrum_continuation``; this pins the contract against a
+        dense-inverse oracle built from the same shifted quantities."""
+        d, w = 16, 6
+        key = jax.random.PRNGKey(19)
+        Q, _ = jnp.linalg.qr(jax.random.normal(key, (d, w)))
+        D = jnp.array([3.0, 2.0, 1.5, 1.0, 0.7, 0.5])  # rank 6 < d
+        phi = jnp.asarray(0.3)
+        lam = precond.damping_from_spectrum(D, phi)
+        D2, lam2 = precond.spectrum_continuation(D, lam)
+        J = jax.random.normal(jax.random.fold_in(key, 1), (8, d))
+        got = precond.apply_inv_right(J, Q, D2, lam2)
+        M2 = (Q * D2) @ Q.T                              # shifted factor
+        want = J @ jnp.linalg.inv(M2 + lam2 * jnp.eye(d))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-3, atol=1e-5)
+        # the smallest retained mode is now damped at exactly λ + dmin —
+        # an unshifted-λ mix would damp it at λ and the null space at
+        # λ (under-damped) instead of λ + dmin: check the null direction
+        R = jax.random.normal(jax.random.fold_in(key, 2), (8, d))
+        null_rows = R @ (jnp.eye(d) - Q @ Q.T)            # ⊥ span(Q)
+        resp = precond.apply_inv_right(null_rows, Q, D2, lam2)
+        np.testing.assert_allclose(np.asarray(resp),
+                                   np.asarray(null_rows) / float(lam2),
+                                   rtol=1e-4, atol=1e-6)
+
 
 class TestKFactorStateMachine:
     def _spec(self, mode, d=48, r=8, n=4, **kw):
@@ -168,15 +226,19 @@ class TestKFactorStateMachine:
 
     def _run(self, spec, n_steps=6, heavy_every=2, seed=0):
         keys = jax.random.split(jax.random.PRNGKey(seed), n_steps)
+
+        @functools.partial(jax.jit, static_argnames=())
+        def step(st, X, key, first, heavy):
+            st = kfactor.stats_step(spec, st, X, first)
+            return kfactor.inverse_rep_step(spec, st, X, key, first, heavy)
+
         st = spec.init()
         Xs = []
         for i, k in enumerate(keys):
             X = jax.random.normal(k, (spec.d, spec.n_stat))
             Xs.append(X)
-            first = jnp.asarray(i == 0)
-            heavy = jnp.asarray(i % heavy_every == 0)
-            st = kfactor.stats_step(spec, st, X, first)
-            st = kfactor.inverse_rep_step(spec, st, X, k, first, heavy)
+            st = step(st, X, k, jnp.asarray(i == 0),
+                      jnp.asarray(i % heavy_every == 0))
         return st, Xs
 
     @pytest.mark.parametrize(
@@ -188,8 +250,16 @@ class TestKFactorStateMachine:
         spec = self._spec(mode, n_crc=4)
         st, Xs = self._run(spec)
         exact = kfactor.exact_ea(Xs, spec.rho)
-        rec = kfactor.reconstruct(st)
-        rel = np.linalg.norm(rec - exact) / np.linalg.norm(exact)
+        if mode is kfactor.Mode.NS:
+            # NS holds the damped dense *inverse* in U (D is metadata:
+            # λ̂, residual) — track against inv(EA + λ̂I) at the firing's
+            # own λ̂, modulo one stats step of staleness
+            lam = float(st.D[0])
+            want = np.linalg.inv(np.asarray(exact) + lam * np.eye(spec.d))
+            rel = np.linalg.norm(st.U - want) / np.linalg.norm(want)
+        else:
+            rec = kfactor.reconstruct(st)
+            rel = np.linalg.norm(rec - exact) / np.linalg.norm(exact)
         # all modes should produce a non-trivial approximation
         assert rel < 0.9, f"{mode}: rel err {rel}"
         if spec.needs_m:

@@ -126,6 +126,7 @@ class TestAsyncCheckpointRoundTrip:
                    for i in range(8)]
         return kfac_lib, cfg, taps, params, loss_fn, batches
 
+    @pytest.mark.slow
     def test_mid_lag_save_restore_matches_uninterrupted(self, tmp_path):
         from repro.train import loop
         kfac_lib, cfg, taps, params, loss_fn, batches = self._setup()
@@ -171,6 +172,7 @@ class TestAsyncCheckpointRoundTrip:
                                                     rtol=1e-6, atol=1e-7),
             end_state.params, ref_state.params)
 
+    @pytest.mark.slow
     def test_mid_lag_restore_with_overlap_runner(self, tmp_path):
         """Resuming with the overlapped runner: the landing whose launch
         predates the restore has no pending future and falls back to

@@ -79,9 +79,25 @@ def test_mode_accuracy_ordering():
         errs[mode] = float(jnp.linalg.norm(got - want) /
                            jnp.linalg.norm(want))
 
+    # NS holds the dense damped inverse in U — its application is a plain
+    # GEMM (J @ U), compared against the same dense solve.  NS's own λ̂
+    # (ns_phi·λ_max via power iteration) matches the eigh-derived lam above
+    # to ~1e-6, so NS sits at EVD-level accuracy: assert it beats every
+    # truncated mode, but NOT that EVD ≤ NS (both are exact-level and may
+    # swap within float noise).
+    spec_ns = KFactorSpec(d=D, r=R, n_stat=N_STAT, mode=Mode.NS, rho=RHO,
+                          ns_phi=PHI)
+    st_ns = _run_mode(spec_ns, Xs, key)
+    errs[Mode.NS] = float(jnp.linalg.norm(J @ st_ns.U - want) /
+                          jnp.linalg.norm(want))
+    assert float(st_ns.D[1]) < kfactor._NS_RES_MAX  # converged, no fallback
+
     assert all(np.isfinite(list(errs.values())))
     # K-FAC's exact inverse is essentially error-free...
     assert errs[Mode.EVD] < 1e-4, errs
+    # ...and so is a converged Newton–Schulz refinement of it
+    assert errs[Mode.NS] < 1e-4, errs
+    assert errs[Mode.NS] <= errs[Mode.RSVD], errs
     # ...RSVD pays the rank truncation...
     assert errs[Mode.EVD] <= errs[Mode.RSVD], errs
     # ...Brand modes additionally pay the compounded online truncation...

@@ -124,7 +124,8 @@ def _fused_operands(stack, p, d, w_g, w_a, dtype):
     ((2,), 128, 256, 16, 24, jnp.bfloat16),
     pytest.param((), 256, 128, 8, 8, jnp.float32,
                  marks=pytest.mark.slow),    # unstacked
-    ((2,), 120, 136, 13, 10, jnp.float32),   # pad path
+    pytest.param((2,), 120, 136, 13, 10, jnp.float32,
+                 marks=pytest.mark.slow),    # pad path (bf16 twin stays fast)
     ((2,), 120, 136, 13, 10, jnp.bfloat16),
     pytest.param((2, 2), 128, 128, 8, 16, jnp.float32,
                  marks=pytest.mark.slow),    # 2-level stack
@@ -206,6 +207,7 @@ def test_tiny_shapes_fall_back_to_ref(interpret_mode):
     np.testing.assert_allclose(got, want, atol=1e-6)
 
 
+@pytest.mark.slow
 def test_stacked_optimizer_update_kernels_match_jnp(interpret_mode):
     """End to end: a stacked tap steps identically with use_kernels on/off."""
     from repro.core import kfac as kfac_lib

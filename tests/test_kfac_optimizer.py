@@ -93,6 +93,22 @@ def test_variant_trains(variant):
         assert np.isfinite(np.asarray(leaf)).all()
 
 
+def test_zero_damping_stays_finite():
+    """Regression (λ-floor): damping_phi = 0 makes λ = 0 exactly, and the
+    low-rank inverse split (D+λ)⁻¹ − 1/λ used to emit inf/NaN that walked
+    silently through the whole update.  With the ``_LAM_EPS`` floor the
+    optimizer must complete the run with finite losses and params."""
+    cfg = _cfg("bkfac", damping_phi=optbase.constant(0.0),
+               T_inv=2, T_rsvd=4, T_corct=4, clip=1.0)
+    opt = kfac_lib.Kfac(cfg, make_mlp_taps())
+    params = init_mlp(jax.random.PRNGKey(4))
+    state, losses = loop.run_kfac_training(mlp_loss, opt, params,
+                                           make_batches(10), n_tokens=N_BS)
+    assert np.isfinite(losses).all(), losses
+    for leaf in jax.tree_util.tree_leaves(state.params):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
 def test_policy_mode_selection():
     pol = policy.PolicyConfig(variant="bkfac", r=16, max_dense_dim=512)
     from repro.core.kfactor import Mode

@@ -43,8 +43,10 @@ class TestMemoryGate:
         assert policy.select_mode(pol, 1025, 64) == Mode.BRAND
 
     def test_gate_applies_to_all_m_holding_modes(self):
+        # nskfac included: NS holds M *and* a dense inverse, so it must
+        # degrade to pure Brand at the same gate
         n_stat = 64
-        for variant in ("kfac", "rkfac", "brkfac", "bkfacc"):
+        for variant in ("kfac", "rkfac", "brkfac", "bkfacc", "nskfac"):
             pol = _pol(variant=variant, r=32, max_dense_dim=1024)
             assert policy.select_mode(pol, 4096, n_stat) == Mode.BRAND, \
                 variant
@@ -74,6 +76,12 @@ class TestTinyEvdOverride:
         pol = _pol(r=256, r_o=10)
         for d in (8, 64, 256):
             assert policy.select_mode(pol, d, 32) == Mode.EVD
+
+    def test_ns_exempt_from_tiny_override(self):
+        # NS's contract is a factorization-free heavy path; the EVD
+        # override would smuggle an eigh back in at tiny d
+        pol = _pol(variant="nskfac", r=32, r_o=10)
+        assert policy.select_mode(pol, 42, 64) == Mode.NS
 
 
 def test_unknown_variant_raises():
