@@ -75,6 +75,7 @@ BENCHES = {
 }
 
 _FALSE_MARK = re.compile(r"\b\w+=False\b")
+_ASYNC_MISS = re.compile(r"\basync_missed=(\d+)\b")
 
 
 def measure_calibration(reps: int = 5) -> float:
@@ -148,6 +149,30 @@ def parity_failures(rows: Dict[str, dict], label: str) -> List[str]:
     return out
 
 
+def async_health_failures(base: Dict[str, dict], fresh: Dict[str, dict],
+                          label: str) -> List[str]:
+    """A silently-degraded overlap runner still produces correct numbers
+    (missed landings fall back to in-graph recompute), so timing and
+    parity gates can both stay green while the pipeline rots.  Gate on
+    the recorded health counters instead: a fresh row's async miss count
+    may not exceed its baseline's (0 for a healthy pipeline)."""
+    out = []
+    for name, row in fresh.items():
+        m = _ASYNC_MISS.search(str(row.get("derived", "")))
+        if m is None:
+            continue
+        missed = int(m.group(1))
+        base_m = _ASYNC_MISS.search(
+            str(base.get(name, {}).get("derived", "")))
+        allowed = int(base_m.group(1)) if base_m else 0
+        if missed > allowed:
+            out.append(f"{label}: {name} async pipeline degraded — "
+                       f"{missed} missed landing(s) vs {allowed} in "
+                       f"baseline (overlap silently falling back to "
+                       f"in-graph recompute)")
+    return out
+
+
 def merge_min(a: Dict[str, dict], b: Dict[str, dict],
               track_noise: bool = False) -> Dict[str, dict]:
     """Per-row minimum of the timing stats across two runs (noise-floor
@@ -207,6 +232,7 @@ def compare(base: Dict[str, dict], fresh: Dict[str, dict],
             ) -> Tuple[List[str], List[str]]:
     """→ (failures, report lines)."""
     failures = list(parity_failures(fresh, label))
+    failures.extend(async_health_failures(base, fresh, label))
     common = []
     for name in base:
         if name not in fresh:

@@ -334,19 +334,20 @@ def ns_inversion_rows(XsA, n_steps, by_name) -> List[dict]:
     # shipped heavy path at default K=8, timed
     spec8 = KFactorSpec(d=D, r=R_TRUNC, n_stat=NBS, mode=Mode.NS, rho=RHO)
     st0 = kfactor.KFactorState(U=jnp.zeros((D, D)), D=jnp.zeros((D,)),
-                               M=M_exact)
+                               M=M_exact,
+                               aux=jnp.zeros((kfactor.AUX_WIDTH,)))
     fn = jax.jit(lambda s: kfactor.ns_overwrite(spec8, s))
     out = jax.block_until_ready(fn(st0))          # compile + warm
     t0 = time.perf_counter()
     out = jax.block_until_ready(fn(st0))
     dt = time.perf_counter() - t0
-    lam8 = float(out.D[0])
+    lam8 = float(out.aux[kfactor.AUX_LAM])
     want8 = jnp.linalg.inv(Msym + lam8 * jnp.eye(D))
     err8 = float(jnp.linalg.norm(out.U - want8) / jnp.linalg.norm(want8))
     rows.append({"name": "error_metrics/ns_overwrite_K8",
                  "us_per_call": dt * 1e6,
                  "derived": f"inv_err={err8:.3e} "
-                            f"resF={float(out.D[1]):.3e}"})
+                            f"resF={float(out.aux[kfactor.AUX_RES]):.3e}"})
 
     # acceptance: NS at K ≤ 8 is within 2x of the EVD baseline's
     # delivered inverse — in practice orders of magnitude below it

@@ -190,6 +190,7 @@ def run(quick: bool = False) -> List[dict]:
     rows.extend(run_sharded(taps, params, grads, acts, pgs, N, quick))
     rows.extend(run_staggered(taps, params, grads, acts, pgs, N, quick))
     rows.extend(run_async(taps, params, grads, acts, pgs, N, quick))
+    rows.extend(run_telemetry(taps, params, grads, acts, pgs, N, quick))
     return rows
 
 
@@ -464,10 +465,17 @@ def run_async(taps, params, grads, acts, pgs, N, quick) -> List[dict]:
                 if r["runner"]:
                     r["runner"].launch(r["st"], w)
                 r["prof"][k % T].append(time.perf_counter() - t0)
-    if runs["async"]["runner"]:
-        runs["async"]["runner"].close()
+    runner = runs["async"]["runner"]
+    health = dict(runner.health) if runner else {}
+    if runner:
+        runner.close()
     sync = [min(s) for s in runs["sync"]["prof"]]
     asy = [min(s) for s in runs["async"]["prof"]]
+    # pipeline-health accounting: a missed landing silently falls back to
+    # in-graph recompute — same numbers, none of the overlap win — so the
+    # regression gate treats a risen miss count (or overlap_healthy=False)
+    # as a failure even when the timing still looks fine
+    missed = int(health.get("missed", 0))
     return [{
         "name": "step/async_vs_sync",
         "us_per_call": float(np.percentile(asy, 50) * 1e6),
@@ -479,7 +487,67 @@ def run_async(taps, params, grads, acts, pgs, N, quick) -> List[dict]:
                    f"{np.percentile(asy, 99) / np.percentile(sync, 99):.2f} "
                    f"landed_slots_per_cycle={land_slots} "
                    f"(equal heavy cadence) lag0_allclose=True "
+                   f"async_launched={int(health.get('launched', 0))} "
+                   f"async_landed={int(health.get('landed', 0))} "
+                   f"async_missed={missed} "
+                   f"overlap_healthy={missed == 0} "
                    f"offload={'spare device' if len(jax.devices()) > 1 else 'in-thread'}",
+    }]
+
+
+def run_telemetry(taps, params, grads, acts, pgs, N, quick) -> List[dict]:
+    """Telemetry overhead at default cadence: the in-graph Meter
+    (collector + buffer merge + lax.cond'ed io_callback flush) wrapped
+    around the light-path ``Kfac.update`` vs the same step bare.  The
+    gated claim is ``telemetry_inert=True`` — the instrumented step's
+    update must be *bit-identical* to the bare one (metrics only read
+    hot-path values); the overhead percentage is recorded for the
+    artifact but not claimed (shared-CPU timing of a ~0 cost is noise).
+    """
+    from repro.obs import metrics as obs_metrics
+
+    opt = _opt(taps, bucketed=True, quick=quick, variant="bkfac")
+    work = opt.uniform_work(True, True, False)
+    meter = obs_metrics.Meter(obs_metrics.catalog_for(opt),
+                              lambda *a: None, every=10)
+    rng = jax.random.PRNGKey(11)
+
+    def step_off(grads, state, rng, work):
+        return opt.update(grads, state, params, acts=acts, probe_grads=pgs,
+                          n_tokens=N, rng=rng, work=work)
+
+    def step_on(grads, state, rng, work, mbuf):
+        with meter.collecting() as col:
+            upd, st = opt.update(grads, state, params, acts=acts,
+                                 probe_grads=pgs, n_tokens=N, rng=rng,
+                                 work=work)
+        return upd, st, meter.maybe_flush(meter.merge(mbuf, col), st.step)
+
+    step_off = jax.jit(step_off, static_argnames=("work",))
+    step_on = jax.jit(step_on, static_argnames=("work",))
+    st = opt.init(params)
+    _, st = step_off(grads, st, rng, work)      # warm state past init
+    mbuf = meter.init()
+    upd_off, _ = step_off(grads, st, rng, work)
+    upd_on, _, _ = step_on(grads, st, rng, work, mbuf)
+    inert = all(
+        np.array_equal(np.asarray(upd_on[name]["w"]),
+                       np.asarray(upd_off[name]["w"]))
+        for name in taps)
+    son, soff = _timeit_pair(
+        lambda: step_on(grads, st, rng, work, mbuf)[0],
+        lambda: step_off(grads, st, rng, work)[0])
+    t_on, t_off = float(np.min(son)), float(np.min(soff))
+    return [{
+        "name": "step/telemetry_on_vs_off",
+        "us_per_call": t_on * 1e6,
+        **_pcts(son),
+        "derived": f"off_us={t_off * 1e6:.1f} "
+                   f"off_p99_us={np.percentile(soff, 99) * 1e6:.1f} "
+                   f"overhead_pct={(t_on / t_off - 1.0) * 100:.1f} "
+                   f"metrics_every={meter.every} "
+                   f"catalog_size={len(meter.catalog)} "
+                   f"telemetry_inert={bool(inert)}",
     }]
 
 

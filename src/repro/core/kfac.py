@@ -42,6 +42,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import buckets, kfactor, policy, precond, schedule
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.optim import adamw as _adamw
 from repro.optim import base as optbase
 
@@ -351,7 +353,7 @@ class Kfac:
     def _bucketed_factor_work(self, factors, inflight, acts, probe_grads,
                               n_tokens, rng, first,
                               work: schedule.StepWork,
-                              bucket_step=None, landing=None):
+                              bucket_step=None, landing=None, phi=None):
         """Factor updates as one batched launch group per shape-class
         bucket: stats absorbs (EA SYRK), Brand panels + CholeskyQR2, and
         the scheduled heavy slot ranges each run over the bucket's flat
@@ -367,8 +369,11 @@ class Kfac:
         path can never diverge from the replicated one structurally.
 
         ``landing`` optionally maps bucket idx (str) → tuple of
-        pre-computed (U, D) pairs, one per land range, from an
-        overlapped dispatch (train.loop.AsyncInverseRunner)."""
+        pre-computed (U, D, aux) triples, one per land range, from an
+        overlapped dispatch (train.loop.AsyncInverseRunner).  ``phi``
+        (the step's damping ratio) only feeds telemetry — the
+        inversion-error proxy needs the same λ the preconditioner will
+        derive."""
         if bucket_step is None:
             def bucket_step(bi, bucket, st, X, keys, buf, landed):
                 launch, land = self._work_ranges(work, bi)
@@ -392,11 +397,70 @@ class Kfac:
             keys = jax.random.split(bkey, bucket.total)
             buf = inflight.get(str(bi))
             landed = None if landing is None else landing.get(str(bi))
-            st, buf = bucket_step(bi, bucket, st, X, keys, buf, landed)
+            with obs_trace.span(f"kfac/factor/b{bi}_"
+                                f"{bucket.spec.mode.value}"):
+                st, buf = bucket_step(bi, bucket, st, X, keys, buf, landed)
             if buf is not None:
                 inflight[str(bi)] = buf
+            self._record_bucket_metrics(bi, bucket, st, work, land, phi)
             states.update(buckets.scatter_states(bucket.entries, st))
         return self.repack_factors(states), inflight
+
+    # -- telemetry (repro.obs) ----------------------------------------------
+    def _record_bucket_metrics(self, bi, bucket, st, work, land, phi):
+        """Per-bucket metrics off the post-step state — for the sharded
+        engine this is the post-all-gather state at the outer trace
+        level, so nothing here ever records from inside shard_map.
+        Every record is a no-op without an active collector, and the
+        derived metrics below only *enter the graph* when one is active
+        (the metrics-off step stays the exact un-instrumented graph)."""
+        if not obs_metrics.active():
+            return
+        spec = bucket.spec
+        fired = (sum(hi - lo for lo, hi in work.heavy[bi])
+                 + sum(hi - lo for lo, hi in land))
+        obs_metrics.record(f"bucket{bi}/heavy_slots", float(fired))
+        if bi in self._async_buckets:
+            obs_metrics.record(f"bucket{bi}/replay_depth",
+                               float(self._async_buckets[bi]))
+        if not fired:
+            return
+        if spec.mode is kfactor.Mode.NS:
+            obs_metrics.record(f"bucket{bi}/ns_lam",
+                               jnp.mean(st.aux[..., kfactor.AUX_LAM]))
+            obs_metrics.record(f"bucket{bi}/ns_res",
+                               jnp.max(st.aux[..., kfactor.AUX_RES]))
+        if spec.mode in (kfactor.Mode.EVD, kfactor.Mode.RSVD,
+                         kfactor.Mode.BRAND_RSVD):
+            obs_metrics.record(f"bucket{bi}/trunc_mass",
+                               jnp.max(st.aux[..., kfactor.AUX_TRUNC]))
+        if spec.needs_m and phi is not None:
+            obs_metrics.record(f"bucket{bi}/inv_err",
+                               self._inv_error_proxy(spec, st, phi))
+
+    def _inv_error_proxy(self, spec, st, phi):
+        """Streaming inversion-error proxy: worst-slot
+        ‖((M + λI) X − I)[rows]‖_F / √k over k ≤ 8 strided rows, where
+        X is the held inverse representation and λ is exactly the
+        damping the preconditioner derives (NS: the baked-in λ̂ from
+        aux; low-rank: φ·max D plus the §3.5 continuation shift).
+        O(k·d·w) per bucket and only computed on heavy-firing steps of
+        an instrumented run — never on the metrics-off path."""
+        d = spec.d
+        k = min(8, d)
+        idx = jnp.arange(k) * max(1, d // k)
+        Mrows = jnp.take(st.M, idx, axis=-2)                 # (B, k, d)
+        ek = jnp.eye(d, dtype=Mrows.dtype)[idx]              # (k, d)
+        if spec.mode is kfactor.Mode.NS:
+            lam = st.aux[..., kfactor.AUX_LAM]
+            Y = (Mrows + lam[..., None, None] * ek) @ st.U
+        else:
+            D, lam = precond._damped(st.D, phi,
+                                     self.cfg.spectrum_continuation)
+            Y = precond.apply_inv_right(
+                Mrows + lam[..., None, None] * ek, st.U, D, lam)
+        R = Y - ek
+        return jnp.max(jnp.sqrt(jnp.sum(R * R, axis=(-2, -1)) / k))
 
     def _bucketed_precondition(self, factors, grads, acts, probe_grads,
                                phi):
@@ -415,7 +479,7 @@ class Kfac:
         cont = self.cfg.spectrum_continuation
         use_k = self.cfg.use_kernels
         out = {}
-        for bucket in self.precond_buckets:
+        for pbi, bucket in enumerate(self.precond_buckets):
             ent = bucket.entries
             # role swap: the positional "g" slot below carries the A factor
             # (and vice versa), so the NS dense flags swap with it
@@ -430,28 +494,31 @@ class Kfac:
                                        for e in ent})
             D_a = buckets.gather(ent, {key(e): factors[e.name].A.D
                                        for e in ent})
-            if bucket.linear_apply:
-                # Alg 8 with roles swapped:  S = (Ā⁻¹ A)(Gᵀ Γ̄⁻¹) — the
-                # raw (…, n, d) factors concatenate contiguously and the
-                # single post-gather transpose fuses into the matmul.
-                gfac = jnp.swapaxes(buckets.gather(ent, {
-                    key(e): probe_grads[e.name] for e in ent}),
-                    -1, -2).astype(jnp.float32)      # (B, d_out, n)
-                afac = jnp.swapaxes(buckets.gather(ent, {
-                    key(e): acts[e.name] for e in ent}),
-                    -1, -2).astype(jnp.float32)      # (B, d_in, n)
-                S = precond.precondition_linear_with_damping(
-                    afac, gfac, U_a, D_a, U_g, D_g, phi,
-                    continuation=cont, use_kernel=use_k,
-                    dense_g=dense_swap_g, dense_a=dense_swap_a)
-            else:
-                J = buckets.gather(ent, {
-                    key(e): get_path(grads, self.taps[e.name].param_path)
-                    for e in ent}).astype(jnp.float32)  # (B, d_in, d_out)
-                S = precond.precondition_with_damping(
-                    J, U_a, D_a, U_g, D_g, phi,
-                    continuation=cont, use_kernel=use_k,
-                    dense_g=dense_swap_g, dense_a=dense_swap_a)
+            with obs_trace.span(f"kfac/precond/b{pbi}"):
+                if bucket.linear_apply:
+                    # Alg 8 with roles swapped:  S = (Ā⁻¹ A)(Gᵀ Γ̄⁻¹) —
+                    # the raw (…, n, d) factors concatenate contiguously
+                    # and the single post-gather transpose fuses into
+                    # the matmul.
+                    gfac = jnp.swapaxes(buckets.gather(ent, {
+                        key(e): probe_grads[e.name] for e in ent}),
+                        -1, -2).astype(jnp.float32)      # (B, d_out, n)
+                    afac = jnp.swapaxes(buckets.gather(ent, {
+                        key(e): acts[e.name] for e in ent}),
+                        -1, -2).astype(jnp.float32)      # (B, d_in, n)
+                    S = precond.precondition_linear_with_damping(
+                        afac, gfac, U_a, D_a, U_g, D_g, phi,
+                        continuation=cont, use_kernel=use_k,
+                        dense_g=dense_swap_g, dense_a=dense_swap_a)
+                else:
+                    J = buckets.gather(ent, {
+                        key(e): get_path(grads,
+                                         self.taps[e.name].param_path)
+                        for e in ent}).astype(jnp.float32)
+                    S = precond.precondition_with_damping(
+                        J, U_a, D_a, U_g, D_g, phi,
+                        continuation=cont, use_kernel=use_k,
+                        dense_g=dense_swap_g, dense_a=dense_swap_a)
             out.update({name: Se for (name, _), Se
                         in buckets.scatter(ent, S).items()})
         return out
@@ -466,8 +533,8 @@ class Kfac:
         mask (jit with ``static_argnames=("work",)``); the legacy three
         python bools are accepted as a shim and converted to the
         equivalent uniform (spiky) mask.  ``landing`` optionally carries
-        pre-computed heavy results (bucket idx str → ((U, D), …) per
-        land range) from an overlapped dispatch; absent, landings
+        pre-computed heavy results (bucket idx str → ((U, D, aux), …)
+        per land range) from an overlapped dispatch; absent, landings
         compute in-graph from the in-flight snapshot."""
         cfg = self.cfg
         if work is None:
@@ -476,6 +543,17 @@ class Kfac:
         first = state.n_stats == 0
         phi = cfg.damping_phi(state.step)
         lr = cfg.lr(state.step)
+        if obs_metrics.active():
+            slots = lambda t: float(sum(hi - lo for r in t
+                                        for lo, hi in r))
+            obs_metrics.record("work/stats_fired",
+                               1.0 if work.stats else 0.0)
+            obs_metrics.record("work/light_fired",
+                               1.0 if work.light else 0.0)
+            obs_metrics.record("work/heavy_slots", slots(work.heavy))
+            obs_metrics.record("work/launch_slots", slots(work.launch))
+            obs_metrics.record("work/land_slots", slots(work.land))
+            obs_metrics.record("precond/damping_phi", phi)
 
         # 1) factor updates -------------------------------------------------
         factors = dict(state.factors)
@@ -483,11 +561,11 @@ class Kfac:
         if work.any and self.curvature is not None and cfg.bucketed:
             factors, inflight = self.curvature.factor_work(
                 self, factors, inflight, acts, probe_grads, n_tokens, rng,
-                first, work, landing=landing)
+                first, work, landing=landing, phi=phi)
         elif work.any and cfg.bucketed:
             factors, inflight = self._bucketed_factor_work(
                 factors, inflight, acts, probe_grads, n_tokens, rng,
-                first, work, landing=landing)
+                first, work, landing=landing, phi=phi)
         elif work.any:
             if work.any_async:
                 raise ValueError("async launch/land masks require the "

@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import brand, rsvd
+from repro.obs import trace as obs_trace
 
 Array = jax.Array
 
@@ -52,17 +53,34 @@ _NEEDS_M = {Mode.EVD, Mode.RSVD, Mode.BRAND_RSVD, Mode.BRAND_CORR, Mode.NS}
 _HAS_BRAND = {Mode.BRAND, Mode.BRAND_RSVD, Mode.BRAND_CORR}
 
 
+#: Channels of :attr:`KFactorState.aux` — per-slot heavy-op diagnostics.
+#: Purely observational: nothing in the optimizer math ever reads them
+#: (NS bakes λ̂ into U; the low-rank apply derives λ from D), so zeroing
+#: aux changes no update.  They exist so telemetry (repro.obs) and tests
+#: can watch inverse health without smuggling scalars through D.
+AUX_LAM = 0     # NS: λ̂ = ns_phi·λ_max(M) used at the last refresh
+AUX_RES = 1     # NS: final Frobenius residual ‖I − M̂X‖_F (≥ _NS_RES_MAX
+                # flags that the dense-solve fallback fired)
+AUX_TRUNC = 2   # EVD/RSVD overwrites: truncated spectral-mass fraction
+                # max(0, tr M − Σ retained D) / tr M
+AUX_WIDTH = 3
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class KFactorState:
     """Inverse representation of one EA K-factor.
 
-    U: (d, width) column-orthonormal basis; D: (width,) descending eigvals.
+    U: (d, width) column-orthonormal basis; D: (width,) descending eigvals
+    (NS: U is the dense damped inverse and D is all-zero).
     M: (d, d) dense EA factor or a (1, 1) placeholder for pure-Brand.
+    aux: (AUX_WIDTH,) heavy-op diagnostics (see the AUX_* channels above);
+    never read by the update math.
     """
     U: Array
     D: Array
     M: Array
+    aux: Array
 
 
 def make_state(d: int, width: int, needs_m: bool, dtype=jnp.float32
@@ -72,6 +90,7 @@ def make_state(d: int, width: int, needs_m: bool, dtype=jnp.float32
         U=jnp.zeros((d, width), dtype),
         D=jnp.zeros((width,), dtype),
         M=jnp.zeros(m_shape, dtype),
+        aux=jnp.zeros((AUX_WIDTH,), dtype),
     )
 
 
@@ -140,16 +159,26 @@ def brand_step(spec: KFactorSpec, st: KFactorState, X: Array, first: Array,
     factor directly (exact, low-memory)."""
     def _init(_):
         U0, D0 = brand.init_from_factor(X, spec.width)
-        return KFactorState(U=U0, D=D0, M=st.M)
+        return KFactorState(U=U0, D=D0, M=st.M, aux=st.aux)
 
     def _update(_):
         U, D = brand.ea_brand_step(st.U, st.D, X, spec.rho, spec.r,
                                    use_kernel=use_kernel)
         if U.shape[-1] > spec.width:  # r + n_stat exceeded d: re-truncate
             U, D = U[..., :, :spec.width], D[..., :spec.width]
-        return KFactorState(U=U, D=D, M=st.M)
+        return KFactorState(U=U, D=D, M=st.M, aux=st.aux)
 
     return jax.lax.cond(first, _init, _update, operand=None)
+
+
+def _trunc_mass_aux(aux: Array, M: Array, D: Array) -> Array:
+    """AUX_TRUNC ← truncated spectral-mass fraction of an overwrite:
+    max(0, tr M − Σ retained D) / tr M — the paper's accuracy knob (rank
+    truncation) made observable.  Diagnostic only; never read back."""
+    tr = jnp.trace(M, axis1=-2, axis2=-1)
+    kept = jnp.sum(D, axis=-1)
+    frac = jnp.maximum(tr - kept, 0.0) / jnp.maximum(tr, 1e-30)
+    return aux.at[..., AUX_TRUNC].set(frac.astype(aux.dtype))
 
 
 def rsvd_overwrite(spec: KFactorSpec, st: KFactorState, key: Array
@@ -158,13 +187,15 @@ def rsvd_overwrite(spec: KFactorSpec, st: KFactorState, key: Array
     (R-KFAC inverse update / B-R-KFAC overwrite)."""
     U, D = rsvd.rsvd_psd(st.M, spec.r, spec.r_o, key, spec.n_pwr_iter,
                          pad_to=spec.width)
-    return KFactorState(U=U, D=D, M=st.M)
+    return KFactorState(U=U, D=D, M=st.M,
+                        aux=_trunc_mass_aux(st.aux, st.M, D))
 
 
 def evd_overwrite(spec: KFactorSpec, st: KFactorState) -> KFactorState:
     """Dense EVD of the EA factor (K-FAC baseline inverse update)."""
     U, D = rsvd.exact_evd(st.M, r=spec.width, pad_to=spec.width)
-    return KFactorState(U=U, D=D, M=st.M)
+    return KFactorState(U=U, D=D, M=st.M,
+                        aux=_trunc_mass_aux(st.aux, st.M, D))
 
 
 def light_correction(spec: KFactorSpec, st: KFactorState, key: Array
@@ -185,7 +216,7 @@ def light_correction(spec: KFactorSpec, st: KFactorState, key: Array
     vals, vecs = vals[::-1], vecs[:, ::-1]
     U_new = st.U.at[:, idx].set(Usub @ vecs)
     D_new = st.D.at[idx].set(vals)
-    return KFactorState(U=U_new, D=D_new, M=st.M)
+    return KFactorState(U=U_new, D=D_new, M=st.M, aux=st.aux)
 
 
 _NS_PWR_ITERS = 12   # power-iteration steps for the λ_max(M) prescale
@@ -261,9 +292,11 @@ def ns_overwrite(spec: KFactorSpec, st: KFactorState) -> KFactorState:
 
     Stacked-native over arbitrary leading axes; deterministic (key-free).
     The damping λ̂ is baked into the refreshed inverse — U is the inverse
-    of the *damped* factor, refreshed with the spec's own ns_phi — and
-    D carries metadata, not a spectrum: D[..., 0] = λ̂, D[..., 1] = final
-    residual (diagnostic; ≥ _NS_RES_MAX flags that the fallback fired).
+    of the *damped* factor, refreshed with the spec's own ns_phi — so D
+    is left all-zero (no spectrum to report) and the diagnostics go to
+    their first-class channels: aux[..., AUX_LAM] = λ̂ and
+    aux[..., AUX_RES] = the final Frobenius residual (≥ _NS_RES_MAX
+    flags that the fallback fired).
     """
     from repro.kernels import ops as kops
 
@@ -290,11 +323,11 @@ def ns_overwrite(spec: KFactorSpec, st: KFactorState) -> KFactorState:
         return jnp.where(bad[..., None, None], dense, x)
 
     X = jax.lax.cond(jnp.any(bad), _fallback, lambda x: x, X)
-    D = jnp.zeros(st.D.shape, st.D.dtype)
-    D = D.at[..., 0].set(lam.astype(st.D.dtype))
-    if d > 1:
-        D = D.at[..., 1].set(res.astype(st.D.dtype))
-    return KFactorState(U=X.astype(st.U.dtype), D=D, M=st.M)
+    aux = st.aux.at[..., AUX_LAM].set(lam.astype(st.aux.dtype))
+    aux = aux.at[..., AUX_RES].set(res.astype(st.aux.dtype))
+    return KFactorState(U=X.astype(st.U.dtype),
+                        D=jnp.zeros(st.D.shape, st.D.dtype), M=st.M,
+                        aux=aux)
 
 
 # ---------------------------------------------------------------------------
@@ -335,7 +368,7 @@ def stats_step(spec: KFactorSpec, st: KFactorState, X: Array, first: Array
     whole stack of factors is one batched kernel launch."""
     if spec.needs_m:
         M = ea_update_m_kernel(st.M, X, spec.rho, first)
-        return KFactorState(U=st.U, D=st.D, M=M)
+        return KFactorState(U=st.U, D=st.D, M=M, aux=st.aux)
     return st
 
 
@@ -461,14 +494,18 @@ def launch_snapshot(buf: InflightState, st: KFactorState, keys: Array,
 
 
 def heavy_from_snapshot(spec: KFactorSpec, buf: InflightState,
-                        lo: int, hi: int) -> Tuple[Array, Array]:
+                        lo: int, hi: int) -> Tuple[Array, Array, Array]:
     """The heavy overwrite, computed from the snapshot of slots [lo, hi)
     — a pure function of the buffer, so it can equally run in-graph at
     the land step or as a separately-dispatched program launched right
-    after the snapshot (train.loop.AsyncInverseRunner)."""
-    snap = KFactorState(U=buf.U[lo:hi], D=buf.D[lo:hi], M=buf.M[lo:hi])
+    after the snapshot (train.loop.AsyncInverseRunner).  Returns the
+    landed (U, D, aux) triple; the snapshot's aux is synthesized as
+    zeros — no heavy op reads it (it is write-only diagnostics), so the
+    in-flight buffer does not carry an aux leaf."""
+    snap = KFactorState(U=buf.U[lo:hi], D=buf.D[lo:hi], M=buf.M[lo:hi],
+                        aux=jnp.zeros((hi - lo, AUX_WIDTH), buf.D.dtype))
     out = heavy_overwrite_batched(spec, snap, buf.keys[lo:hi])
-    return out.U, out.D
+    return out.U, out.D, out.aux
 
 
 def replay_panels(spec: KFactorSpec, U: Array, D: Array, panels: Array,
@@ -488,24 +525,27 @@ def land_swap(spec: KFactorSpec, st: KFactorState, buf: InflightState,
               lo: int, hi: int, use_kernel: bool = False,
               landed=None) -> Tuple[KFactorState, InflightState]:
     """Swap the landed inverse rep of slots [lo, hi) into the live state
-    atomically.  ``landed`` is an optionally pre-computed (U, D) pair
-    from an overlapped dispatch; when absent the heavy op runs in-graph
-    from the snapshot (same function, same operands, same result).
+    atomically.  ``landed`` is an optionally pre-computed (U, D, aux)
+    triple from an overlapped dispatch; when absent the heavy op runs
+    in-graph from the snapshot (same function, same operands, same
+    result).
 
     Only slots whose snapshot is ``live`` swap (and the flag is consumed
     here): a dropped or never-fired launch turns its landing into a
     per-slot no-op rather than installing a zero / stale snapshot."""
     if landed is None:
-        U, D = heavy_from_snapshot(spec, buf, lo, hi)
+        U, D, aux = heavy_from_snapshot(spec, buf, lo, hi)
     else:
-        U, D = landed
+        U, D, aux = landed
     if spec.mode in _HAS_BRAND:
         U, D = replay_panels(spec, U, D, buf.panels[lo:hi], use_kernel)
     ok = buf.live[lo:hi]
     U = jnp.where(ok[:, None, None], U, st.U[lo:hi])
     D = jnp.where(ok[:, None], D, st.D[lo:hi])
+    aux = jnp.where(ok[:, None], aux, st.aux[lo:hi])
     st = KFactorState(U=st.U.at[lo:hi].set(U),
-                      D=st.D.at[lo:hi].set(D), M=st.M)
+                      D=st.D.at[lo:hi].set(D), M=st.M,
+                      aux=st.aux.at[lo:hi].set(aux))
     buf = dataclasses.replace(buf, live=buf.live.at[lo:hi].set(False))
     return st, buf
 
@@ -528,15 +568,18 @@ def bucket_factor_step(spec: KFactorSpec, st: KFactorState, X: Array,
     multiples of T_brand so staggering never adds extra Brand firings).
     """
     if stats:
-        st = stats_step(spec, st, X, first)
+        with obs_trace.span("stats"):
+            st = stats_step(spec, st, X, first)
     heavy_ranges = tuple(heavy_ranges)
     if (light or heavy_ranges) and spec.mode in _HAS_BRAND:
-        st = brand_step(spec, st, X, first, use_kernel)
+        with obs_trace.span("light_brand"):
+            st = brand_step(spec, st, X, first, use_kernel)
     for lo, hi in heavy_ranges:
-        sub = jax.tree_util.tree_map(lambda x: x[lo:hi], st)
-        sub = heavy_overwrite_batched(spec, sub, keys[lo:hi])
-        st = jax.tree_util.tree_map(
-            lambda full, part: full.at[lo:hi].set(part), st, sub)
+        with obs_trace.span(f"heavy_{lo}_{hi}"):
+            sub = jax.tree_util.tree_map(lambda x: x[lo:hi], st)
+            sub = heavy_overwrite_batched(spec, sub, keys[lo:hi])
+            st = jax.tree_util.tree_map(
+                lambda full, part: full.at[lo:hi].set(part), st, sub)
     return st
 
 
@@ -571,10 +614,13 @@ def bucket_factor_step_async(spec: KFactorSpec, st: KFactorState, X: Array,
     if light:
         buf = record_panel(buf, X)
     for lo, hi in tuple(launch_ranges):
-        buf = launch_snapshot(buf, st, keys, lo, hi)
+        with obs_trace.span(f"launch_{lo}_{hi}"):
+            buf = launch_snapshot(buf, st, keys, lo, hi)
     for i, (lo, hi) in enumerate(tuple(land_ranges)):
-        st, buf = land_swap(spec, st, buf, lo, hi, use_kernel,
-                            landed=None if landed is None else landed[i])
+        with obs_trace.span(f"land_{lo}_{hi}"):
+            st, buf = land_swap(spec, st, buf, lo, hi, use_kernel,
+                                landed=None if landed is None
+                                else landed[i])
     return st, buf
 
 

@@ -114,6 +114,28 @@ class StepWork:
     def any(self) -> bool:
         return self.stats or self.light or self.any_heavy or self.any_async
 
+    @property
+    def label(self) -> str:
+        """One-word phase class for telemetry (step events group their
+        timing by it): the heaviest work class this step runs."""
+        if self.any_heavy or any(self.land):
+            return "heavy"
+        if any(self.launch):
+            return "launch"
+        if self.light:
+            return "light"
+        if self.stats:
+            return "stats"
+        return "idle"
+
+    def summary(self) -> Dict[str, int]:
+        """Flat JSON-able view of the mask (the ``sched`` event body)."""
+        slots = lambda t: sum(hi - lo for r in t for lo, hi in r)
+        return {"stats": int(self.stats), "light": int(self.light),
+                "heavy_slots": slots(self.heavy),
+                "launch_slots": slots(self.launch),
+                "land_slots": slots(self.land)}
+
     def entry_heavy(self, bucket_idx: int, offset: int, count: int) -> bool:
         """True iff any firing range overlaps slot range [offset,
         offset+count) — the per-tap (unbatched) path's heavy flag for one

@@ -129,7 +129,7 @@ class CurvatureEngine:
     # -- the sharded factor work -------------------------------------------
     def factor_work(self, opt, factors, inflight, acts, probe_grads,
                     n_tokens, rng, first, work: schedule.StepWork,
-                    landing=None):
+                    landing=None, phi=None):
         """Drop-in for ``Kfac._bucketed_factor_work``: same operands, same
         per-slot numerics, 1/N of the factor work per device.  The bucket
         loop (operand collection, no-op skip, gather/scatter, per-slot
@@ -159,7 +159,8 @@ class CurvatureEngine:
         return opt._bucketed_factor_work(factors, inflight, acts,
                                          probe_grads, n_tokens, rng,
                                          first, work,
-                                         bucket_step=bucket_step)
+                                         bucket_step=bucket_step,
+                                         phi=phi)
 
     def _bucket_step(self, spec, plan: ShardPlan, st: KFactorState,
                      X: Array, keys: Array, first: Array, stats: bool,
@@ -184,12 +185,13 @@ class CurvatureEngine:
                                                 use_kernel)
                 U = jax.lax.all_gather(st.U, axis, axis=0, tiled=True)
                 D = jax.lax.all_gather(st.D, axis, axis=0, tiled=True)
-                return KFactorState(U=U, D=D, M=st.M)
+                aux = jax.lax.all_gather(st.aux, axis, axis=0, tiled=True)
+                return KFactorState(U=U, D=D, M=st.M, aux=aux)
 
             out = shard_map(
                 body, mesh=self.mesh,
                 in_specs=(P(axis), P(axis), P(axis), P()),
-                out_specs=KFactorState(U=P(), D=P(), M=P(axis)),
+                out_specs=KFactorState(U=P(), D=P(), M=P(axis), aux=P()),
                 check_rep=False,
             )(st, X, keys, first)
             # U/D came back gathered in device-major layout; M sharded in
@@ -206,12 +208,14 @@ class CurvatureEngine:
                 local_launch, local_land, buf, use_kernel)
             U = jax.lax.all_gather(st.U, axis, axis=0, tiled=True)
             D = jax.lax.all_gather(st.D, axis, axis=0, tiled=True)
-            return KFactorState(U=U, D=D, M=st.M), buf
+            aux = jax.lax.all_gather(st.aux, axis, axis=0, tiled=True)
+            return KFactorState(U=U, D=D, M=st.M, aux=aux), buf
 
         out, buf = shard_map(
             body, mesh=self.mesh,
             in_specs=(P(axis), P(axis), P(axis), P(), buf_spec),
-            out_specs=(KFactorState(U=P(), D=P(), M=P(axis)), buf_spec),
+            out_specs=(KFactorState(U=P(), D=P(), M=P(axis), aux=P()),
+                       buf_spec),
             check_rep=False,
         )(st, X, keys, first, buf)
         return plan.unshard(out), plan.unshard(buf)

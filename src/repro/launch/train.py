@@ -14,6 +14,7 @@ from __future__ import annotations
 import argparse
 import contextlib
 import dataclasses
+import os
 import time
 
 import jax
@@ -30,6 +31,9 @@ from repro.launch import steps as steps_lib
 from repro.launch.mesh import make_production_mesh, make_mesh
 from repro.models import layers
 from repro.models.lm import LM
+from repro.obs import events as obs_events
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.optim import base as optbase
 from repro.train import checkpoint as ckpt
 from repro.train import loop as loop_lib
@@ -73,7 +77,31 @@ def main():
                     choices=("auto", "none"),
                     help="auto: shard factor work across the mesh's first "
                          "data axis (distributed curvature engine)")
+    ap.add_argument("--telemetry-dir", default="",
+                    help="write the structured JSONL event log to "
+                         "<dir>/events.jsonl (repro.obs; feed it to "
+                         "`python -m repro.obs.summary`)")
+    ap.add_argument("--metrics-every", type=int, default=10,
+                    help="in-graph curvature-metric flush cadence in "
+                         "steps (needs --telemetry-dir; 0 disables)")
+    ap.add_argument("--profile-dir", default="",
+                    help="capture a jax.profiler trace of a short step "
+                         "window into this directory")
+    ap.add_argument("--profile-steps", type=int, default=3,
+                    help="steps in the --profile-dir trace window")
     args = ap.parse_args()
+
+    jsonl = (os.path.join(args.telemetry_dir, "events.jsonl")
+             if args.telemetry_dir else None)
+    if jsonl is not None:
+        os.makedirs(args.telemetry_dir, exist_ok=True)
+    writer = obs_events.TelemetryWriter(path=jsonl, console=True)
+    writer.emit("run_start", config={
+        "arch": args.arch, "variant": args.variant, "steps": args.steps,
+        "batch": args.batch, "seq": args.seq, "mesh": args.mesh,
+        "reduced": args.reduced, "stagger": args.stagger,
+        "async_heavy": args.async_heavy, "heavy_lag": args.heavy_lag,
+        "metrics_every": args.metrics_every})
 
     arch = get_arch(args.arch)
     if args.reduced:
@@ -114,17 +142,18 @@ def main():
         from repro.distributed import curvature as curvature_lib
         eng = curvature_lib.CurvatureEngine.for_kfac(opt, mesh, curv_axis)
         rep, dev = eng.job_counts()
-        print(f"[train] curvature sharded on '{curv_axis}': "
-              f"{rep} factor slots replicated -> {dev}/device "
-              f"({eng.describe()})")
+        writer.log(f"curvature sharded on '{curv_axis}': "
+                   f"{rep} factor slots replicated -> {dev}/device "
+                   f"({eng.describe()})")
     sched = opt.scheduler()
     if args.stagger or args.async_heavy:
-        print(f"[train] heavy-work scheduler: {sched.describe()}")
-    runner = (loop_lib.AsyncInverseRunner.for_opt(opt)
+        writer.emit("sched",
+                    detail=f"heavy-work scheduler: {sched.describe()}")
+    runner = (loop_lib.AsyncInverseRunner.for_opt(opt, writer=writer)
               if args.async_heavy else None)
     if runner is not None:
-        print(f"[train] async heavy pipeline: lag={kcfg.heavy_lag} "
-              f"offload={'spare device' if runner.device else 'in-thread'}")
+        writer.log(f"async heavy pipeline: lag={kcfg.heavy_lag} offload="
+                   f"{'spare device' if runner.device else 'in-thread'}")
 
     n_tokens = args.batch * args.seq
     stream = TokenStream(vocab=arch.vocab, batch=args.batch,
@@ -146,8 +175,16 @@ def main():
     def loss_with_compress(p, probes, batch):
         return lm.loss_fn(p, probes, batch)
 
+    meter = None
+    if args.metrics_every > 0 and jsonl is not None:
+        catalog = obs_metrics.catalog_for(opt)
+        meter = obs_metrics.Meter(
+            catalog, writer.metrics_sink({s.name: s.kind
+                                          for s in catalog}),
+            every=args.metrics_every)
     step_fn = jax.jit(loop_lib.make_scheduled_kfac_step(loss_with_compress,
-                                                        opt, n_tokens),
+                                                        opt, n_tokens,
+                                                        meter=meter),
                       static_argnames=("work",))
 
     checkpointer = (ckpt.AsyncCheckpointer(args.ckpt_dir, keep=3)
@@ -155,10 +192,13 @@ def main():
     start = ckpt.latest_step(args.ckpt_dir) if args.ckpt_dir else None
     if start is not None:
         state, _ = ckpt.restore(args.ckpt_dir, state)
-        print(f"[train] resumed at step {start}")
+        writer.emit("ckpt_restore", step=start, path=args.ckpt_dir)
     k0 = 0 if start is None else start + 1
 
     det = strag_lib.StragglerDetector()
+    profiler = obs_trace.StepProfiler(args.profile_dir or None,
+                                      first=k0 + 1,
+                                      steps=args.profile_steps)
     t_start = time.time()
     losses = []
     # the model's internal with_sharding_constraint calls need the mesh
@@ -166,19 +206,26 @@ def main():
     ctx = mesh if mesh is not None else contextlib.nullcontext()
     with ctx:
         run_steps(args, sched, det, stream, step_fn, state,
-                  checkpointer, k0, t_start, losses, runner=runner)
+                  checkpointer, k0, t_start, losses, runner=runner,
+                  writer=writer, meter=meter, profiler=profiler)
+    profiler.close()
     if runner is not None:
         runner.close()
     if checkpointer is not None:
         checkpointer.close()
-    print(f"[train] done: loss {losses[0]:.4f} -> "
-          f"{float(np.mean(losses[-3:])):.4f} "
-          f"({(time.time()-t_start)/max(len(losses),1):.2f}s/step)")
+    writer.emit("run_end", steps=len(losses), loss_first=losses[0],
+                loss_last=float(np.mean(losses[-3:])),
+                s_per_step=(time.time() - t_start) / max(len(losses), 1))
+    writer.close()
 
 
 def run_steps(args, sched, det, stream, step_fn, state, checkpointer,
-              k0, t_start, losses, runner=None):
+              k0, t_start, losses, runner=None, writer=None, meter=None,
+              profiler=None):
+    mbuf = meter.init() if meter is not None else None
+    last_k = k0
     for k in range(k0, args.steps):
+        last_k = k
         t0 = time.time()
         work = sched.work(k)
         actions = det.observe_step(k, {"host0": time.time() - t0 + 1e-6})
@@ -186,16 +233,27 @@ def run_steps(args, sched, det, stream, step_fn, state, checkpointer,
                                                    strag_lib.Action.NONE),
                                        work)
         batch = stream.batch_at(k)
-        landing = runner.landing(work) if runner is not None else None
-        state, loss = step_fn(state, batch, work, landing)
+        landing = (runner.landing(work, step=k)
+                   if runner is not None else None)
+        if profiler is not None:
+            profiler.tick(k)
+        if meter is None:
+            state, loss = step_fn(state, batch, work, landing)
+        else:
+            state, loss, mbuf = step_fn(state, batch, work, landing, mbuf)
         if runner is not None:
-            runner.launch(state.opt, work)
+            runner.launch(state.opt, work, step=k)
         losses.append(float(loss))
         if checkpointer is not None and k % args.ckpt_every == 0:
             checkpointer.submit(k, state)
-        if k % 5 == 0:
-            print(f"[train] step {k:5d} loss {float(loss):8.4f} "
-                  f"({time.time()-t_start:.0f}s)", flush=True)
+            if writer is not None:
+                writer.emit("ckpt_save", step=k, path=args.ckpt_dir)
+        if writer is not None:
+            writer.emit("step", step=k, loss=float(loss),
+                        dt_s=time.time() - t0, phase=work.label)
+    if meter is not None:
+        meter.drain(mbuf, last_k)
+    return state
 
 
 if __name__ == "__main__":

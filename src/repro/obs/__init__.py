@@ -1,0 +1,26 @@
+"""Telemetry for the K-FAC hot path: jit-safe metrics, structured JSONL
+events, and profiler tracing hooks.
+
+Three layers, strictly observational (numerics-inert by construction —
+asserted in tests/test_obs.py):
+
+  * :mod:`repro.obs.metrics` — an in-graph :class:`~repro.obs.metrics.Meter`
+    over a closed per-optimizer metric catalog.  The hot path calls
+    ``metrics.record(name, value)``; outside an active collector that is
+    a no-op, so un-instrumented runs trace byte-identical graphs.  The
+    accumulated buffer is flushed to host via ``jax.experimental.io_callback``
+    at a configurable cadence — steady-state steps add no host sync.
+  * :mod:`repro.obs.events` — :class:`~repro.obs.events.TelemetryWriter`,
+    schema-versioned JSONL events with a human-readable console sink
+    (the structured replacement for the trainer's bare ``print``\\ s).
+  * :mod:`repro.obs.trace` — ``jax.named_scope`` / profiler annotations
+    around the bucketed factor/precondition launches and the async
+    runner's worker thread, plus a step-ranged profile capturer.
+
+``python -m repro.obs.summary run/telemetry.jsonl`` renders a run's
+event log into a per-phase timing + curvature-health report.
+"""
+from repro.obs.events import (SCHEMA_VERSION, TelemetryWriter,  # noqa: F401
+                              read_events, validate_event)
+from repro.obs.metrics import Meter, active, record  # noqa: F401
+from repro.obs.trace import StepProfiler, host_span, span  # noqa: F401

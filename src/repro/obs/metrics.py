@@ -1,0 +1,272 @@
+"""Jit/shard_map-safe in-graph metrics for the K-FAC hot path.
+
+Design constraints (in order):
+
+  1. **Numerically inert.**  Instrumentation must never change a single
+     bit of the optimizer's output.  Every metric is computed *from* hot
+     path values, never fed back; expensive derived metrics (the
+     inversion-error proxy) are only added to the graph when a collector
+     is active, so metrics-off runs trace the exact un-instrumented
+     graph.
+  2. **No per-step host sync.**  Metrics accumulate in a
+     :func:`Meter.init` buffer — a flat dict of named f32 scalars, a
+     fixed pytree that rides through the jitted step like any other
+     carry — and reach the host through one unordered
+     ``jax.experimental.io_callback`` every ``every`` steps (under
+     ``lax.cond``, so non-flush steps run callback-free).
+  3. **Static structure.**  The catalog is *closed* per optimizer
+     (:func:`catalog_for`): every step variant's buffer has identical
+     keys, so the scheduler's many static work masks all share one
+     buffer pytree and recompilation stays bounded.
+
+The hot path records through a thread-local collector stack:
+``record(name, value)`` is a no-op unless the caller's trace sits
+inside a ``with meter.collecting() as col:`` block, and ``value`` may
+be a zero-arg callable that is only evaluated (i.e. only enters the
+graph) when a collector is active.  Two accumulation kinds:
+
+  * ``counter`` — summed across the flush window, reset to 0 at flush;
+  * ``gauge``   — last written value wins, persists across flushes.
+
+shard_map note: nothing here may run *inside* a ``shard_map`` body
+(recording a tracer from an inner mesh context into an outer-trace
+collector is a tracer leak).  The curvature engine instead all-gathers
+the per-slot ``KFactorState.aux`` diagnostics, and the optimizer
+records from the post-gather state at the outer trace level — which is
+also why the 8-device sharded run flushes valid metrics
+(tests/test_obs.py).
+"""
+from __future__ import annotations
+
+import contextlib
+import itertools
+import threading
+from typing import Any, Callable, Dict, List, NamedTuple, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import io_callback
+
+COUNTER = "counter"
+GAUGE = "gauge"
+
+#: modes whose heavy overwrite truncates a spectrum (AUX_TRUNC channel)
+_TRUNC_MODES = ("evd", "rsvd", "brand_rsvd")
+
+
+class MetricSpec(NamedTuple):
+    """One named scalar in the closed catalog."""
+    name: str
+    kind: str
+    doc: str = ""
+
+
+def catalog_for(opt) -> Tuple[MetricSpec, ...]:
+    """The closed metric catalog for one ``Kfac`` optimizer (duck-typed:
+    only ``factor_buckets`` / ``_async_buckets`` statics are read).
+    Per-bucket entries exist only where the bucket's mode can produce
+    them, so the buffer stays small on single-variant configs."""
+    specs: List[MetricSpec] = [
+        MetricSpec("work/stats_fired", COUNTER,
+                   "steps that absorbed a stats batch"),
+        MetricSpec("work/light_fired", COUNTER,
+                   "steps that ran the Brand light update"),
+        MetricSpec("work/heavy_slots", COUNTER,
+                   "factor slots whose heavy op fired inline"),
+        MetricSpec("work/launch_slots", COUNTER,
+                   "factor slots snapshotted into the async pipeline"),
+        MetricSpec("work/land_slots", COUNTER,
+                   "factor slots whose async heavy result landed"),
+        MetricSpec("precond/damping_phi", GAUGE,
+                   "damping ratio φ_λ at the last step"),
+    ]
+    for bi, bucket in enumerate(opt.factor_buckets):
+        mode = bucket.spec.mode.value
+        p = f"bucket{bi}"
+        specs.append(MetricSpec(f"{p}/heavy_slots", COUNTER,
+                                f"[{mode}] slots refreshed (inline+landed)"))
+        if mode == "ns":
+            specs.append(MetricSpec(f"{p}/ns_lam", GAUGE,
+                                    "mean λ̂ of the last NS refresh"))
+            specs.append(MetricSpec(f"{p}/ns_res", GAUGE,
+                                    "worst-slot NS Frobenius residual "
+                                    "(≥0.5 ⇒ dense fallback fired)"))
+        if mode in _TRUNC_MODES:
+            specs.append(MetricSpec(f"{p}/trunc_mass", GAUGE,
+                                    "worst-slot truncated spectral-mass "
+                                    "fraction of the last overwrite"))
+        if bucket.spec.needs_m:
+            specs.append(MetricSpec(f"{p}/inv_err", GAUGE,
+                                    "row-sampled ‖(M+λI)X−I‖_F/√k of the "
+                                    "freshly refreshed slots"))
+        if bi in getattr(opt, "_async_buckets", {}):
+            specs.append(MetricSpec(f"{p}/replay_depth", GAUGE,
+                                    "interim Brand panels replayed per "
+                                    "landing (static)"))
+    return tuple(specs)
+
+
+# ---------------------------------------------------------------------------
+# thread-local collector stack — record() is the hot path's only API
+# ---------------------------------------------------------------------------
+
+_TLS = threading.local()
+
+
+def _stack() -> List["Collector"]:
+    st = getattr(_TLS, "stack", None)
+    if st is None:
+        st = _TLS.stack = []
+    return st
+
+
+def active() -> bool:
+    """True iff a collector is listening on this thread — guard for
+    metrics whose *computation* should stay out of un-instrumented
+    graphs (cheap statics can just call :func:`record`)."""
+    return bool(_stack())
+
+
+def record(name: str, value: Union[Any, Callable[[], Any]]) -> None:
+    """Record one named scalar into the innermost active collector.
+    No-op (and ``value`` untouched, if callable) when none is active;
+    silently ignores names outside the collector's catalog so shared
+    code paths can record unconditionally."""
+    st = _stack()
+    if st:
+        st[-1].record(name, value)
+
+
+class Collector:
+    """Per-traced-step scratch: the values one optimizer step recorded,
+    keyed by catalog name, merged into the persistent buffer after the
+    step body ran."""
+
+    def __init__(self, catalog: Tuple[MetricSpec, ...]):
+        self.kinds: Dict[str, str] = {s.name: s.kind for s in catalog}
+        self.values: Dict[str, Any] = {}
+
+    def record(self, name: str, value) -> None:
+        kind = self.kinds.get(name)
+        if kind is None:
+            return
+        if callable(value):
+            value = value()
+        v = jnp.asarray(value, jnp.float32)
+        if kind == COUNTER and name in self.values:
+            self.values[name] = self.values[name] + v
+        else:
+            self.values[name] = v
+
+
+# ---------------------------------------------------------------------------
+# host-side sink registry (io_callback closures carry only a static id)
+# ---------------------------------------------------------------------------
+
+_SINKS: Dict[int, Callable] = {}
+_SINK_IDS = itertools.count()
+
+
+def register_sink(fn: Callable[[int, int, Dict[str, float]], None]) -> int:
+    """Register ``fn(step, window_steps, values)`` and return its id."""
+    sid = next(_SINK_IDS)
+    _SINKS[sid] = fn
+    return sid
+
+
+class Meter:
+    """Static handle tying a metric catalog to a flush cadence + sink.
+
+    Not a pytree — captured by closure in the step function (like the
+    optimizer itself).  The mutable state is the buffer returned by
+    :meth:`init`, threaded through the jitted step as a donatable carry.
+    """
+
+    def __init__(self, catalog: Tuple[MetricSpec, ...], sink: Callable,
+                 every: int = 10):
+        if every <= 0:
+            raise ValueError(f"flush cadence must be positive, got {every}")
+        self.catalog = catalog
+        self.every = int(every)
+        self.sink_id = register_sink(sink)
+        self._names = tuple(s.name for s in catalog)
+        self._kinds = {s.name: s.kind for s in catalog}
+
+    @classmethod
+    def for_opt(cls, opt, sink: Callable, every: int = 10) -> "Meter":
+        return cls(catalog_for(opt), sink, every=every)
+
+    # -- buffer lifecycle ---------------------------------------------------
+    def init(self) -> Dict[str, jax.Array]:
+        buf = {n: jnp.zeros((), jnp.float32) for n in self._names}
+        buf["_steps"] = jnp.zeros((), jnp.int32)
+        return buf
+
+    def collecting(self):
+        """Context manager entered around the optimizer call *inside*
+        the traced step; yields the :class:`Collector`."""
+        return _collecting(self.catalog)
+
+    def merge(self, buf: Dict[str, jax.Array], col: Collector
+              ) -> Dict[str, jax.Array]:
+        """Fold one step's collector into the persistent buffer."""
+        out = dict(buf)
+        out["_steps"] = buf["_steps"] + 1
+        for name, v in col.values.items():
+            if self._kinds[name] == COUNTER:
+                out[name] = buf[name] + v
+            else:
+                out[name] = v
+        return out
+
+    # -- flushing -----------------------------------------------------------
+    def maybe_flush(self, buf: Dict[str, jax.Array], step: jax.Array
+                    ) -> Dict[str, jax.Array]:
+        """Emit the buffer through the sink and reset the window — only
+        when the window is full, under ``lax.cond`` so steady-state
+        steps carry no callback.  ``step`` is the (traced) optimizer
+        step stamped onto the flush."""
+        names, kinds, sid = self._names, self._kinds, self.sink_id
+
+        def _emit(step_v, steps_v, *vals):
+            sink = _SINKS.get(sid)
+            if sink is not None:
+                sink(int(step_v), int(steps_v),
+                     {n: float(v) for n, v in zip(names, vals)})
+
+        def _flush(b):
+            io_callback(_emit, None, step, b["_steps"],
+                        *[b[n] for n in names], ordered=False)
+            out = dict(b)
+            out["_steps"] = jnp.zeros_like(b["_steps"])
+            for n in names:
+                if kinds[n] == COUNTER:
+                    out[n] = jnp.zeros_like(b[n])
+            return out
+
+        return jax.lax.cond(buf["_steps"] >= self.every, _flush,
+                            lambda b: dict(b), buf)
+
+    def drain(self, buf, step: int) -> None:
+        """Host-side final flush of a partial window (end of run)."""
+        vals = jax.device_get(buf)
+        window = int(vals["_steps"])
+        if window == 0:
+            return
+        sink = _SINKS.get(self.sink_id)
+        if sink is not None:
+            sink(int(step), window,
+                 {n: float(vals[n]) for n in self._names})
+
+    def kinds(self) -> Dict[str, str]:
+        return dict(self._kinds)
+
+
+@contextlib.contextmanager
+def _collecting(catalog):
+    col = Collector(catalog)
+    _stack().append(col)
+    try:
+        yield col
+    finally:
+        _stack().pop()

@@ -35,16 +35,18 @@ class Request:
 class Engine:
     def __init__(self, lm: LM, params, batch_slots: int = 4,
                  max_len: int = 256, eos_id: Optional[int] = None,
-                 seed: int = 0):
+                 seed: int = 0, writer=None):
         self.lm = lm
         self.params = params
         self.B = batch_slots
         self.S = max_len
         self.eos = eos_id
+        self.writer = writer      # repro.obs TelemetryWriter (optional)
         self._queue: "queue.Queue[Request]" = queue.Queue()
         self._slots: List[Optional[Request]] = [None] * batch_slots
         self._fed: List[int] = [0] * batch_slots      # prompt tokens fed
         self._pos: List[int] = [0] * batch_slots
+        self._t_start: List[float] = [0.0] * batch_slots
         self._cache = lm.init_cache(batch_slots, max_len)
         self._key = jax.random.PRNGKey(seed)
         self._step = jax.jit(lm.decode_step)
@@ -60,6 +62,7 @@ class Engine:
                 self._slots[i] = self._queue.get()
                 self._fed[i] = 0
                 self._pos[i] = 0
+                self._t_start[i] = time.time()
 
     def step(self):
         """One engine tick: one decode_step for the whole batch."""
@@ -104,6 +107,25 @@ class Engine:
                 req.t_done = time.time()
                 self.completed[req.uid] = req
                 self._slots[i] = None
+                if self.writer is not None:
+                    self.writer.emit(
+                        "serve_request", uid=req.uid,
+                        wait_s=self._t_start[i] - req.t_submit,
+                        total_s=req.t_done - req.t_submit,
+                        n_new=len(req.out_tokens))
+
+    def latency_report(self) -> Dict[str, float]:
+        """Request-latency percentiles over everything completed so far
+        (same numbers ``repro.obs.summary`` derives from the
+        ``serve_request`` events)."""
+        tot = sorted(r.t_done - r.t_submit
+                     for r in self.completed.values())
+        if not tot:
+            return {"requests": 0}
+        pct = lambda q: tot[min(len(tot) - 1,
+                                int(round(q * (len(tot) - 1))))]
+        return {"requests": len(tot), "p50_s": pct(0.5),
+                "p99_s": pct(0.99)}
 
     def run_until_drained(self, max_ticks: int = 10_000):
         ticks = 0

@@ -35,15 +35,20 @@ SEP = "|"
 #:   v3  PR 5           (KfacState.inflight: async heavy pipeline's
 #:                       in-flight snapshot buffers — saved mid-lag and
 #:                       restored so pending landings still fire)
+#:   v4  PR 7           (KFactorState.aux: per-slot heavy-op diagnostics
+#:                       — NS λ̂/residual promoted out of the D[:2] stash,
+#:                       EVD/RSVD truncation mass — one (AUX_WIDTH,) leaf
+#:                       per factor side)
 #: Leaf-compatible additions (e.g. inflight == {} when async is off)
 #: restore across versions; the schema is used to *explain* mismatches,
 #: not to reject compatible checkpoints.
-SCHEMA_VERSION = 3
+SCHEMA_VERSION = 4
 
 _SCHEMA_HISTORY = {
     1: "seed..PR2 pytree (KfacState without `phase`)",
     2: "PR3 pytree (added KfacState.phase)",
     3: "PR5 pytree (added KfacState.inflight async buffers)",
+    4: "PR7 pytree (added KFactorState.aux heavy-op diagnostics)",
 }
 
 

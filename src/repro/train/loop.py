@@ -19,6 +19,7 @@ semantics tests and the sharded engine use.
 from __future__ import annotations
 
 import functools
+import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Callable, Dict, NamedTuple, Optional
 
@@ -28,6 +29,8 @@ import jax.numpy as jnp
 from repro.core import kfac as kfac_lib
 from repro.core import kfactor
 from repro.models import layers
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.optim import base as optbase
 
 Array = jax.Array
@@ -71,7 +74,8 @@ def make_kfac_step(loss_fn: Callable, opt: kfac_lib.Kfac,
 
 
 def make_scheduled_kfac_step(loss_fn: Callable, opt: kfac_lib.Kfac,
-                             n_tokens: int, probe_dtype=jnp.float32):
+                             n_tokens: int, probe_dtype=jnp.float32,
+                             meter: Optional[obs_metrics.Meter] = None):
     """Returns step(state, batch, work, landing=None) with ``work`` a
     static :class:`repro.core.schedule.StepWork` mask — jit with
     ``static_argnames=("work",)``.  The mask is hashable, so each distinct
@@ -79,18 +83,36 @@ def make_scheduled_kfac_step(loss_fn: Callable, opt: kfac_lib.Kfac,
     once to a lean HLO, exactly like the legacy bool variants.
 
     ``landing`` carries pre-computed heavy results for this step's land
-    ranges (see :class:`AsyncInverseRunner`); ``None`` lands in-graph."""
+    ranges (see :class:`AsyncInverseRunner`); ``None`` lands in-graph.
 
-    def step(state: TrainState, batch, work, landing=None):
+    With a ``meter`` (repro.obs in-graph metrics) the step becomes
+    ``step(state, batch, work, landing=None, mbuf=None) -> (state, loss,
+    mbuf)``: the optimizer runs under the meter's collector, the metric
+    buffer is merged/flushed in-graph, and the params/loss outputs are
+    bit-identical to the meter-less step (asserted in
+    tests/test_obs.py)."""
+
+    def step(state: TrainState, batch, work, landing=None, mbuf=None):
         rng, sub = jax.random.split(state.rng)
         probes = layers.make_probes(opt.taps, probe_dtype)
         loss, acts, gp, gprobe = kfac_grads(loss_fn, state.params, probes,
                                             batch)
-        updates, opt_state = opt.update(
-            gp, state.opt, state.params, acts=acts, probe_grads=gprobe,
-            n_tokens=n_tokens, rng=sub, work=work, landing=landing)
+        if meter is None:
+            updates, opt_state = opt.update(
+                gp, state.opt, state.params, acts=acts,
+                probe_grads=gprobe, n_tokens=n_tokens, rng=sub, work=work,
+                landing=landing)
+        else:
+            with meter.collecting() as col:
+                updates, opt_state = opt.update(
+                    gp, state.opt, state.params, acts=acts,
+                    probe_grads=gprobe, n_tokens=n_tokens, rng=sub,
+                    work=work, landing=landing)
+            mbuf = meter.maybe_flush(meter.merge(mbuf, col),
+                                     opt_state.step)
         params = optbase.apply_updates(state.params, updates)
-        return TrainState(params=params, opt=opt_state, rng=rng), loss
+        out = TrainState(params=params, opt=opt_state, rng=rng)
+        return (out, loss) if meter is None else (out, loss, mbuf)
 
     return step
 
@@ -113,25 +135,37 @@ class AsyncInverseRunner:
     with no pending future (fresh resume mid-lag) maps to ``None`` and
     lands in-graph from the restored snapshot — the graceful
     re-snapshot-free resume path.
+
+    ``health`` counts launched / landed / missed ranges over the runner's
+    lifetime ("missed" = a land range with no pending future, i.e. the
+    overlap pipeline fell back to in-graph recompute).  A
+    :class:`repro.obs.TelemetryWriter` passed as ``writer`` additionally
+    gets per-range ``async_launch`` / ``async_land`` / ``async_miss``
+    events.
     """
 
-    def __init__(self, opt: kfac_lib.Kfac, device=None, home=None):
+    def __init__(self, opt: kfac_lib.Kfac, device=None, home=None,
+                 writer=None):
         self.opt = opt
         self.device = device
         self.home = home if home is not None else jax.devices()[0]
+        self.writer = writer
+        self.health = {"launched": 0, "landed": 0, "missed": 0}
         self._pool = ThreadPoolExecutor(max_workers=2)
         self._fns: Dict = {}
         self._pending: Dict = {}
 
     @classmethod
-    def for_opt(cls, opt: kfac_lib.Kfac) -> Optional["AsyncInverseRunner"]:
+    def for_opt(cls, opt: kfac_lib.Kfac,
+                writer=None) -> Optional["AsyncInverseRunner"]:
         """A runner on the first spare device, or None when the optimizer
         does not pipeline (sync config, or a curvature engine attached —
         the engine lands in-graph, sharded)."""
         if not opt._async_buckets or opt.curvature is not None:
             return None
         devs = jax.devices()
-        return cls(opt, device=devs[1] if len(devs) > 1 else None)
+        return cls(opt, device=devs[1] if len(devs) > 1 else None,
+                   writer=writer)
 
     def _fn(self, bi: int, count: int):
         key = (bi, count)
@@ -142,14 +176,14 @@ class AsyncInverseRunner:
         return self._fns[key]
 
     def _run(self, bi: int, count: int, buf_slice):
-        if self.device is not None:
-            buf_slice = jax.device_put(buf_slice, self.device)
-        U, D = self._fn(bi, count)(buf_slice)
-        out = jax.device_put((U, D), self.home)
-        jax.block_until_ready(out)
-        return out
+        with obs_trace.host_span(f"async/heavy/b{bi}"):
+            if self.device is not None:
+                buf_slice = jax.device_put(buf_slice, self.device)
+            out = jax.device_put(self._fn(bi, count)(buf_slice), self.home)
+            jax.block_until_ready(out)
+            return out
 
-    def launch(self, opt_state, work) -> None:
+    def launch(self, opt_state, work, step: Optional[int] = None) -> None:
         for bi, ranges in enumerate(work.launch):
             if not ranges:
                 continue
@@ -158,17 +192,36 @@ class AsyncInverseRunner:
                 buf_slice = jax.tree_util.tree_map(lambda x: x[lo:hi], buf)
                 self._pending[(bi, lo, hi)] = self._pool.submit(
                     self._run, bi, hi - lo, buf_slice)
+                self.health["launched"] += 1
+                if self.writer is not None:
+                    self.writer.emit("async_launch", step=int(step or 0),
+                                     bucket=bi, lo=lo, hi=hi)
 
-    def landing(self, work):
+    def landing(self, work, step: Optional[int] = None):
         out = {}
         for bi, ranges in enumerate(work.land):
             if not ranges:
                 continue
-            out[str(bi)] = tuple(
-                fut.result() if (fut := self._pending.pop((bi, lo, hi),
-                                                          None)) is not None
-                else None
-                for lo, hi in ranges)
+            results = []
+            for lo, hi in ranges:
+                fut = self._pending.pop((bi, lo, hi), None)
+                if fut is None:
+                    # Fresh resume mid-lag (or a dropped launch): land
+                    # in-graph from the restored snapshot.
+                    results.append(None)
+                    self.health["missed"] += 1
+                    if self.writer is not None:
+                        self.writer.emit("async_miss", step=int(step or 0),
+                                         bucket=bi, lo=lo, hi=hi)
+                else:
+                    overlapped = fut.done()
+                    results.append(fut.result())
+                    self.health["landed"] += 1
+                    if self.writer is not None:
+                        self.writer.emit("async_land", step=int(step or 0),
+                                         bucket=bi, lo=lo, hi=hi,
+                                         overlapped=bool(overlapped))
+            out[str(bi)] = tuple(results)
         return out or None
 
     def close(self):
@@ -194,7 +247,8 @@ def run_kfac_training(loss_fn, opt: kfac_lib.Kfac, params, batches,
                       n_tokens: int, seed: int = 0, jit: bool = True,
                       callback=None, mesh=None, curvature_axis=None,
                       state: Optional[TrainState] = None,
-                      overlap: bool = False):
+                      overlap: bool = False, writer=None,
+                      metrics_every: int = 0):
     """Python-level driver: dispatches the statically-masked step variants
     per the paper's T_* schedules (work scheduler; ``cfg.stagger`` phases
     heavy work; ``cfg.async_heavy``/``heavy_lag`` pipeline it).  ``mesh``
@@ -211,8 +265,14 @@ def run_kfac_training(loss_fn, opt: kfac_lib.Kfac, params, batches,
     instead of re-spiking every bucket at once).  An async config
     additionally restores the in-flight snapshots from
     ``state.opt.inflight``, so a landing scheduled before the save still
-    fires on time after the restore.  Returns (final TrainState,
-    losses)."""
+    fires on time after the restore.
+
+    ``writer`` (a :class:`repro.obs.TelemetryWriter`) receives per-step
+    ``step`` events and the async pipeline's launch/land/miss events;
+    ``metrics_every > 0`` additionally attaches an in-graph
+    :class:`repro.obs.Meter` flushing the curvature-health metric buffer
+    to the writer every that many steps.  Both are numerically inert.
+    Returns (final TrainState, losses)."""
     if mesh is not None and curvature_axis is not None:
         from repro.distributed import curvature as curvature_lib
         curvature_lib.CurvatureEngine.for_kfac(opt, mesh, curvature_axis)
@@ -223,20 +283,38 @@ def run_kfac_training(loss_fn, opt: kfac_lib.Kfac, params, batches,
                            rng=jax.random.PRNGKey(seed))
     else:
         k_off = int(jax.device_get(state.opt.phase))
-    runner = AsyncInverseRunner.for_opt(opt) if overlap else None
-    step_fn = make_scheduled_kfac_step(loss_fn, opt, n_tokens)
+    runner = AsyncInverseRunner.for_opt(opt, writer=writer) \
+        if overlap else None
+    meter = None
+    if metrics_every > 0 and writer is not None:
+        catalog = obs_metrics.catalog_for(opt)
+        kinds = {s.name: s.kind for s in catalog}
+        meter = obs_metrics.Meter(catalog, writer.metrics_sink(kinds),
+                                  every=metrics_every)
+    step_fn = make_scheduled_kfac_step(loss_fn, opt, n_tokens, meter=meter)
     if jit:
         step_fn = jax.jit(step_fn, static_argnames=("work",))
+    mbuf = meter.init() if meter is not None else None
     losses = []
     for k, batch in enumerate(batches):
         work = sched.work(k_off + k)
-        landing = runner.landing(work) if runner is not None else None
-        state, loss = step_fn(state, batch, work, landing)
+        landing = runner.landing(work, step=k_off + k) \
+            if runner is not None else None
+        t0 = time.perf_counter()
+        if meter is None:
+            state, loss = step_fn(state, batch, work, landing)
+        else:
+            state, loss, mbuf = step_fn(state, batch, work, landing, mbuf)
         if runner is not None:
-            runner.launch(state.opt, work)
+            runner.launch(state.opt, work, step=k_off + k)
         losses.append(float(loss))
+        if writer is not None:
+            writer.emit("step", step=k_off + k, loss=float(loss),
+                        dt_s=time.perf_counter() - t0, phase=work.label)
         if callback is not None:
             callback(k, state, loss)
+    if meter is not None:
+        meter.drain(mbuf, int(jax.device_get(state.opt.step)))
     if runner is not None:
         runner.close()
     return state, losses

@@ -100,7 +100,7 @@ class TestInflightPrimitives:
         assert bool(buf.live.all())
         landed, buf_after = kfactor.land_swap(spec, st, buf, 0, B)
         # reference: same pure functions, called explicitly
-        U_ref, D_ref = kfactor.heavy_from_snapshot(spec, buf, 0, B)
+        U_ref, D_ref, _ = kfactor.heavy_from_snapshot(spec, buf, 0, B)
         U_ref, D_ref = kfactor.replay_panels(spec, U_ref, D_ref,
                                              buf.panels[0:B])
         np.testing.assert_allclose(np.asarray(landed.U), np.asarray(U_ref))

@@ -96,6 +96,27 @@ class TestCompare:
                               base_cal=500.0, fresh_cal=500.0)
         assert len(fails) == 1 and "stable" in fails[0], fails
 
+    def test_async_miss_regression_fails(self):
+        """A degraded overlap runner keeps timing and parity green (the
+        misses fall back to in-graph recompute) — only the recorded
+        health counters can catch it."""
+        base = _rows({"async": 100.0, "other": 100.0})
+        base["async"]["derived"] = "async_launched=6 async_missed=0"
+        fresh = _rows({"async": 100.0, "other": 100.0})
+        fresh["async"]["derived"] = "async_launched=6 async_missed=3"
+        fails, _ = cr.compare(base, fresh, 0.2, "t",
+                              base_cal=500.0, fresh_cal=500.0)
+        assert len(fails) == 1 and "missed landing" in fails[0], fails
+
+    def test_async_miss_at_baseline_passes(self):
+        base = _rows({"async": 100.0})
+        base["async"]["derived"] = "async_missed=1"
+        fresh = _rows({"async": 100.0})
+        fresh["async"]["derived"] = "async_missed=1"
+        fails, _ = cr.compare(base, fresh, 0.2, "t",
+                              base_cal=500.0, fresh_cal=500.0)
+        assert not fails, fails
+
     def test_parity_flip_and_missing_row_fail(self):
         base = _rows({"a": 100.0, "gone": 50.0})
         fresh = _rows({"a": 100.0, "claim": 0.0})

@@ -251,10 +251,10 @@ class TestKFactorStateMachine:
         st, Xs = self._run(spec)
         exact = kfactor.exact_ea(Xs, spec.rho)
         if mode is kfactor.Mode.NS:
-            # NS holds the damped dense *inverse* in U (D is metadata:
-            # λ̂, residual) — track against inv(EA + λ̂I) at the firing's
-            # own λ̂, modulo one stats step of staleness
-            lam = float(st.D[0])
+            # NS holds the damped dense *inverse* in U (λ̂ and residual
+            # live in st.aux) — track against inv(EA + λ̂I) at the
+            # firing's own λ̂, modulo one stats step of staleness
+            lam = float(st.aux[kfactor.AUX_LAM])
             want = np.linalg.inv(np.asarray(exact) + lam * np.eye(spec.d))
             rel = np.linalg.norm(st.U - want) / np.linalg.norm(want)
         else:

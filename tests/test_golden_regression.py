@@ -90,7 +90,8 @@ def test_mode_accuracy_ordering():
     st_ns = _run_mode(spec_ns, Xs, key)
     errs[Mode.NS] = float(jnp.linalg.norm(J @ st_ns.U - want) /
                           jnp.linalg.norm(want))
-    assert float(st_ns.D[1]) < kfactor._NS_RES_MAX  # converged, no fallback
+    # converged, no fallback
+    assert float(st_ns.aux[kfactor.AUX_RES]) < kfactor._NS_RES_MAX
 
     assert all(np.isfinite(list(errs.values())))
     # K-FAC's exact inverse is essentially error-free...

@@ -26,9 +26,10 @@ def _psd(key, d, scale=1.0, decay=0.8):
 
 
 def _ns_state(M, U=None):
-    d = M.shape[-1]
     U0 = jnp.zeros(M.shape) if U is None else U
-    return kfactor.KFactorState(U=U0, D=jnp.zeros(M.shape[:-1]), M=M)
+    return kfactor.KFactorState(
+        U=U0, D=jnp.zeros(M.shape[:-1]), M=M,
+        aux=jnp.zeros(M.shape[:-2] + (kfactor.AUX_WIDTH,)))
 
 
 # ---------------------------------------------------------------------------
@@ -58,8 +59,8 @@ def test_cold_start_converges_within_8_iters():
     M = _psd(jax.random.PRNGKey(0), d)
     spec = KFactorSpec(d=d, r=16, n_stat=8, mode=Mode.NS)  # ns_iters=8
     out = kfactor.ns_overwrite(spec, _ns_state(M))
-    lam = float(out.D[0])
-    res = float(out.D[1])
+    lam = float(out.aux[kfactor.AUX_LAM])
+    res = float(out.aux[kfactor.AUX_RES])
     assert res < 1e-3, res                      # way under the 0.5 fallback
     want = jnp.linalg.inv(0.5 * (M + M.T) + lam * jnp.eye(d))
     rel = float(jnp.linalg.norm(out.U - want) / jnp.linalg.norm(want))
@@ -80,7 +81,8 @@ def test_warm_start_beats_cold_at_low_iters():
     spec2 = KFactorSpec(d=d, r=16, n_stat=8, mode=Mode.NS, ns_iters=2)
     warm = kfactor.ns_overwrite(spec2, _ns_state(M1, U=warm_src.U))
     cold = kfactor.ns_overwrite(spec2, _ns_state(M1))
-    res_warm, res_cold = float(warm.D[1]), float(cold.D[1])
+    res_warm = float(warm.aux[kfactor.AUX_RES])
+    res_cold = float(cold.aux[kfactor.AUX_RES])
     assert res_warm < 1e-3, res_warm
     assert res_warm < 0.01 * res_cold, (res_warm, res_cold)
 
@@ -92,7 +94,7 @@ def test_zero_init_takes_cold_path():
     M = _psd(jax.random.PRNGKey(3), d)
     spec = KFactorSpec(d=d, r=16, n_stat=8, mode=Mode.NS)
     out = kfactor.ns_overwrite(spec, _ns_state(M))
-    assert float(out.D[1]) < 1e-3
+    assert float(out.aux[kfactor.AUX_RES]) < 1e-3
 
 
 # ---------------------------------------------------------------------------
@@ -114,8 +116,8 @@ def test_divergence_fallback_repairs_slot():
     spec = KFactorSpec(d=d, r=16, n_stat=8, mode=Mode.NS)
     out = kfactor.ns_overwrite(spec, _ns_state(M))
     # flagged: residual ≥ threshold or NaN (diverged-to-NaN iterates)
-    assert not (float(out.D[1]) < kfactor._NS_RES_MAX)
-    lam = float(out.D[0])
+    assert not (float(out.aux[kfactor.AUX_RES]) < kfactor._NS_RES_MAX)
+    lam = float(out.aux[kfactor.AUX_LAM])
     want = jnp.linalg.inv(M + lam * jnp.eye(d))
     rel = float(jnp.linalg.norm(out.U - want) / jnp.linalg.norm(want))
     assert rel < 1e-4, rel                         # ...and repaired
@@ -135,9 +137,10 @@ def test_fallback_is_per_slot():
         spec, _ns_state(Mb), jnp.zeros((2, 2), jnp.uint32))
     np.testing.assert_array_equal(np.asarray(batched.U[0]),
                                   np.asarray(alone.U))
-    assert float(batched.D[0, 1]) < kfactor._NS_RES_MAX
-    assert not (float(batched.D[1, 1]) < kfactor._NS_RES_MAX)
-    lam_bad = float(batched.D[1, 0])
+    assert float(batched.aux[0, kfactor.AUX_RES]) < kfactor._NS_RES_MAX
+    assert not (float(batched.aux[1, kfactor.AUX_RES])
+                < kfactor._NS_RES_MAX)
+    lam_bad = float(batched.aux[1, kfactor.AUX_LAM])
     want = jnp.linalg.inv(bad + lam_bad * jnp.eye(d))
     rel = float(jnp.linalg.norm(batched.U[1] - want) /
                 jnp.linalg.norm(want))
@@ -151,8 +154,8 @@ def test_zero_iters_residual_triggers_fallback():
     M = _psd(jax.random.PRNGKey(5), d)
     spec = KFactorSpec(d=d, r=16, n_stat=8, mode=Mode.NS, ns_iters=0)
     out = kfactor.ns_overwrite(spec, _ns_state(M))
-    assert float(out.D[1]) >= kfactor._NS_RES_MAX
-    lam = float(out.D[0])
+    assert float(out.aux[kfactor.AUX_RES]) >= kfactor._NS_RES_MAX
+    lam = float(out.aux[kfactor.AUX_LAM])
     want = jnp.linalg.inv(0.5 * (M + M.T) + lam * jnp.eye(d))
     rel = float(jnp.linalg.norm(out.U - want) / jnp.linalg.norm(want))
     assert rel < 1e-4, rel
@@ -185,7 +188,8 @@ def test_ns_heavy_firing_is_matmul_only():
     spec = KFactorSpec(d=d, r=8, n_stat=n, mode=Mode.NS)
     st = kfactor.KFactorState(U=jnp.zeros((B, d, d)),
                               D=jnp.zeros((B, d)),
-                              M=jnp.zeros((B, d, d)))
+                              M=jnp.zeros((B, d, d)),
+                              aux=jnp.zeros((B, kfactor.AUX_WIDTH)))
     X = jnp.zeros((B, d, n))
     keys = jnp.zeros((B, 2), jnp.uint32)
 
