@@ -191,6 +191,7 @@ def run(quick: bool = False) -> List[dict]:
     rows.extend(run_staggered(taps, params, grads, acts, pgs, N, quick))
     rows.extend(run_async(taps, params, grads, acts, pgs, N, quick))
     rows.extend(run_telemetry(taps, params, grads, acts, pgs, N, quick))
+    rows.extend(run_health(taps, params, grads, acts, pgs, N, quick))
     return rows
 
 
@@ -548,6 +549,69 @@ def run_telemetry(taps, params, grads, acts, pgs, N, quick) -> List[dict]:
                    f"metrics_every={meter.every} "
                    f"catalog_size={len(meter.catalog)} "
                    f"telemetry_inert={bool(inert)}",
+    }]
+
+
+def run_health(taps, params, grads, acts, pgs, N, quick) -> List[dict]:
+    """Resilience-guard overhead: the in-graph health report + guarded
+    ``where`` select (train/health.py) wrapped around the light-path
+    ``Kfac.update`` vs the same step bare.  The gated claim is
+    ``health_inert=True`` — on a healthy step the guarded path's update
+    must be *bit-identical* to the bare one: the report only reads
+    hot-path values, the final select picks the new values exactly, and
+    the un-escalated damping scale multiplies φ by exactly 1.0.  The
+    overhead percentage is recorded for the artifact but not claimed
+    (shared-CPU timing of a ~0 cost is noise)."""
+    import jax.numpy as jnp
+
+    from repro.train import health as health_lib
+
+    opt = _opt(taps, bucketed=True, quick=quick, variant="bkfac")
+    work = opt.uniform_work(True, True, False)
+    hcfg = health_lib.HealthConfig()
+    rng = jax.random.PRNGKey(13)
+
+    def step_off(grads, state, rng, work):
+        return opt.update(grads, state, params, acts=acts, probe_grads=pgs,
+                          n_tokens=N, rng=rng, work=work)
+
+    def step_on(grads, state, rng, work, scale):
+        upd, st = opt.update(grads, state, params, acts=acts,
+                             probe_grads=pgs, n_tokens=N, rng=rng,
+                             work=work, damping_scale=scale)
+        rep = health_lib.health_report(hcfg, opt, jnp.float32(0.0),
+                                       grads, upd, st)
+        ok = rep["ok"] > 0
+        upd = health_lib._select(
+            ok, upd, jax.tree_util.tree_map(jnp.zeros_like, upd))
+        st = health_lib._select(ok, st, state)
+        return upd, st, rep
+
+    step_off = jax.jit(step_off, static_argnames=("work",))
+    step_on = jax.jit(step_on, static_argnames=("work",))
+    st = opt.init(params)
+    _, st = step_off(grads, st, rng, work)      # warm state past init
+    scale = jnp.float32(1.0)
+    upd_off, _ = step_off(grads, st, rng, work)
+    upd_on, _, rep = step_on(grads, st, rng, work, scale)
+    assert float(rep["ok"]) == 1.0
+    inert = all(
+        np.array_equal(np.asarray(upd_on[name]["w"]),
+                       np.asarray(upd_off[name]["w"]))
+        for name in taps)
+    son, soff = _timeit_pair(
+        lambda: step_on(grads, st, rng, work, scale)[0],
+        lambda: step_off(grads, st, rng, work)[0])
+    t_on, t_off = float(np.min(son)), float(np.min(soff))
+    return [{
+        "name": "step/health_on_vs_off",
+        "us_per_call": t_on * 1e6,
+        **_pcts(son),
+        "derived": f"off_us={t_off * 1e6:.1f} "
+                   f"off_p99_us={np.percentile(soff, 99) * 1e6:.1f} "
+                   f"overhead_pct={(t_on / t_off - 1.0) * 100:.1f} "
+                   f"guard_checks={len(rep)} "
+                   f"health_inert={bool(inert)}",
     }]
 
 

@@ -227,6 +227,25 @@ class Kfac:
         return schedule.uniform_work(do_stats, do_light, do_heavy,
                                      self.factor_buckets)
 
+    def remedial_work(self) -> schedule.StepWork:
+        """The forced-refresh mask of the remediation ladder (stage 2):
+        full-range inline heavy + stats/light absorb, out of cadence —
+        see :func:`repro.core.schedule.remedial_work`."""
+        return schedule.remedial_work(self.cfg, self.factor_buckets)
+
+    def clear_inflight(self, state: KfacState) -> KfacState:
+        """Invalidate every in-flight heavy snapshot (the remediation
+        ladder's "discard the poisoned inverse rep"): zeroed ``live``
+        flags turn any still-scheduled landing into a per-slot no-op,
+        so a snapshot taken before a detected fault can never swap
+        corrupted state back over a freshly refreshed one."""
+        if not state.inflight:
+            return state
+        inflight = {k: dataclasses.replace(
+                        buf, live=jnp.zeros_like(buf.live))
+                    for k, buf in state.inflight.items()}
+        return state._replace(inflight=inflight)
+
     # -- state ------------------------------------------------------------
     def init(self, params) -> KfacState:
         factors = {}
@@ -528,20 +547,30 @@ class Kfac:
                n_tokens, rng, work: Optional[schedule.StepWork] = None,
                do_stats: Optional[bool] = None,
                do_light: Optional[bool] = None,
-               do_heavy: Optional[bool] = None, landing=None):
+               do_heavy: Optional[bool] = None, landing=None,
+               damping_scale=None):
         """One optimizer step.  ``work`` is a static, hashable StepWork
         mask (jit with ``static_argnames=("work",)``); the legacy three
         python bools are accepted as a shim and converted to the
         equivalent uniform (spiky) mask.  ``landing`` optionally carries
         pre-computed heavy results (bucket idx str → ((U, D, aux), …)
         per land range) from an overlapped dispatch; absent, landings
-        compute in-graph from the in-flight snapshot."""
+        compute in-graph from the in-flight snapshot.
+
+        ``damping_scale`` (optional traced scalar) multiplies the
+        scheduled damping ratio φ — the remediation ladder's stage-1
+        escalation knob (train/health.py).  A scale of exactly 1.0 is
+        bit-inert (float multiply by 1.0 is exact), which is what keeps
+        the health-guarded step's healthy-run outputs identical to the
+        unguarded step's."""
         cfg = self.cfg
         if work is None:
             work = self.uniform_work(bool(do_stats), bool(do_light),
                                      bool(do_heavy))
         first = state.n_stats == 0
         phi = cfg.damping_phi(state.step)
+        if damping_scale is not None:
+            phi = phi * damping_scale
         lr = cfg.lr(state.step)
         if obs_metrics.active():
             slots = lambda t: float(sum(hi - lo for r in t

@@ -168,6 +168,33 @@ def no_work(factor_buckets) -> StepWork:
                     land=_empty(factor_buckets))
 
 
+def remedial_work(cfg, factor_buckets) -> StepWork:
+    """An out-of-cadence *forced heavy refresh* — the remediation
+    ladder's stage-2 mask (train/health.py): every bucket with a heavy
+    op overwrites its full slot range inline, with a stats absorb (and,
+    for Brand-family variants, a light absorb) exactly like the step-0
+    warmup, so the inverse rep is re-established from the live M this
+    very step.  Launch/land stay empty: the poisoned in-flight pipeline
+    is abandoned (the caller clears the snapshots' ``live`` flags via
+    ``Kfac.clear_inflight``, so any still-scheduled landing degrades to
+    a per-slot no-op instead of swapping stale state back in).  Safe
+    out of cadence by the paper's Props 4.1/4.2 — a *fresher* inverse
+    can only help — and composes with staggering and the async pipeline
+    because it is just one more static mask; the scheduler's own
+    cadence continues unchanged afterwards.  For pure-Brand buckets
+    (no heavy op, e.g. bkfac) the refresh degenerates to the stats +
+    light re-absorb, which is all the inverse rep those modes have.
+    """
+    from repro.core import kfactor
+    heavy = tuple((((0, b.total),) if kfactor.has_heavy_op(b.spec) else ())
+                  for b in factor_buckets)
+    return StepWork(stats=True,
+                    light=policy_lib.has_light(cfg.policy.variant),
+                    heavy=heavy,
+                    launch=_empty(factor_buckets),
+                    land=_empty(factor_buckets))
+
+
 def legacy_flags(cfg, step: int) -> Dict[str, bool]:
     """The seed's ``KfacConfig.flags`` semantics, driven by the variant
     table in ``core/policy.py`` — one period per variant, by declaration,

@@ -36,6 +36,7 @@ from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
 from repro.optim import base as optbase
 from repro.train import checkpoint as ckpt
+from repro.train import health as health_lib
 from repro.train import loop as loop_lib
 from repro.train import straggler as strag_lib
 
@@ -77,6 +78,12 @@ def main():
                     choices=("auto", "none"),
                     help="auto: shard factor work across the mesh's first "
                          "data axis (distributed curvature engine)")
+    ap.add_argument("--health", action="store_true",
+                    help="enable the in-graph health guards + staged "
+                         "remediation ladder (skip / damping escalation "
+                         "/ forced refresh / checkpoint rollback — the "
+                         "last needs --ckpt-dir).  Bit-inert on healthy "
+                         "runs (train/health.py)")
     ap.add_argument("--telemetry-dir", default="",
                     help="write the structured JSONL event log to "
                          "<dir>/events.jsonl (repro.obs; feed it to "
@@ -182,10 +189,19 @@ def main():
             catalog, writer.metrics_sink({s.name: s.kind
                                           for s in catalog}),
             every=args.metrics_every)
-    step_fn = jax.jit(loop_lib.make_scheduled_kfac_step(loss_with_compress,
-                                                        opt, n_tokens,
-                                                        meter=meter),
-                      static_argnames=("work",))
+    policy = None
+    if args.health:
+        policy = health_lib.RemediationPolicy(writer=writer)
+        step_fn = jax.jit(health_lib.make_resilient_kfac_step(
+            loss_with_compress, opt, n_tokens, meter=meter),
+            static_argnames=("work",))
+        writer.log("health guards on: staged remediation ladder armed"
+                   + ("" if args.ckpt_dir
+                      else " (no --ckpt-dir: rollback stage disabled)"))
+    else:
+        step_fn = jax.jit(loop_lib.make_scheduled_kfac_step(
+            loss_with_compress, opt, n_tokens, meter=meter),
+            static_argnames=("work",))
 
     checkpointer = (ckpt.AsyncCheckpointer(args.ckpt_dir, keep=3)
                     if args.ckpt_dir else None)
@@ -195,7 +211,7 @@ def main():
         writer.emit("ckpt_restore", step=start, path=args.ckpt_dir)
     k0 = 0 if start is None else start + 1
 
-    det = strag_lib.StragglerDetector()
+    det = strag_lib.StragglerDetector(writer=writer)
     profiler = obs_trace.StepProfiler(args.profile_dir or None,
                                       first=k0 + 1,
                                       steps=args.profile_steps)
@@ -207,7 +223,8 @@ def main():
     with ctx:
         run_steps(args, sched, det, stream, step_fn, state,
                   checkpointer, k0, t_start, losses, runner=runner,
-                  writer=writer, meter=meter, profiler=profiler)
+                  writer=writer, meter=meter, profiler=profiler,
+                  policy=policy, opt=opt)
     profiler.close()
     if runner is not None:
         runner.close()
@@ -221,35 +238,74 @@ def main():
 
 def run_steps(args, sched, det, stream, step_fn, state, checkpointer,
               k0, t_start, losses, runner=None, writer=None, meter=None,
-              profiler=None):
+              profiler=None, policy=None, opt=None):
     mbuf = meter.init() if meter is not None else None
     last_k = k0
+    k_off = 0          # rollback re-anchor: schedule runs at k_off + k
     for k in range(k0, args.steps):
         last_k = k
         t0 = time.time()
-        work = sched.work(k)
+        kk = k_off + k
+        work = sched.work(kk)
+        if policy is not None and policy.take_refresh():
+            # remediation stage 2: abandon the (possibly poisoned)
+            # pipeline, re-establish the inverse rep from the live M
+            work = opt.remedial_work()
+            state = state._replace(opt=opt.clear_inflight(state.opt))
+            if runner is not None:
+                runner.drop_pending(reason="dropped")
         actions = det.observe_step(k, {"host0": time.time() - t0 + 1e-6})
         work = strag_lib.apply_to_work(actions.get("host0",
                                                    strag_lib.Action.NONE),
                                        work)
         batch = stream.batch_at(k)
-        landing = (runner.landing(work, step=k)
+        landing = (runner.landing(work, step=kk)
                    if runner is not None else None)
         if profiler is not None:
             profiler.tick(k)
-        if meter is None:
+        report = None
+        if policy is not None:
+            scale = jnp.float32(policy.damping_scale)
+            if meter is None:
+                state, loss, report = step_fn(state, batch, work,
+                                              landing, None, scale)
+            else:
+                state, loss, report, mbuf = step_fn(state, batch, work,
+                                                    landing, mbuf, scale)
+        elif meter is None:
             state, loss = step_fn(state, batch, work, landing)
         else:
             state, loss, mbuf = step_fn(state, batch, work, landing, mbuf)
         if runner is not None:
-            runner.launch(state.opt, work, step=k)
+            runner.launch(state.opt, work, step=kk)
         losses.append(float(loss))
-        if checkpointer is not None and k % args.ckpt_every == 0:
+        faulty = False
+        if policy is not None:
+            rep = {n: float(v) for n, v in
+                   jax.device_get(report).items()}
+            faulty = policy.observe(kk, losses[-1], rep)
+            if policy.take_rollback() and args.ckpt_dir:
+                # remediation stage 3: restore the newest snapshot that
+                # verifies and re-anchor the staggered cadence on it
+                if runner is not None:
+                    runner.drop_pending(reason="dropped")
+                if checkpointer is not None:
+                    checkpointer.wait()
+                state, man = ckpt.restore_latest_healthy(args.ckpt_dir,
+                                                         state)
+                k_off = int(jax.device_get(state.opt.phase)) - (k + 1)
+                policy.notify_rollback(kk, man["step"], args.ckpt_dir)
+                if writer is not None:
+                    writer.emit("ckpt_restore", step=int(man["step"]),
+                                path=args.ckpt_dir)
+                faulty = False
+        if (checkpointer is not None and not faulty
+                and k % args.ckpt_every == 0):
             checkpointer.submit(k, state)
             if writer is not None:
                 writer.emit("ckpt_save", step=k, path=args.ckpt_dir)
         if writer is not None:
-            writer.emit("step", step=k, loss=float(loss),
+            writer.emit("step", step=kk, loss=float(loss),
                         dt_s=time.time() - t0, phase=work.label)
     if meter is not None:
         meter.drain(mbuf, last_k)

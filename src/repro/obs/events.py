@@ -44,6 +44,13 @@ EVENT_TYPES: Dict[str, frozenset] = {
     "ckpt_save": frozenset({"step", "path"}),
     "ckpt_restore": frozenset({"step", "path"}),
     "repartition": frozenset({"detail"}),
+    # resilience layer (train/health.py): one event per enacted ladder
+    # action.  ``stage`` is the ladder rung (0 skip, 1 damping, 2 forced
+    # refresh, 3 rollback, 4 elastic/repartition), ``action`` the verb.
+    # ``async_miss`` events additionally carry an optional ``reason``
+    # field (timeout | crash | resume | dropped) — optional, so v1 logs
+    # stay valid.
+    "remediation": frozenset({"step", "stage", "action", "detail"}),
     # serving
     "serve_request": frozenset({"uid", "wait_s", "total_s", "n_new"}),
 }
@@ -108,9 +115,15 @@ def _fmt_console(ev: dict) -> Optional[str]:
     if t == "sched":
         return f"[train] {ev['detail']}"
     if t == "async_miss":
-        return (f"[train] async landing miss: bucket {ev['bucket']} "
-                f"slots [{ev['lo']},{ev['hi']}) @ step {ev['step']} "
-                f"(landing in-graph)")
+        reason = ev.get("reason", "resume")
+        return (f"[train] async landing miss ({reason}): bucket "
+                f"{ev['bucket']} slots [{ev['lo']},{ev['hi']}) @ step "
+                f"{ev['step']} (landing in-graph)")
+    if t == "remediation":
+        return (f"[train] remediation stage {ev['stage']} "
+                f"({ev['action']}) @ step {ev['step']}: {ev['detail']}")
+    if t == "repartition":
+        return f"[train] repartition: {ev['detail']}"
     return None     # metrics / launch / land / serve: JSONL only
 
 

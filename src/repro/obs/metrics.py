@@ -79,12 +79,22 @@ def catalog_for(opt) -> Tuple[MetricSpec, ...]:
                    "factor slots whose async heavy result landed"),
         MetricSpec("precond/damping_phi", GAUGE,
                    "damping ratio φ_λ at the last step"),
+        # resilience layer (train/health.py) — all zero on healthy runs
+        MetricSpec("health/guard_trips", COUNTER,
+                   "steps the in-graph guard skipped (update reverted)"),
+        MetricSpec("health/grad_nonfinite", COUNTER,
+                   "nonfinite gradient entries seen by the guard"),
+        MetricSpec("health/update_nonfinite", COUNTER,
+                   "nonfinite preconditioned-update entries seen"),
     ]
     for bi, bucket in enumerate(opt.factor_buckets):
         mode = bucket.spec.mode.value
         p = f"bucket{bi}"
         specs.append(MetricSpec(f"{p}/heavy_slots", COUNTER,
                                 f"[{mode}] slots refreshed (inline+landed)"))
+        specs.append(MetricSpec(f"health/{p}/factor_nonfinite", COUNTER,
+                                "nonfinite factor-state entries seen by "
+                                "the guard"))
         if mode == "ns":
             specs.append(MetricSpec(f"{p}/ns_lam", GAUGE,
                                     "mean λ̂ of the last NS refresh"))

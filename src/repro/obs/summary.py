@@ -65,11 +65,30 @@ def summarize(path: str) -> dict:
     lands = [e for e in events if e["type"] == "async_land"]
     misses = [e for e in events if e["type"] == "async_miss"]
     if launches or lands or misses:
+        by_reason: Dict[str, int] = {}
+        for e in misses:
+            r = e.get("reason", "resume")
+            by_reason[r] = by_reason.get(r, 0) + 1
         out["async"] = {
             "launches": len(launches),
             "lands": len(lands),
             "overlapped_lands": sum(bool(e["overlapped"]) for e in lands),
             "misses": len(misses),
+            "miss_reasons": by_reason,
+        }
+
+    # resilience: remediation ladder actions + elastic repartitions
+    remedies = [e for e in events if e["type"] == "remediation"]
+    reparts = [e for e in events if e["type"] == "repartition"]
+    if remedies or reparts:
+        by_action: Dict[str, int] = {}
+        for e in remedies:
+            by_action[e["action"]] = by_action.get(e["action"], 0) + 1
+        out["resilience"] = {
+            "remediations": len(remedies),
+            "actions": by_action,
+            "repartitions": len(reparts),
+            "last": remedies[-1]["detail"] if remedies else None,
         }
 
     saves = [e for e in events if e["type"] == "ckpt_save"]
@@ -110,10 +129,19 @@ def render(s: dict) -> str:
                          f"[{kind}]")
     a = s.get("async")
     if a:
+        reasons = ", ".join(f"{k}={v}" for k, v in
+                            sorted(a.get("miss_reasons", {}).items()))
         lines.append(f"async pipeline: {a['launches']} launches, "
                      f"{a['lands']} lands "
                      f"({a['overlapped_lands']} overlapped), "
-                     f"{a['misses']} misses")
+                     f"{a['misses']} misses"
+                     + (f" [{reasons}]" if reasons else ""))
+    r = s.get("resilience")
+    if r:
+        acts = ", ".join(f"{k}={v}" for k, v in sorted(r["actions"].items()))
+        lines.append(f"resilience: {r['remediations']} remediations"
+                     + (f" ({acts})" if acts else "")
+                     + f", {r['repartitions']} repartitions")
     c = s.get("checkpoint")
     if c:
         lines.append(f"checkpoints: {c['saves']} saved, "

@@ -1,0 +1,217 @@
+"""Deterministic seed-driven fault injection for the training stack.
+
+Generalizes ``elastic.FailureInjector`` (which only knew "raise at step
+k") into a :class:`ChaosMonkey` that can inject every fault class the
+resilience layer claims to survive:
+
+  ``nan_grad``          — poison the batch with NaN so the backward pass
+                          produces nonfinite grads (stage-0 skip, then
+                          damping escalation / forced refresh).
+  ``corrupt_inflight``  — overwrite the in-flight snapshot buffers with
+                          NaN and force their ``live`` flags on, so the
+                          next scheduled landing tries to swap poison
+                          into the factor states (guard reverts it).
+  ``drop_landing``      — discard the async runner's pending futures:
+                          results never arrive, the in-graph fallback
+                          recomputes from the snapshot (numerics-safe —
+                          ``heavy_from_snapshot`` is pure).
+  ``hang_landing``      — replace pending futures with never-completing
+                          ones: exercises the landing *deadline* (the
+                          pre-PR8 ``fut.result()`` blocked forever).
+  ``worker_death``      — replace pending futures with ones that raise:
+                          exercises the crash-miss path + pool respawn.
+  ``host_loss``         — raise ``RuntimeError`` out of the step loop
+                          (``.check`` is interface-compatible with
+                          ``elastic.FailureInjector``, so the same plan
+                          drives ``ElasticRunner`` restarts).
+  ``truncate_ckpt``     — truncate the newest snapshot's array file on
+                          disk: exercises checksum verification and
+                          ``restore_latest_healthy``'s ring walk.
+
+Fault plans are explicit (a tuple of :class:`Fault`) or derived from a
+seed via :meth:`ChaosMonkey.from_seed` — ``numpy.random.default_rng``
+only, so a plan is a pure function of ``(seed, n_steps, kinds)`` and a
+chaos test failure reproduces exactly.  Everything injected is recorded
+in ``self.injected`` for assertions.
+"""
+from __future__ import annotations
+
+import concurrent.futures
+import dataclasses
+import os
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+KINDS = ("nan_grad", "corrupt_inflight", "drop_landing", "hang_landing",
+         "worker_death", "host_loss", "truncate_ckpt")
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    step: int
+    kind: str
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"expected one of {KINDS}")
+
+
+class _DeadFuture:
+    """Stand-in for a future whose worker thread died: ``.result``
+    raises immediately, whatever the timeout."""
+
+    def result(self, timeout=None):
+        raise RuntimeError("chaos: injected worker death")
+
+    def done(self):
+        return True
+
+    def cancel(self):
+        return True
+
+
+def _hung_future():
+    # A bare, never-completed Future: ``.result(timeout)`` raises
+    # TimeoutError after the deadline, ``.result()`` blocks forever —
+    # exactly the failure mode the landing deadline exists for.
+    return concurrent.futures.Future()
+
+
+class ChaosMonkey:
+    """Deterministic fault injector; hooks are called by the trainer
+    (``loop.run_kfac_training``) and by tests.
+
+    Every hook is a no-op unless the plan names a fault for that step,
+    so a ChaosMonkey with an empty plan is inert.
+    """
+
+    def __init__(self, faults: Sequence[Fault] = ()):
+        self.faults: Tuple[Fault, ...] = tuple(faults)
+        self.injected: List[Tuple[int, str]] = []
+
+    @classmethod
+    def from_seed(cls, seed: int, n_steps: int,
+                  kinds: Sequence[str] = ("nan_grad",),
+                  n_faults: int = 3, first: int = 1) -> "ChaosMonkey":
+        """Derive a reproducible plan: ``n_faults`` distinct steps in
+        ``[first, n_steps)``, kinds drawn uniformly from ``kinds``."""
+        rng = np.random.default_rng(seed)
+        lo, hi = int(first), int(n_steps)
+        if hi <= lo:
+            return cls(())
+        steps = rng.choice(np.arange(lo, hi),
+                           size=min(int(n_faults), hi - lo),
+                           replace=False)
+        picks = rng.choice(np.asarray(list(kinds)), size=len(steps))
+        return cls(tuple(Fault(int(s), str(k))
+                         for s, k in sorted(zip(steps, picks))))
+
+    # -- plan queries -------------------------------------------------------
+    def _hits(self, step: int, kind: str) -> bool:
+        return any(f.step == step and f.kind == kind for f in self.faults)
+
+    def _mark(self, step: int, kind: str) -> None:
+        self.injected.append((int(step), kind))
+
+    # -- data-path hooks ----------------------------------------------------
+    def corrupt_batch(self, step: int, batch):
+        """``nan_grad``: fill every floating leaf of the batch with NaN
+        (needs a float-input task, e.g. the regression MLPs the chaos
+        tier trains)."""
+        if not self._hits(step, "nan_grad"):
+            return batch
+        self._mark(step, "nan_grad")
+        return jax.tree_util.tree_map(
+            lambda x: (jnp.full_like(x, jnp.nan)
+                       if jnp.issubdtype(jnp.asarray(x).dtype,
+                                         jnp.floating) else x),
+            batch)
+
+    def corrupt_state(self, step: int, state):
+        """``corrupt_inflight``: NaN out every in-flight snapshot buffer
+        and force its live flags on, so scheduled landings must cope
+        with a fully poisoned snapshot."""
+        if not self._hits(step, "corrupt_inflight"):
+            return state
+        opt_state = getattr(state, "opt", state)
+        if not opt_state.inflight:
+            return state
+        self._mark(step, "corrupt_inflight")
+        # NaN every float plane of the snapshot (U/D for Brand replays,
+        # M for EVD/RSVD/NS recomputes) so the poison survives whichever
+        # source heavy_from_snapshot reads for the bucket's mode.
+        inflight = {
+            key: dataclasses.replace(
+                buf,
+                U=jnp.full_like(buf.U, jnp.nan),
+                D=jnp.full_like(buf.D, jnp.nan),
+                M=jnp.full_like(buf.M, jnp.nan),
+                live=jnp.ones_like(buf.live))
+            for key, buf in opt_state.inflight.items()}
+        opt_state = opt_state._replace(inflight=inflight)
+        if opt_state is state:
+            return opt_state
+        return state._replace(opt=opt_state)
+
+    # -- async-runner hooks -------------------------------------------------
+    def harass_runner(self, step: int, runner) -> None:
+        """Apply ``drop_landing`` / ``hang_landing`` / ``worker_death``
+        to an ``AsyncInverseRunner``'s pending futures (call *before*
+        ``runner.landing``)."""
+        if runner is None:
+            return
+        if self._hits(step, "drop_landing") and runner._pending:
+            self._mark(step, "drop_landing")
+            runner.drop_pending(reason="dropped")
+        if self._hits(step, "hang_landing") and runner._pending:
+            self._mark(step, "hang_landing")
+            for key in list(runner._pending):
+                runner._pending[key] = _hung_future()
+        if self._hits(step, "worker_death") and runner._pending:
+            self._mark(step, "worker_death")
+            for key in list(runner._pending):
+                runner._pending[key] = _DeadFuture()
+
+    # -- host / disk hooks --------------------------------------------------
+    def check(self, step: int) -> None:
+        """``host_loss``: raise out of the step loop (same contract as
+        ``elastic.FailureInjector.check``)."""
+        if self._hits(step, "host_loss"):
+            self._mark(step, "host_loss")
+            raise RuntimeError(f"injected node failure at step {step}")
+
+    def corrupt_ckpt(self, step: int, directory: Optional[str]) -> None:
+        """``truncate_ckpt``: truncate the newest snapshot's array file
+        in ``directory`` to half its size (a torn write)."""
+        if directory is None or not self._hits(step, "truncate_ckpt"):
+            return
+        if truncate_latest(directory):
+            self._mark(step, "truncate_ckpt")
+
+    # -- bookkeeping --------------------------------------------------------
+    def summary(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for _, kind in self.injected:
+            out[kind] = out.get(kind, 0) + 1
+        return out
+
+
+def truncate_latest(directory: str) -> bool:
+    """Truncate the newest checkpoint's ``arrays.npz`` to half its size,
+    simulating a torn write / partial disk.  Returns True if a file was
+    truncated."""
+    from repro.train import checkpoint as ckpt_lib
+    step = ckpt_lib.latest_step(directory)
+    if step is None:
+        return False
+    path = os.path.join(directory, ckpt_lib._step_dir(step), "arrays.npz")
+    if not os.path.exists(path):
+        return False
+    size = os.path.getsize(path)
+    with open(path, "r+b") as f:
+        f.truncate(max(1, size // 2))
+    return True

@@ -20,7 +20,9 @@ import queue
 import shutil
 import threading
 import time
-from typing import Any, Dict, Optional, Tuple
+import zipfile
+import zlib
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -39,17 +41,31 @@ SEP = "|"
 #:                       — NS λ̂/residual promoted out of the D[:2] stash,
 #:                       EVD/RSVD truncation mass — one (AUX_WIDTH,) leaf
 #:                       per factor side)
+#:   v5  PR 8           (manifest gains per-array crc32 ``checksums``,
+#:                       verified on restore; pytree unchanged — v4
+#:                       checkpoints restore fine, just unverified)
 #: Leaf-compatible additions (e.g. inflight == {} when async is off)
 #: restore across versions; the schema is used to *explain* mismatches,
 #: not to reject compatible checkpoints.
-SCHEMA_VERSION = 4
+SCHEMA_VERSION = 5
 
 _SCHEMA_HISTORY = {
     1: "seed..PR2 pytree (KfacState without `phase`)",
     2: "PR3 pytree (added KfacState.phase)",
     3: "PR5 pytree (added KfacState.inflight async buffers)",
     4: "PR7 pytree (added KFactorState.aux heavy-op diagnostics)",
+    5: "PR8 manifest (per-array crc32 checksums; same pytree as v4)",
 }
+
+
+def _step_dir(step: int) -> str:
+    return f"step_{step:09d}"
+
+
+def _digest(arr: np.ndarray) -> str:
+    """crc32 over the raw bytes (stdlib-only; this is torn-write/bit-rot
+    detection, not cryptographic integrity)."""
+    return f"{zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xffffffff:08x}"
 
 
 def _key_str(k) -> str:
@@ -86,7 +102,7 @@ def save(directory: str, step: int, tree, extra: Optional[dict] = None
          ) -> str:
     """Synchronous checkpoint write with atomic publish."""
     os.makedirs(directory, exist_ok=True)
-    name = f"step_{step:09d}"
+    name = _step_dir(step)
     tmp = os.path.join(directory, f".tmp_{name}_{os.getpid()}")
     final = os.path.join(directory, name)
     os.makedirs(tmp, exist_ok=True)
@@ -98,6 +114,7 @@ def save(directory: str, step: int, tree, extra: Optional[dict] = None
         "time": time.time(),
         "n_arrays": len(arrays),
         "bytes": int(sum(a.nbytes for a in arrays.values())),
+        "checksums": {k: _digest(a) for k, a in arrays.items()},
         "extra": extra or {},
         "done": True,
     }
@@ -122,8 +139,11 @@ def latest_step(directory: str) -> Optional[int]:
     man = os.path.join(directory, name, "manifest.json")
     if not os.path.exists(man):
         return None
-    with open(man) as f:
-        m = json.load(f)
+    try:
+        with open(man) as f:
+            m = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return None
     return m["step"] if m.get("done") else None
 
 
@@ -132,6 +152,15 @@ class SchemaMismatchError(RuntimeError):
     raised with the manifest schema versions so the operator knows
     whether to migrate or re-run (instead of the opaque KeyError the
     raw leaf lookup produces)."""
+
+
+class CheckpointCorruptionError(RuntimeError):
+    """A checkpoint's on-disk bytes are damaged — truncated archive,
+    unreadable manifest, or an array whose crc32 disagrees with the
+    manifest's recorded digest.  The message names the offending file
+    (and, for digest mismatches, expected vs found), so the operator
+    knows *which* snapshot to delete; ``restore_latest_healthy`` walks
+    past these automatically."""
 
 
 def restore(directory: str, template, step: Optional[int] = None,
@@ -147,11 +176,39 @@ def restore(directory: str, template, step: Optional[int] = None,
         step = latest_step(directory)
         if step is None:
             raise FileNotFoundError(f"no checkpoint in {directory}")
-    path = os.path.join(directory, f"step_{step:09d}")
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
-    with np.load(os.path.join(path, "arrays.npz")) as z:
-        arrays = {k: z[k] for k in z.files}
+    path = os.path.join(directory, _step_dir(step))
+    man_path = os.path.join(path, "manifest.json")
+    try:
+        with open(man_path) as f:
+            manifest = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise CheckpointCorruptionError(
+            f"checkpoint manifest {man_path} is unreadable ({e}); the "
+            f"snapshot is damaged — delete {path} or use "
+            f"restore_latest_healthy() to fall back to an older one."
+        ) from e
+    npz_path = os.path.join(path, "arrays.npz")
+    try:
+        with np.load(npz_path) as z:
+            arrays = {k: z[k] for k in z.files}
+    except (OSError, ValueError, zipfile.BadZipFile, EOFError) as e:
+        raise CheckpointCorruptionError(
+            f"checkpoint archive {npz_path} is truncated or unreadable "
+            f"({type(e).__name__}: {e}); likely a torn write — delete "
+            f"{path} or use restore_latest_healthy() to fall back."
+        ) from e
+    for key, expect in manifest.get("checksums", {}).items():
+        if key not in arrays:
+            raise CheckpointCorruptionError(
+                f"checkpoint {npz_path}: array {key!r} listed in the "
+                f"manifest is missing from the archive (torn write).")
+        found = _digest(arrays[key])
+        if found != expect:
+            raise CheckpointCorruptionError(
+                f"checkpoint {npz_path}: array {key!r} failed integrity "
+                f"check — expected crc32 {expect}, found {found}.  The "
+                f"snapshot is corrupt; delete {path} or use "
+                f"restore_latest_healthy() to fall back.")
     try:
         tree = _unflatten_into(template, arrays)
     except KeyError as e:
@@ -172,6 +229,54 @@ def restore(directory: str, template, step: Optional[int] = None,
         tree = jax.tree_util.tree_map(
             lambda x, s: jax.device_put(x, s), tree, shardings)
     return tree, manifest
+
+
+def available_steps(directory: str) -> List[int]:
+    """All snapshot step numbers present on disk, oldest first (whether
+    healthy or not — in-progress ``.tmp_`` dirs excluded)."""
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for d in os.listdir(directory):
+        if d.startswith("step_"):
+            try:
+                out.append(int(d[len("step_"):]))
+            except ValueError:
+                continue
+    return sorted(out)
+
+
+def restore_latest_healthy(directory: str, template,
+                           shardings=None) -> Tuple[Any, dict]:
+    """Restore the newest snapshot that passes integrity verification,
+    walking the kept ring past corrupted/truncated/mismatched ones (the
+    rollback stage of the remediation ladder, and the elastic restart
+    path when the newest write was torn by the failure itself).
+
+    The returned manifest carries ``skipped_corrupt``: a list of
+    ``{step, error}`` records for every newer snapshot that was walked
+    past, so the rollback telemetry can say what was discarded.  Raises
+    ``FileNotFoundError`` if no healthy snapshot exists at all."""
+    skipped: List[dict] = []
+    for step in reversed(available_steps(directory)):
+        try:
+            tree, manifest = restore(directory, template, step=step,
+                                     shardings=shardings)
+        except (CheckpointCorruptionError, SchemaMismatchError,
+                OSError, KeyError, ValueError) as e:
+            skipped.append({"step": step,
+                            "error": f"{type(e).__name__}: {e}"})
+            continue
+        if not manifest.get("done"):
+            skipped.append({"step": step, "error": "manifest not done"})
+            continue
+        manifest = dict(manifest)
+        manifest["skipped_corrupt"] = skipped
+        return tree, manifest
+    detail = "; ".join(f"step {s['step']}: {s['error'].splitlines()[0]}"
+                       for s in skipped) or "directory empty"
+    raise FileNotFoundError(
+        f"no healthy checkpoint in {directory} ({detail})")
 
 
 def prune(directory: str, keep: int = 3) -> None:

@@ -25,7 +25,33 @@ import jax
 from repro.launch import mesh as mesh_lib
 from repro.train import checkpoint as ckpt_lib
 
+
+def device_ladder(n_devices: Optional[int] = None,
+                  axes: Tuple[str, ...] = ("data",)
+                  ) -> Tuple[Tuple[Tuple[int, ...], Tuple[str, ...]], ...]:
+    """The recovery ladder derived from the devices that actually exist:
+    full capacity, then successive halvings down to a single device
+    (first extra axis absorbs the count; trailing axes get 1).  This
+    replaces the old hardcoded pod-scale table, which never matched the
+    process's real topology — on an 8-device host every rung of that
+    table failed ``make_mesh`` and collapsed straight to ``(1,)``,
+    skipping the surviving-capacity meshes entirely."""
+    n = len(jax.devices()) if n_devices is None else int(n_devices)
+    ladder = []
+    k = max(1, n)
+    while True:
+        shape = (k,) + (1,) * (len(axes) - 1)
+        ladder.append((shape, tuple(axes)))
+        if k == 1:
+            break
+        k //= 2
+    return tuple(ladder)
+
+
 #: (mesh shape, axis names), largest first — the recovery ladder.
+#: Kept as a module attribute for callers that pin an explicit ladder;
+#: :class:`ElasticRunner` defaults to :func:`device_ladder` (the real
+#: topology) when ``meshes`` is not given.
 FALLBACK_MESHES: Sequence[Tuple[Tuple[int, ...], Tuple[str, ...]]] = (
     ((2, 16, 16), ("pod", "data", "model")),
     ((16, 16), ("data", "model")),
@@ -54,6 +80,14 @@ class ElasticRunner:
     make_state:   (mesh) -> state           (init or cold start)
     make_step:    (mesh) -> step_fn(state, step_idx) -> state
     state_shardings: (state_template, mesh) -> shardings pytree (restore)
+
+    ``meshes=None`` (the default) derives the ladder from the devices
+    that actually exist (:func:`device_ladder`).  A ``writer``
+    (:class:`repro.obs.TelemetryWriter`) receives a ``repartition``
+    event per mesh change and a stage-4 ``remediation`` event per
+    restart, joining the health layer's remediation stream.  Restores
+    go through ``restore_latest_healthy`` — a snapshot torn by the
+    failure itself is walked past, not fatal.
     """
     ckpt_dir: str
     make_state: Callable
@@ -61,18 +95,32 @@ class ElasticRunner:
     state_shardings: Optional[Callable] = None
     ckpt_every: int = 10
     keep: int = 2
-    meshes: Sequence = FALLBACK_MESHES
+    meshes: Optional[Sequence] = None
     injector: Optional[FailureInjector] = None
+    writer: Optional[object] = None
+
+    def _ladder(self) -> Sequence:
+        return self.meshes if self.meshes is not None else device_ladder()
+
+    def _emit(self, etype: str, **fields):
+        if self.writer is not None:
+            self.writer.emit(etype, **fields)
 
     def run(self, n_steps: int, start_mesh_idx: int = 0) -> Tuple:
+        ladder = self._ladder()
         mesh_idx = start_mesh_idx
         restarts = 0
         while True:
-            mesh = self._make_mesh(mesh_idx)
+            mesh = self._make_mesh(ladder, mesh_idx)
             state = self._restore_or_init(mesh)
             step_fn = self.make_step(mesh)
             start = ckpt_lib.latest_step(self.ckpt_dir)
             k0 = 0 if start is None else start + 1
+            mesh_desc = dict(zip(mesh.axis_names, mesh.devices.shape))
+            self._emit("repartition",
+                       detail=f"mesh {mesh_desc} "
+                              f"({mesh.devices.size} devices), resuming "
+                              f"at step {k0}")
             ck = ckpt_lib.AsyncCheckpointer(self.ckpt_dir, keep=self.keep)
             try:
                 for k in range(k0, n_steps):
@@ -83,16 +131,23 @@ class ElasticRunner:
                         ck.submit(k, state, extra={"mesh_idx": mesh_idx})
                 ck.close()
                 return state, {"restarts": restarts, "mesh_idx": mesh_idx}
-            except RuntimeError:
+            except RuntimeError as e:
                 # failure: drop to the next smaller healthy mesh and resume
-                ck.wait()
-                ck.close()
+                try:
+                    ck.wait()
+                    ck.close()
+                except RuntimeError:
+                    pass        # torn async write; restore walks past it
                 restarts += 1
-                if mesh_idx + 1 < len(self.meshes):
+                self._emit("remediation", step=0, stage=4,
+                           action="repartition",
+                           detail=f"restart #{restarts} after {e}; "
+                                  f"falling back down the mesh ladder")
+                if mesh_idx + 1 < len(ladder):
                     mesh_idx += 1
 
-    def _make_mesh(self, idx: int):
-        shape, axes = self.meshes[idx]
+    def _make_mesh(self, ladder, idx: int):
+        shape, axes = ladder[idx]
         try:
             return mesh_lib.make_mesh(shape, axes)
         except ValueError:
@@ -106,5 +161,9 @@ class ElasticRunner:
             return template
         sh = (self.state_shardings(template, mesh)
               if self.state_shardings else None)
-        state, _ = ckpt_lib.restore(self.ckpt_dir, template, step, sh)
+        try:
+            state, _ = ckpt_lib.restore_latest_healthy(
+                self.ckpt_dir, template, shardings=sh)
+        except FileNotFoundError:
+            return template
         return state

@@ -21,7 +21,8 @@ from __future__ import annotations
 import functools
 import time
 from concurrent.futures import ThreadPoolExecutor
-from typing import Any, Callable, Dict, NamedTuple, Optional
+from concurrent.futures import TimeoutError as FuturesTimeout
+from typing import Any, Callable, Dict, List, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -136,24 +137,40 @@ class AsyncInverseRunner:
     lands in-graph from the restored snapshot — the graceful
     re-snapshot-free resume path.
 
-    ``health`` counts launched / landed / missed ranges over the runner's
-    lifetime ("missed" = a land range with no pending future, i.e. the
-    overlap pipeline fell back to in-graph recompute).  A
+    Landings are **bounded**: ``landing`` waits at most the deadline —
+    ``deadline_s`` when set, else ``deadline_factor`` × the median
+    observed heavy time (floored at ``min_deadline_s``) — then treats
+    the range as missed, cancels the future, **respawns the worker
+    pool**, and lands in-graph from the snapshot.  Because
+    ``heavy_from_snapshot`` is pure and the in-graph fallback reads the
+    same snapshot with the same keys, a miss (timeout, worker crash, or
+    dropped/resumed pipeline) is a perf event, never a numerics event.
+
+    ``health`` counts launched / landed / missed ranges and pool
+    respawns over the runner's lifetime, with ``miss_reasons`` split by
+    cause (``timeout`` / ``crash`` / ``dropped`` / ``resume``).  A
     :class:`repro.obs.TelemetryWriter` passed as ``writer`` additionally
     gets per-range ``async_launch`` / ``async_land`` / ``async_miss``
-    events.
+    events (misses carry their ``reason``).
     """
 
     def __init__(self, opt: kfac_lib.Kfac, device=None, home=None,
-                 writer=None):
+                 writer=None, deadline_s: Optional[float] = None,
+                 deadline_factor: float = 4.0, min_deadline_s: float = 5.0):
         self.opt = opt
         self.device = device
         self.home = home if home is not None else jax.devices()[0]
         self.writer = writer
-        self.health = {"launched": 0, "landed": 0, "missed": 0}
+        self.deadline_s = deadline_s
+        self.deadline_factor = deadline_factor
+        self.min_deadline_s = min_deadline_s
+        self.health = {"launched": 0, "landed": 0, "missed": 0,
+                       "respawns": 0, "miss_reasons": {}}
         self._pool = ThreadPoolExecutor(max_workers=2)
         self._fns: Dict = {}
         self._pending: Dict = {}
+        self._dropped: Dict = {}        # range -> miss reason tombstone
+        self._durations: List[float] = []
 
     @classmethod
     def for_opt(cls, opt: kfac_lib.Kfac,
@@ -177,11 +194,56 @@ class AsyncInverseRunner:
 
     def _run(self, bi: int, count: int, buf_slice):
         with obs_trace.host_span(f"async/heavy/b{bi}"):
+            t0 = time.perf_counter()
             if self.device is not None:
                 buf_slice = jax.device_put(buf_slice, self.device)
             out = jax.device_put(self._fn(bi, count)(buf_slice), self.home)
             jax.block_until_ready(out)
+            self._durations.append(time.perf_counter() - t0)
             return out
+
+    def _deadline(self) -> float:
+        if self.deadline_s is not None:
+            return self.deadline_s
+        if self._durations:
+            med = sorted(self._durations)[len(self._durations) // 2]
+            return max(self.min_deadline_s, self.deadline_factor * med)
+        # No completed heavy yet (first landing may include compile):
+        # a generous fixed cap still beats the old unbounded block.
+        return max(self.min_deadline_s, 60.0)
+
+    def _respawn(self) -> None:
+        """Replace a hung/crashed worker pool.  Already-running tasks
+        keep their (orphaned) threads; their futures stay pending and
+        will land normally if they eventually complete."""
+        self._pool.shutdown(wait=False, cancel_futures=True)
+        self._pool = ThreadPoolExecutor(max_workers=2)
+        self.health["respawns"] += 1
+
+    def _submit(self, bi: int, count: int, buf_slice):
+        try:
+            return self._pool.submit(self._run, bi, count, buf_slice)
+        except RuntimeError:            # pool died between steps
+            self._respawn()
+            return self._pool.submit(self._run, bi, count, buf_slice)
+
+    def drop_pending(self, reason: str = "dropped") -> None:
+        """Abandon every pending future (remediation refresh, elastic
+        restart): the scheduled landings will miss with ``reason`` and
+        fall back in-graph."""
+        for key, fut in list(self._pending.items()):
+            fut.cancel()
+            self._dropped[key] = reason
+        self._pending.clear()
+
+    def _miss(self, key, reason: str, step) -> None:
+        self.health["missed"] += 1
+        reasons = self.health["miss_reasons"]
+        reasons[reason] = reasons.get(reason, 0) + 1
+        if self.writer is not None:
+            bi, lo, hi = key
+            self.writer.emit("async_miss", step=int(step or 0),
+                             bucket=bi, lo=lo, hi=hi, reason=reason)
 
     def launch(self, opt_state, work, step: Optional[int] = None) -> None:
         for bi, ranges in enumerate(work.launch):
@@ -190,8 +252,8 @@ class AsyncInverseRunner:
             buf = opt_state.inflight[str(bi)]
             for lo, hi in ranges:
                 buf_slice = jax.tree_util.tree_map(lambda x: x[lo:hi], buf)
-                self._pending[(bi, lo, hi)] = self._pool.submit(
-                    self._run, bi, hi - lo, buf_slice)
+                self._pending[(bi, lo, hi)] = self._submit(
+                    bi, hi - lo, buf_slice)
                 self.health["launched"] += 1
                 if self.writer is not None:
                     self.writer.emit("async_launch", step=int(step or 0),
@@ -204,23 +266,35 @@ class AsyncInverseRunner:
                 continue
             results = []
             for lo, hi in ranges:
-                fut = self._pending.pop((bi, lo, hi), None)
+                key = (bi, lo, hi)
+                fut = self._pending.pop(key, None)
                 if fut is None:
-                    # Fresh resume mid-lag (or a dropped launch): land
-                    # in-graph from the restored snapshot.
+                    # Fresh resume mid-lag, or a deliberately dropped
+                    # pipeline: land in-graph from the snapshot.
                     results.append(None)
-                    self.health["missed"] += 1
-                    if self.writer is not None:
-                        self.writer.emit("async_miss", step=int(step or 0),
-                                         bucket=bi, lo=lo, hi=hi)
-                else:
-                    overlapped = fut.done()
-                    results.append(fut.result())
-                    self.health["landed"] += 1
-                    if self.writer is not None:
-                        self.writer.emit("async_land", step=int(step or 0),
-                                         bucket=bi, lo=lo, hi=hi,
-                                         overlapped=bool(overlapped))
+                    self._miss(key, self._dropped.pop(key, "resume"),
+                               step)
+                    continue
+                overlapped = fut.done()
+                try:
+                    res = fut.result(timeout=self._deadline())
+                except FuturesTimeout:
+                    fut.cancel()
+                    results.append(None)
+                    self._miss(key, "timeout", step)
+                    self._respawn()
+                    continue
+                except BaseException:
+                    results.append(None)
+                    self._miss(key, "crash", step)
+                    self._respawn()
+                    continue
+                results.append(res)
+                self.health["landed"] += 1
+                if self.writer is not None:
+                    self.writer.emit("async_land", step=int(step or 0),
+                                     bucket=bi, lo=lo, hi=hi,
+                                     overlapped=bool(overlapped))
             out[str(bi)] = tuple(results)
         return out or None
 
@@ -248,7 +322,9 @@ def run_kfac_training(loss_fn, opt: kfac_lib.Kfac, params, batches,
                       callback=None, mesh=None, curvature_axis=None,
                       state: Optional[TrainState] = None,
                       overlap: bool = False, writer=None,
-                      metrics_every: int = 0):
+                      metrics_every: int = 0, health=None, policy=None,
+                      chaos=None, ckpt_dir: Optional[str] = None,
+                      ckpt_every: int = 5, ckpt_keep: int = 3):
     """Python-level driver: dispatches the statically-masked step variants
     per the paper's T_* schedules (work scheduler; ``cfg.stagger`` phases
     heavy work; ``cfg.async_heavy``/``heavy_lag`` pipeline it).  ``mesh``
@@ -272,10 +348,25 @@ def run_kfac_training(loss_fn, opt: kfac_lib.Kfac, params, batches,
     ``metrics_every > 0`` additionally attaches an in-graph
     :class:`repro.obs.Meter` flushing the curvature-health metric buffer
     to the writer every that many steps.  Both are numerically inert.
+
+    ``health`` (truthy, or a :class:`repro.train.health.HealthConfig`)
+    swaps in the guarded resilient step and drives the staged
+    remediation ladder: skip → damping escalation → forced heavy
+    refresh → rollback (the last needs ``ckpt_dir``).  A caller-built
+    :class:`~repro.train.health.RemediationPolicy` can be passed as
+    ``policy`` for inspection; otherwise one is created internally.  A
+    healthy run with health on is bit-for-bit identical to one with it
+    off (tests/test_chaos.py).  ``chaos`` (a
+    :class:`repro.train.chaos.ChaosMonkey`) injects its fault plan into
+    the loop's hooks.  ``ckpt_dir`` checkpoints every ``ckpt_every``
+    healthy steps (pruned to ``ckpt_keep``) and is where rollbacks
+    restore from, walking past corrupted snapshots.
     Returns (final TrainState, losses)."""
     if mesh is not None and curvature_axis is not None:
         from repro.distributed import curvature as curvature_lib
         curvature_lib.CurvatureEngine.for_kfac(opt, mesh, curvature_axis)
+    from repro.train import checkpoint as ckpt_lib
+    from repro.train import health as health_lib
     sched = opt.scheduler()
     k_off = 0
     if state is None:
@@ -291,26 +382,89 @@ def run_kfac_training(loss_fn, opt: kfac_lib.Kfac, params, batches,
         kinds = {s.name: s.kind for s in catalog}
         meter = obs_metrics.Meter(catalog, writer.metrics_sink(kinds),
                                   every=metrics_every)
-    step_fn = make_scheduled_kfac_step(loss_fn, opt, n_tokens, meter=meter)
+    if health or policy is not None:
+        hcfg = health if isinstance(health, health_lib.HealthConfig) \
+            else None
+        if policy is None:
+            policy = health_lib.RemediationPolicy(hcfg, writer=writer)
+        step_fn = health_lib.make_resilient_kfac_step(
+            loss_fn, opt, n_tokens, health=policy.cfg, meter=meter)
+    else:
+        step_fn = make_scheduled_kfac_step(loss_fn, opt, n_tokens,
+                                           meter=meter)
     if jit:
         step_fn = jax.jit(step_fn, static_argnames=("work",))
     mbuf = meter.init() if meter is not None else None
     losses = []
     for k, batch in enumerate(batches):
-        work = sched.work(k_off + k)
-        landing = runner.landing(work, step=k_off + k) \
+        kk = k_off + k
+        # Chaos faults are keyed on the wall-clock loop iteration ``k``,
+        # not the schedule step ``kk`` — a rollback re-anchors kk into
+        # the past, and external faults must not replay with it.
+        if chaos is not None:
+            chaos.check(k)                        # host_loss raises here
+            batch = chaos.corrupt_batch(k, batch)
+            state = chaos.corrupt_state(k, state)
+        work = sched.work(kk)
+        if policy is not None and policy.take_refresh():
+            # Stage 2: abandon the (possibly poisoned) pipeline and
+            # re-establish the inverse rep from the live M this step.
+            work = opt.remedial_work()
+            state = state._replace(opt=opt.clear_inflight(state.opt))
+            if runner is not None:
+                runner.drop_pending(reason="dropped")
+        if runner is not None and chaos is not None:
+            chaos.harass_runner(k, runner)
+        landing = runner.landing(work, step=kk) \
             if runner is not None else None
         t0 = time.perf_counter()
-        if meter is None:
+        report = None
+        if policy is not None:
+            scale = jnp.float32(policy.damping_scale)
+            if meter is None:
+                state, loss, report = step_fn(state, batch, work, landing,
+                                              None, scale)
+            else:
+                state, loss, report, mbuf = step_fn(state, batch, work,
+                                                    landing, mbuf, scale)
+        elif meter is None:
             state, loss = step_fn(state, batch, work, landing)
         else:
             state, loss, mbuf = step_fn(state, batch, work, landing, mbuf)
         if runner is not None:
-            runner.launch(state.opt, work, step=k_off + k)
+            runner.launch(state.opt, work, step=kk)
         losses.append(float(loss))
         if writer is not None:
-            writer.emit("step", step=k_off + k, loss=float(loss),
+            writer.emit("step", step=kk, loss=float(loss),
                         dt_s=time.perf_counter() - t0, phase=work.label)
+        faulty = False
+        if policy is not None:
+            rep = {name: float(v) for name, v in
+                   jax.device_get(report).items()}
+            faulty = policy.observe(kk, losses[-1], rep)
+            if policy.take_rollback() and ckpt_dir is not None:
+                # Stage 3: restore the newest snapshot that verifies,
+                # walking past corrupt ones; re-anchor the schedule on
+                # the restored phase so the staggered cadence resumes
+                # without a heavy spike.
+                if runner is not None:
+                    runner.drop_pending(reason="dropped")
+                state, man = ckpt_lib.restore_latest_healthy(ckpt_dir,
+                                                             state)
+                k_off = int(jax.device_get(state.opt.phase)) - (k + 1)
+                policy.notify_rollback(kk, man["step"], ckpt_dir)
+                if writer is not None:
+                    writer.emit("ckpt_restore", step=int(man["step"]),
+                                path=ckpt_dir)
+                faulty = False          # restored state is healthy
+        if (ckpt_dir is not None and ckpt_every > 0 and not faulty
+                and kk % ckpt_every == 0):
+            path = ckpt_lib.save(ckpt_dir, kk, state)
+            ckpt_lib.prune(ckpt_dir, keep=ckpt_keep)
+            if writer is not None:
+                writer.emit("ckpt_save", step=kk, path=path)
+            if chaos is not None:
+                chaos.corrupt_ckpt(k, ckpt_dir)
         if callback is not None:
             callback(k, state, loss)
     if meter is not None:

@@ -33,16 +33,32 @@ class Action(enum.Enum):
 
 @dataclasses.dataclass
 class StragglerDetector:
+    """``writer`` (a :class:`repro.obs.TelemetryWriter`) mirrors every
+    enacted Action into the resilience layer's remediation event stream
+    (stage 4 — elastic/topology actions, same rung as ElasticRunner's
+    repartitions), so ``repro.obs.summary`` counts straggler mitigations
+    next to health-guard remediations."""
     ratio: float = 1.5           # slow if dt > ratio × fleet median
     patience: int = 3            # consecutive slow steps → DROP_STATS
     rebalance_after: int = 8     # consecutive slow steps → REBALANCE
     warmup: int = 3              # steps before any flagging
+    writer: object = None
 
     def __post_init__(self):
         self._streaks: Dict[str, int] = {}
         self._n = 0
         self._median_ema: float = 0.0
         self.events: List[dict] = []
+
+    def _record(self, step: int, host: str, action: str, dt: float,
+                med: float) -> None:
+        self.events.append({"step": step, "host": host,
+                            "action": action, "dt": dt})
+        if self.writer is not None:
+            self.writer.emit(
+                "remediation", step=int(step), stage=4, action=action,
+                detail=f"straggler {host}: {dt * 1e3:.0f}ms vs fleet "
+                       f"median {med * 1e3:.0f}ms")
 
     def observe_step(self, step: int, times: Dict[str, float]
                      ) -> Dict[str, Action]:
@@ -57,13 +73,11 @@ class StragglerDetector:
             streak = self._streaks.get(host, 0) + 1 if slow else 0
             self._streaks[host] = streak
             if streak >= self.rebalance_after:
-                self.events.append({"step": step, "host": host,
-                                    "action": "rebalance", "dt": dt})
+                self._record(step, host, "rebalance", dt, med)
                 self._streaks[host] = 0
                 out[host] = Action.REBALANCE
             elif streak >= self.patience:
-                self.events.append({"step": step, "host": host,
-                                    "action": "drop_stats", "dt": dt})
+                self._record(step, host, "drop_stats", dt, med)
                 out[host] = Action.DROP_STATS
             else:
                 out[host] = Action.NONE

@@ -1,0 +1,600 @@
+"""Chaos tier: the resilience layer (repro/train/health.py + chaos.py).
+
+Covers the two load-bearing acceptance claims:
+
+  1. **Inertness** — a healthy run with health guards on is bit-for-bit
+     identical to one with them off, across every policy variant, the
+     async overlapped pipeline, and the 8-device sharded engine.
+  2. **Recovery** — every injected fault class ends in a documented
+     remediation: NaN grads → skip/escalate/refresh ladder; corrupted
+     in-flight buffers → guarded in-graph fallback; hung / dead / dropped
+     async workers → bounded-deadline miss + pool respawn; host loss
+     mid-stagger-cycle → repartition on the shrunk mesh with the heavy
+     cadence resumed from ``KfacState.phase`` (no warmup spike);
+     truncated checkpoints → checksum detection + ring rollback.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+# must precede backend init in THIS process; harmless if jax was already
+# initialized with one device (the mesh tests then skip)
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kfac as kfac_lib
+from repro.launch import mesh as mesh_lib
+from repro.obs import events as ev_lib
+from repro.obs import summary as sum_lib
+from repro.train import chaos as chaos_lib
+from repro.train import checkpoint as ckpt_lib
+from repro.train import elastic, loop, straggler
+from repro.train.chaos import ChaosMonkey, Fault
+from repro.train.health import (HealthConfig, RemediationPolicy,
+                                STAGE_ELASTIC)
+
+from test_obs import (N_BS, _batches, _cfg, _make_mlp, _marked_variants,
+                      _mlp_loss, _assert_identical)
+
+
+def _train(variant, steps=9, health=None, policy_obj=None, overlap=False,
+           mesh=None, curvature_axis=None, writer=None, metrics_every=0,
+           chaos=None, ckpt_dir=None, ckpt_every=5, state=None,
+           batches=None, **cfg_kw):
+    params, taps = _make_mlp()
+    opt = kfac_lib.Kfac(_cfg(variant, **cfg_kw), taps)
+    out = loop.run_kfac_training(
+        _mlp_loss, opt, None if state is not None else params,
+        batches if batches is not None else _batches(steps),
+        n_tokens=N_BS, seed=0, mesh=mesh, curvature_axis=curvature_axis,
+        state=state, overlap=overlap, writer=writer,
+        metrics_every=metrics_every, health=health, policy=policy_obj,
+        chaos=chaos, ckpt_dir=ckpt_dir, ckpt_every=ckpt_every)
+    return out
+
+
+def _all_finite(tree) -> bool:
+    return all(bool(jnp.all(jnp.isfinite(leaf)))
+               for leaf in jax.tree_util.tree_leaves(tree)
+               if jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.floating))
+
+
+# ---------------------------------------------------------------------------
+# fault plans are deterministic and typed
+# ---------------------------------------------------------------------------
+
+class TestChaosMonkey:
+    def test_seeded_plan_is_deterministic_and_in_range(self):
+        a = ChaosMonkey.from_seed(7, 20, kinds=chaos_lib.KINDS, n_faults=5)
+        b = ChaosMonkey.from_seed(7, 20, kinds=chaos_lib.KINDS, n_faults=5)
+        assert a.faults == b.faults
+        assert len(a.faults) == 5
+        assert all(1 <= f.step < 20 and f.kind in chaos_lib.KINDS
+                   for f in a.faults)
+        c = ChaosMonkey.from_seed(8, 20, kinds=chaos_lib.KINDS, n_faults=5)
+        assert a.faults != c.faults        # seed actually drives the plan
+
+    def test_unknown_kind_rejected(self):
+        with pytest.raises(ValueError, match="unknown fault kind"):
+            Fault(3, "meteor_strike")
+
+    def test_empty_plan_is_inert(self):
+        m = ChaosMonkey(())
+        batch = (jnp.ones((2, 3)), jnp.zeros((2,)))
+        out = m.corrupt_batch(5, batch)
+        assert out is batch
+        m.check(5)                          # no raise
+        m.harass_runner(5, None)
+        assert m.injected == [] and m.summary() == {}
+
+    def test_corrupt_batch_nans_float_leaves_only(self):
+        m = ChaosMonkey((Fault(2, "nan_grad"),))
+        x, idx = jnp.ones((4,)), jnp.arange(4)
+        bx, bidx = m.corrupt_batch(2, (x, idx))
+        assert bool(jnp.all(jnp.isnan(bx)))
+        np.testing.assert_array_equal(np.asarray(bidx), np.asarray(idx))
+        assert m.summary() == {"nan_grad": 1}
+
+    def test_host_loss_raises_like_failure_injector(self):
+        m = ChaosMonkey((Fault(4, "host_loss"),))
+        m.check(3)
+        with pytest.raises(RuntimeError, match="injected node failure"):
+            m.check(4)
+
+
+# ---------------------------------------------------------------------------
+# the remediation policy state machine (pure host side)
+# ---------------------------------------------------------------------------
+
+def _report(ok=1.0, **extra):
+    rep = {"ok": ok, "grad_nonfinite": 0.0 if ok else 8.0,
+           "grad_abs_max": 1.0, "update_nonfinite": 0.0,
+           "update_abs_max": 1.0, "bucket0/factor_nonfinite": 0.0}
+    rep.update(extra)
+    return rep
+
+
+class TestRemediationPolicy:
+    def test_ladder_escalates_in_stage_order(self):
+        pol = RemediationPolicy(HealthConfig())
+        for k in range(6):                   # 6-step faulty streak
+            assert pol.observe(k, float("nan"), _report(ok=0.0))
+        # streak 1, 2 → skip + damping escalation; streak 3 → forced
+        # refresh; 4, 5 → skip only (escalations maxed); 6 → rollback
+        assert pol.count("skip") == 6
+        assert pol.count("escalate") == 2
+        assert pol.count("refresh") == 1
+        assert pol.count("rollback") == 1
+        assert pol.damping_scale == 64.0     # 8.0 ** 2
+        assert pol.take_refresh() and not pol.take_refresh()
+        assert pol.take_rollback() and not pol.take_rollback()
+
+    def test_deescalates_after_recovery_window(self):
+        cfg = HealthConfig(recovery_steps=3)
+        pol = RemediationPolicy(cfg)
+        pol.observe(0, float("nan"), _report(ok=0.0))
+        assert pol.damping_scale == cfg.escalation
+        for k in range(1, 4):
+            assert not pol.observe(k, 1.0, _report())
+        assert pol.damping_scale == 1.0
+        assert pol.count("deescalate") == 1
+
+    def test_loss_divergence_faults_without_guard_trip(self):
+        pol = RemediationPolicy(HealthConfig())
+        for k in range(3):
+            assert not pol.observe(k, 1.0, _report())
+        assert pol.observe(3, 1e6, _report())       # ok report, huge loss
+        assert pol.count("skip") == 0               # guard never tripped
+        assert pol.count("escalate") == 1
+
+    def test_ns_residual_blowup_is_a_fault(self):
+        pol = RemediationPolicy(HealthConfig())
+        rep = _report(**{"bucket0/ns_res": 0.9})
+        assert pol.observe(0, 1.0, rep)
+
+    def test_actions_reach_the_event_log(self, tmp_path):
+        path = str(tmp_path / "e.jsonl")
+        with ev_lib.TelemetryWriter(path, console=False) as w:
+            pol = RemediationPolicy(HealthConfig(), writer=w)
+            pol.observe(0, float("nan"), _report(ok=0.0))
+        evs = [e for e in ev_lib.read_events(path)
+               if e["type"] == "remediation"]
+        assert [e["action"] for e in evs] == ["skip", "escalate"]
+        assert all(e["step"] == 0 for e in evs)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint integrity: checksums, torn writes, the healthy-ring walk
+# ---------------------------------------------------------------------------
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"w": jax.random.normal(k, (8, 4)), "step": jnp.asarray(seed)}
+
+
+class TestCheckpointIntegrity:
+    def test_manifest_records_a_checksum_per_array(self, tmp_path):
+        path = ckpt_lib.save(str(tmp_path), 0, _tree())
+        with open(os.path.join(path, "manifest.json")) as f:
+            man = json.load(f)
+        assert man["schema"] == ckpt_lib.SCHEMA_VERSION >= 5
+        assert len(man["checksums"]) == man["n_arrays"] > 0
+        assert all(len(d) == 8 for d in man["checksums"].values())
+
+    def test_truncated_archive_raises_corruption_error(self, tmp_path):
+        ckpt_lib.save(str(tmp_path), 3, _tree())
+        assert chaos_lib.truncate_latest(str(tmp_path))
+        with pytest.raises(ckpt_lib.CheckpointCorruptionError,
+                           match="truncated or unreadable"):
+            ckpt_lib.restore(str(tmp_path), _tree())
+
+    def test_silent_bitflip_caught_by_checksum(self, tmp_path):
+        path = ckpt_lib.save(str(tmp_path), 0, _tree())
+        npz = os.path.join(path, "arrays.npz")
+        with np.load(npz) as z:
+            arrays = {k: np.array(z[k]) for k in z.files}
+        key = next(k for k, v in arrays.items() if v.size > 1)
+        arrays[key].flat[0] += 1.0           # valid zip, flipped payload
+        np.savez(npz, **arrays)
+        with pytest.raises(ckpt_lib.CheckpointCorruptionError,
+                           match="failed integrity check"):
+            ckpt_lib.restore(str(tmp_path), _tree())
+
+    def test_pre_checksum_checkpoint_restores_unverified(self, tmp_path):
+        """v4 snapshots (no ``checksums``) predate verification and must
+        keep restoring — schema explains, it does not reject."""
+        path = ckpt_lib.save(str(tmp_path), 0, _tree())
+        man_path = os.path.join(path, "manifest.json")
+        with open(man_path) as f:
+            man = json.load(f)
+        del man["checksums"]
+        man["schema"] = 4
+        with open(man_path, "w") as f:
+            json.dump(man, f)
+        got, _ = ckpt_lib.restore(str(tmp_path), _tree())
+        np.testing.assert_array_equal(np.asarray(got["w"]),
+                                      np.asarray(_tree()["w"]))
+
+    def test_restore_latest_healthy_walks_past_corruption(self, tmp_path):
+        for s in (1, 2, 3):
+            ckpt_lib.save(str(tmp_path), s, _tree(s))
+        assert chaos_lib.truncate_latest(str(tmp_path))   # step 3 torn
+        got, man = ckpt_lib.restore_latest_healthy(str(tmp_path), _tree())
+        assert man["step"] == 2
+        assert int(got["step"]) == 2
+        assert [s["step"] for s in man["skipped_corrupt"]] == [3]
+        assert "CheckpointCorruptionError" in man["skipped_corrupt"][0][
+            "error"]
+
+    def test_restore_latest_healthy_exhausted_is_actionable(self, tmp_path):
+        ckpt_lib.save(str(tmp_path), 1, _tree())
+        chaos_lib.truncate_latest(str(tmp_path))
+        with pytest.raises(FileNotFoundError, match="no healthy"):
+            ckpt_lib.restore_latest_healthy(str(tmp_path), _tree())
+
+
+# ---------------------------------------------------------------------------
+# acceptance claim 1: guards are provably inert on healthy runs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("variant", _marked_variants())
+def test_health_on_equals_health_off(variant):
+    s_off, l_off = _train(variant)
+    pol = RemediationPolicy(HealthConfig())
+    s_on, l_on = _train(variant, policy_obj=pol)
+    _assert_identical(s_off, l_off, s_on, l_on)
+    assert pol.actions == []                 # nothing remediated
+    assert pol.damping_scale == 1.0
+
+
+@pytest.mark.parametrize("variant", ["bkfac",
+                                     pytest.param(
+                                         "rkfac",
+                                         marks=pytest.mark.slow)])
+def test_health_inert_through_async_pipeline(variant):
+    """Same claim with the overlapped launch/land pipeline active (rkfac
+    exercises real worker-thread landings; bkfac the no-heavy-op path)."""
+    kw = dict(steps=10, async_heavy=True, heavy_lag=2, stagger=True,
+              stagger_splits=2, overlap=True)
+    s_off, l_off = _train(variant, **kw)
+    s_on, l_on = _train(variant, health=True, **kw)
+    _assert_identical(s_off, l_off, s_on, l_on)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("variant", ["bkfac", "nskfac"])
+def test_health_inert_sharded(variant):
+    """The claim on an 8-device host mesh: the factor checks read the
+    post-all-gather states at the outer trace level, so the guarded
+    sharded step is the same program as the unguarded one."""
+    if len(jax.devices()) < 8:
+        pytest.skip("needs 8 host devices")
+    mesh = mesh_lib.make_mesh((8,), ("curv",))
+    s_off, l_off = _train(variant, mesh=mesh, curvature_axis="curv")
+    s_on, l_on = _train(variant, health=True, mesh=mesh,
+                        curvature_axis="curv")
+    _assert_identical(s_off, l_off, s_on, l_on)
+
+
+def test_healthy_run_health_metrics_all_zero(tmp_path):
+    """With telemetry attached, the guard's metric channels flush as
+    exact zeros on a healthy run — the observable form of inertness."""
+    path = str(tmp_path / "events.jsonl")
+    with ev_lib.TelemetryWriter(path, console=False) as w:
+        _train("bkfac", health=True, writer=w, metrics_every=3)
+    metrics = [e for e in ev_lib.read_events(path)
+               if e["type"] == "metrics"]
+    assert metrics
+    for e in metrics:
+        assert e["values"]["health/guard_trips"] == 0.0
+        assert e["values"]["health/grad_nonfinite"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# acceptance claim 2: every fault class ends in documented remediation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("variant", _marked_variants())
+def test_nan_grad_recovery_ladder(variant):
+    """Three consecutive poisoned batches: the guard skips each (losses
+    at the fault steps are NaN, params never move), damping escalates
+    twice, the streak forces an out-of-cadence refresh, and four healthy
+    steps later the damping de-escalates back to exactly 1.0."""
+    chaos = ChaosMonkey(tuple(Fault(k, "nan_grad") for k in (3, 4, 5)))
+    pol = RemediationPolicy(HealthConfig())
+    state, losses = _train(variant, steps=12, policy_obj=pol, chaos=chaos)
+    assert chaos.summary() == {"nan_grad": 3}
+    assert pol.count("skip") == 3
+    assert pol.count("escalate") == 2
+    assert pol.count("refresh") == 1
+    assert pol.count("deescalate") == 1
+    assert pol.damping_scale == 1.0
+    for k, loss in enumerate(losses):
+        assert np.isfinite(loss) == (k not in (3, 4, 5)), (k, loss)
+    assert _all_finite(state.params)
+    assert _all_finite(state.opt.factors)
+
+
+@pytest.mark.slow
+def test_corrupt_inflight_lands_guarded(tmp_path):
+    """A fully poisoned in-flight snapshot whose landing is forced onto
+    the in-graph fallback (futures dropped): the guard catches the NaN
+    factor swap, a follow-up faulty streak forces the stage-2 refresh,
+    and the final factor states are finite — poison never sticks."""
+    faults = (Fault(5, "corrupt_inflight"), Fault(5, "drop_landing"),
+              Fault(6, "drop_landing"), Fault(7, "drop_landing"),
+              Fault(7, "nan_grad"), Fault(8, "nan_grad"))
+    chaos = ChaosMonkey(faults)
+    path = str(tmp_path / "events.jsonl")
+    with ev_lib.TelemetryWriter(path, console=False) as w:
+        pol = RemediationPolicy(HealthConfig(), writer=w)
+        state, losses = _train(
+            "rkfac", steps=14, policy_obj=pol, chaos=chaos, overlap=True,
+            writer=w, async_heavy=True, heavy_lag=2, stagger=True,
+            stagger_splits=1)
+    assert chaos.summary()["corrupt_inflight"] == 1
+    assert chaos.summary()["drop_landing"] >= 1
+    assert pol.count("skip") >= 3            # poisoned land + NaN batches
+    assert pol.count("refresh") >= 1         # streak forced the stage-2
+    assert _all_finite(state.opt.factors)
+    assert _all_finite(state.params)
+    misses = [e for e in ev_lib.read_events(path)
+              if e["type"] == "async_miss"]
+    # every miss is a benign in-graph fallback: "dropped" (tombstoned by
+    # the chaos drop / the refresh) or "resume" (a landing whose pending
+    # launch the stage-2 refresh wiped before it tombstoned)
+    assert misses
+    assert {e["reason"] for e in misses} <= {"dropped", "resume"}
+    assert any(e["reason"] == "dropped" for e in misses)
+
+
+class TestRunnerDeadline:
+    def _runner(self, tmp_path, **kw):
+        params, taps = _make_mlp()
+        opt = kfac_lib.Kfac(_cfg("rkfac", async_heavy=True, heavy_lag=2,
+                                 stagger=True), taps)
+        sched = opt.scheduler()
+        work = next(sched.work(k) for k in range(1, 32)
+                    if any(sched.work(k).land))
+        writer = ev_lib.TelemetryWriter(str(tmp_path / "e.jsonl"),
+                                        console=False)
+        return (loop.AsyncInverseRunner(opt, writer=writer, **kw),
+                work, writer)
+
+    def _keys(self, work):
+        return [(bi, lo, hi) for bi, rs in enumerate(work.land)
+                for lo, hi in rs]
+
+    def test_deadline_tracks_median_heavy_time(self, tmp_path):
+        r, _, w = self._runner(tmp_path, deadline_factor=4.0,
+                               min_deadline_s=0.001)
+        assert r._deadline() == 60.0         # no observation yet: fixed cap
+        r._durations = [1.0, 2.0, 3.0]
+        assert r._deadline() == 8.0          # 4 × median
+        r.deadline_s = 0.25
+        assert r._deadline() == 0.25         # explicit override wins
+        r.close(); w.close()
+
+    def test_miss_reasons_cover_all_causes(self, tmp_path):
+        """timeout (hung worker), crash (dead worker), dropped
+        (remediation/elastic discard), resume (restored mid-lag) — each
+        miss lands in-graph (None result), is counted by reason, emits
+        an event, and hung/dead pools are respawned."""
+        r, work, w = self._runner(tmp_path, deadline_s=0.2)
+        keys = self._keys(work)
+        assert keys, "test premise: the mask has land ranges"
+
+        for key in keys:                                   # hung worker
+            r._pending[key] = chaos_lib._hung_future()
+        out = r.landing(work, step=6)
+        assert all(res is None for rs in out.values() for res in rs)
+        assert r.health["miss_reasons"]["timeout"] == len(keys)
+        assert r.health["respawns"] == len(keys)
+
+        for key in keys:                                   # dead worker
+            r._pending[key] = chaos_lib._DeadFuture()
+        r.landing(work, step=10)
+        assert r.health["miss_reasons"]["crash"] == len(keys)
+
+        for key in keys:                                   # dropped
+            r._pending[key] = chaos_lib._hung_future()
+        r.drop_pending()
+        assert not r._pending
+        r.landing(work, step=14)
+        assert r.health["miss_reasons"]["dropped"] == len(keys)
+
+        r.landing(work, step=18)                           # fresh resume
+        assert r.health["miss_reasons"]["resume"] == len(keys)
+        assert r.health["missed"] == 4 * len(keys)
+        r.close(); w.close()
+        evs = [e for e in ev_lib.read_events(str(tmp_path / "e.jsonl"))
+               if e["type"] == "async_miss"]
+        assert {e["reason"] for e in evs} == {"timeout", "crash",
+                                              "dropped", "resume"}
+
+
+@pytest.mark.slow
+def test_hung_and_dead_workers_do_not_change_numbers(monkeypatch):
+    """Integration: hang one landing's workers and kill another's
+    mid-run.  Both miss within the (shortened) deadline, the pool
+    respawns, every miss lands in-graph — and because the fallback is
+    pure, the harassed overlapped run matches the plain in-graph run."""
+    kw = dict(async_heavy=True, heavy_lag=2, stagger=True,
+              stagger_splits=1)
+    _, ref_losses = _train("rkfac", steps=14, **kw)
+
+    orig = loop.AsyncInverseRunner.for_opt.__func__
+    seen = {}
+
+    def patched(cls, opt, writer=None):
+        r = orig(cls, opt, writer=writer)
+        if r is not None:
+            r.deadline_s = 0.3
+            seen["runner"] = r
+        return r
+
+    monkeypatch.setattr(loop.AsyncInverseRunner, "for_opt",
+                        classmethod(patched))
+    chaos = ChaosMonkey((Fault(6, "hang_landing"),
+                         Fault(10, "worker_death")))
+    _, losses = _train("rkfac", steps=14, overlap=True, chaos=chaos,
+                       **kw)
+    assert chaos.summary() == {"hang_landing": 1, "worker_death": 1}
+    health = seen["runner"].health
+    assert health["miss_reasons"].get("timeout", 0) >= 1
+    assert health["miss_reasons"].get("crash", 0) >= 1
+    assert health["respawns"] >= 2
+    np.testing.assert_allclose(losses, ref_losses, rtol=1e-5, atol=1e-7)
+
+
+@pytest.mark.slow
+def test_truncated_checkpoint_rollback(tmp_path):
+    """A 7-step NaN streak exhausts the ladder into a rollback while the
+    newest snapshot was torn on disk: the restore walks the ring past it
+    to the older healthy snapshot, re-anchors the schedule, and training
+    finishes healthy.  The whole story must validate as telemetry."""
+    ckpt_dir = str(tmp_path / "ckpt")
+    path = str(tmp_path / "events.jsonl")
+    faults = tuple(Fault(k, "nan_grad") for k in range(3, 10)) \
+        + (Fault(2, "truncate_ckpt"),)
+    chaos = ChaosMonkey(faults)
+    with ev_lib.TelemetryWriter(path, console=False) as w:
+        pol = RemediationPolicy(HealthConfig(), writer=w)
+        state, losses = _train("bkfac", steps=14, policy_obj=pol,
+                               chaos=chaos, writer=w, ckpt_dir=ckpt_dir,
+                               ckpt_every=2)
+    assert chaos.summary()["truncate_ckpt"] == 1
+    assert pol.count("rollback") == 1
+    assert pol.count("restored") == 1
+    restored = next(a for a in pol.actions if a["action"] == "restored")
+    assert "healthy step 0" in restored["detail"]    # walked past step 2
+    assert np.isfinite(losses[-1])
+    assert _all_finite(state.params)
+    # the event log tells the same story, and validates
+    evs = list(ev_lib.read_events(path))
+    assert [e["type"] for e in evs].count("ckpt_restore") == 1
+    assert sum_lib.main([path, "--validate"]) == 0
+    report = sum_lib.summarize(path)
+    res = report["resilience"]
+    assert res["remediations"] == len(pol.actions)
+    assert res["actions"]["rollback"] == 1
+
+
+# ---------------------------------------------------------------------------
+# elastic recovery: real-topology ladder, repartition events, host loss
+# ---------------------------------------------------------------------------
+
+class TestElasticLadder:
+    def test_device_ladder_halves_to_one(self):
+        ladder = elastic.device_ladder(8)
+        assert ladder == (((8,), ("data",)), ((4,), ("data",)),
+                          ((2,), ("data",)), ((1,), ("data",)))
+
+    def test_device_ladder_trailing_axes_stay_one(self):
+        ladder = elastic.device_ladder(4, axes=("data", "model"))
+        assert ladder[0] == ((4, 1), ("data", "model"))
+        assert ladder[-1] == ((1, 1), ("data", "model"))
+
+    def test_device_ladder_defaults_to_real_devices(self):
+        ladder = elastic.device_ladder()
+        assert ladder[0][0][0] == len(jax.devices())
+
+    def test_runner_emits_repartition_and_remediation(self, tmp_path):
+        path = str(tmp_path / "e.jsonl")
+
+        def make_state(mesh):
+            return {"x": jnp.zeros(())}
+
+        def make_step(mesh):
+            return lambda state, k: {"x": state["x"] + 1}
+
+        with ev_lib.TelemetryWriter(path, console=False) as w:
+            inj = elastic.FailureInjector(fail_at=[3])
+            runner = elastic.ElasticRunner(
+                ckpt_dir=str(tmp_path / "ckpt"), make_state=make_state,
+                make_step=make_step, ckpt_every=1,
+                meshes=(((1,), ("data",)), ((1,), ("data",))),
+                injector=inj, writer=w)
+            _, info = runner.run(6)
+        assert info["restarts"] == 1
+        evs = list(ev_lib.read_events(path))
+        reparts = [e for e in evs if e["type"] == "repartition"]
+        assert len(reparts) == 2             # initial mesh + post-failure
+        remeds = [e for e in evs if e["type"] == "remediation"]
+        assert len(remeds) == 1
+        assert remeds[0]["stage"] == STAGE_ELASTIC
+        assert remeds[0]["action"] == "repartition"
+
+
+def test_straggler_mitigations_join_remediation_stream(tmp_path):
+    path = str(tmp_path / "e.jsonl")
+    with ev_lib.TelemetryWriter(path, console=False) as w:
+        det = straggler.StragglerDetector(patience=3, rebalance_after=6,
+                                          writer=w)
+        for k in range(12):
+            times = {f"h{i}": 1.0 for i in range(4)}
+            if k >= 4:
+                times["h2"] = 3.0
+            det.observe_step(k, times)
+    evs = [e for e in ev_lib.read_events(path)
+           if e["type"] == "remediation"]
+    assert evs and all(e["stage"] == STAGE_ELASTIC for e in evs)
+    actions = {e["action"] for e in evs}
+    assert "drop_stats" in actions and "rebalance" in actions
+    assert all("straggler h2" in e["detail"] for e in evs)
+
+
+@pytest.mark.slow
+def test_host_loss_mid_cycle_resumes_phase_on_shrunk_mesh(tmp_path):
+    """Kill the host mid-stagger-cycle on an 8-device mesh; resume on a
+    4-device mesh from the last checkpoint.  The schedule must pick up
+    from ``KfacState.phase``: the resumed run's work cadence (step-event
+    phase labels) continues the uninterrupted run's exactly — in
+    particular the first resumed step is NOT the warmup heavy spike —
+    and the suffix losses track the replicated reference."""
+    if len(jax.devices()) < 8:
+        pytest.skip("needs 8 host devices")
+    steps, fail_at, ckpt_dir = 12, 7, str(tmp_path / "ckpt")
+    kw = dict(stagger=True, stagger_splits=1)
+    ref_path = str(tmp_path / "ref.jsonl")
+    with ev_lib.TelemetryWriter(ref_path, console=False) as w:
+        _, ref_losses = _train("rkfac", steps=steps, writer=w, **kw)
+    ref_labels = [e["phase"] for e in ev_lib.read_events(ref_path)
+                  if e["type"] == "step"]
+
+    mesh8 = mesh_lib.make_mesh((8,), ("curv",))
+    chaos = ChaosMonkey((Fault(fail_at, "host_loss"),))
+    with pytest.raises(RuntimeError, match="injected node failure"):
+        _train("rkfac", steps=steps, mesh=mesh8, curvature_axis="curv",
+               chaos=chaos, ckpt_dir=ckpt_dir, ckpt_every=2, **kw)
+    assert ckpt_lib.latest_step(ckpt_dir) == 6
+
+    # survivors: half the devices; fresh optimizer, restored state
+    mesh4 = mesh_lib.make_mesh((4,), ("curv",))
+    params, taps = _make_mlp()
+    opt = kfac_lib.Kfac(_cfg("rkfac", **kw), taps)
+    template = loop.TrainState(params=params, opt=opt.init(params),
+                               rng=jax.random.PRNGKey(0))
+    restored, man = ckpt_lib.restore_latest_healthy(ckpt_dir, template)
+    assert man["step"] == 6 and man["skipped_corrupt"] == []
+    res_path = str(tmp_path / "resumed.jsonl")
+    with ev_lib.TelemetryWriter(res_path, console=False) as w:
+        state, tail = loop.run_kfac_training(
+            _mlp_loss, opt, None, _batches(steps)[man["step"] + 1:],
+            n_tokens=N_BS, state=restored, mesh=mesh4,
+            curvature_axis="curv", writer=w)
+    res_labels = [e["phase"] for e in ev_lib.read_events(res_path)
+                  if e["type"] == "step"]
+    # cadence resumes mid-cycle: label-for-label the uninterrupted tail,
+    # and NOT a from-scratch restart (whose first step is the warmup
+    # heavy spike)
+    assert res_labels == ref_labels[man["step"] + 1:]
+    warm_label = opt.scheduler().work(0).label
+    assert res_labels[0] != warm_label
+    assert _all_finite(state.params)
+    np.testing.assert_allclose(tail, ref_losses[man["step"] + 1:],
+                               rtol=5e-3, atol=1e-5)

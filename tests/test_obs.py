@@ -58,6 +58,8 @@ _SAMPLE_EVENTS = {
     "ckpt_save": dict(step=10, path="/tmp/x"),
     "ckpt_restore": dict(step=10, path="/tmp/x"),
     "repartition": dict(detail="8 -> 6 devices"),
+    "remediation": dict(step=4, stage=1, action="escalate",
+                        detail="damping scale 1 -> 8"),
     "serve_request": dict(uid=1, wait_s=0.0, total_s=0.2, n_new=32),
 }
 
