@@ -215,11 +215,14 @@ class Kfac:
         self._cycle = self.scheduler().cycle
 
     def scheduler(self, **kw) -> schedule.Scheduler:
-        """A work scheduler over this optimizer's factor buckets; pass
-        ``align=engine.n_devices`` when a curvature engine is attached so
-        staggered chunks stay SPMD-uniform across the mesh."""
+        """A work scheduler over this optimizer's factor buckets; when a
+        curvature engine is attached, heavy chunks auto-align to its
+        ``align`` (slot-axis size × row-axis size on a 2D mesh) so
+        staggered chunks stay SPMD-uniform AND split evenly across the
+        row members."""
         if "align" not in kw and self.curvature is not None:
-            kw["align"] = self.curvature.n_devices
+            kw["align"] = getattr(self.curvature, "align",
+                                  self.curvature.n_devices)
         return schedule.Scheduler(self.cfg, self.factor_buckets, **kw)
 
     def uniform_work(self, do_stats: bool, do_light: bool, do_heavy: bool

@@ -146,6 +146,28 @@ def ea_update_m_kernel(M: Array, X: Array, rho: float, first: Array) -> Array:
     return kops.ea_syrk(M, X, rho, first)
 
 
+def ea_update_m_rows(M_rows: Array, X: Array, r0, rb: int, rho: float,
+                     first: Array) -> Array:
+    """Row block [r0, r0+rb) of the EA absorb — *exact*, not approximate:
+    every element of X Xᵀ is an independent full-length dot product (no
+    reduction is split), so the row slice of :func:`ea_update_m` equals the
+    update of the row slice.  This is what lets the 2D-mesh curvature
+    engine keep the dense M row-sharded through stats steps and only
+    gather it transiently when a heavy op needs the full matrix.
+
+    M_rows: (*stack, rb, d) local row block; X: (*stack, d, n) — full,
+    every row-shard holds the whole incoming panel (it is O(d·n), the
+    cheap side); ``r0`` may be traced (e.g. ``axis_index * rb``), ``rb``
+    is static.  Coefficients mirror ``kernels.ref.ea_syrk`` exactly."""
+    X_rows = jax.lax.dynamic_slice_in_dim(X, r0, rb, axis=X.ndim - 2)
+    rho = jnp.asarray(rho, M_rows.dtype)
+    firstf = jnp.asarray(first, M_rows.dtype)
+    keep = rho * (1.0 - firstf)
+    coef = 1.0 - keep
+    upd = (X_rows @ jnp.swapaxes(X, -1, -2)).astype(M_rows.dtype)
+    return keep * M_rows + coef * upd
+
+
 def brand_step(spec: KFactorSpec, st: KFactorState, X: Array, first: Array,
                use_kernel: bool = False) -> KFactorState:
     """B-update (Alg 4): truncate to r then symmetric Brand with the EA term.

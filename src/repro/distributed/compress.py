@@ -71,24 +71,107 @@ def decompress(P: Array, Q: Array, shape: Tuple[int, ...]) -> Array:
     return (P @ Q.T).reshape(shape)
 
 
-def compress_tree(grads, errors, cfg: CompressConfig):
-    """Apply error-feedback low-rank compression leaf-wise.
+def compress_batched(G: Array, rank: int, n_power_iter: int = 1
+                     ) -> Tuple[Array, Array]:
+    """Memoryless batched PowerSGD projection — the curvature engine's
+    (U, λ) collective path.  G (*stack, m, n) → P (*stack, m, q),
+    Q (*stack, n, q) with q = min(rank, m, n); the caller gathers the
+    factors and every mesh member decompresses with ``P @ Qᵀ``.
 
-    Returns (approx_grads, new_errors).  approx_grads replace the raw
-    gradients *before* the (sharded) optimizer update, so the DP psum that
-    XLA emits moves only the factor volume.
+    Unlike :func:`compress`, there is no error feedback: EF exists so a
+    compressed *stream of increments* stays unbiased over time, but here
+    each round re-projects the exact current state (the engine's local
+    U block), so the per-round error never accumulates.  The basis is
+    the same deterministic per-shape seed as :func:`compress`'s cold
+    start, making the projection SPMD-uniform — every mesh member builds
+    the identical basis with no communication."""
+    m, n = G.shape[-2:]
+    q = min(int(rank), m, n)
+    key = jax.random.PRNGKey(m * 1315423911 + n)
+    basis = jax.random.normal(key, (n, q)).astype(G.dtype)
+    qr = lambda p: jnp.linalg.qr(p)[0]          # batched natively
+    P = G @ basis
+    for _ in range(n_power_iter):
+        P = qr(P)
+        P = G @ (jnp.swapaxes(G, -1, -2) @ P)
+    P = qr(P)
+    Q = jnp.swapaxes(G, -1, -2) @ P
+    return P, Q
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class CompressState:
+    """Per-leaf carry of the error-feedback compressor: ``err`` is the
+    residual fed back into the next round, ``q`` the previous round's Q
+    factor — PowerSGD's warm start, which lets the single power
+    iteration (n_power_iter=1) keep sharpening the rank-q basis across
+    rounds; dropping it (the old ``compress_tree`` passed
+    ``q_prev=None`` every round) silently restarts the iteration from
+    the seeded basis each step.  Leaves the
+    config leaves uncompressed carry a zero-size ``q`` sentinel so the
+    pytree structure stays static under jit."""
+    err: Any
+    q: Any
+
+
+def _compressible(g, cfg: CompressConfig) -> bool:
+    return g.ndim >= 2 and g.size >= cfg.min_size
+
+
+def _cold_q(g, cfg: CompressConfig) -> Array:
+    """The deterministic seeded basis :func:`compress` cold-starts from —
+    used as the *initial* warm-start carry so round 1 of the stateful
+    path is bit-identical to the old stateless one."""
+    shape = g.shape
+    m = shape[0] if g.ndim == 2 else int(np_prod(shape[:-1]))
+    n = shape[-1]
+    q = min(cfg.rank, m, n)
+    key = jax.random.PRNGKey(m * 1315423911 + n)
+    return jax.random.normal(key, (n, q))
+
+
+def np_prod(xs) -> int:
+    out = 1
+    for x in xs:
+        out *= int(x)
+    return out
+
+
+def init_state(params, cfg: CompressConfig) -> CompressState:
+    """Fresh compressor carry: zero error feedback + the seeded cold-start
+    basis per compressible leaf (zero-size sentinel otherwise)."""
+    err = init_errors(params)
+    q = jax.tree_util.tree_map(
+        lambda p: _cold_q(p, cfg) if _compressible(p, cfg)
+        else jnp.zeros((0,), jnp.float32), params)
+    return CompressState(err=err, q=q)
+
+
+def compress_tree(grads, state: CompressState, cfg: CompressConfig
+                  ) -> Tuple[Any, CompressState]:
+    """Apply error-feedback low-rank compression leaf-wise, threading the
+    per-leaf warm-start Q through ``state`` (a :class:`CompressState`).
+
+    Returns (approx_grads, new_state).  approx_grads replace the raw
+    gradients *before* the (sharded) optimizer update, so the DP psum
+    that XLA emits moves only the factor volume; new_state carries both
+    the error feedback and the warm-started power-iteration basis into
+    the next step (tests/test_mesh2d.py asserts the warm basis sharpens
+    across rounds where cold restarts stay pinned at single-iteration
+    quality).
     """
-    def one(g, e):
-        if g.ndim < 2 or g.size < cfg.min_size:
-            return g, jnp.zeros_like(e)
-        P, Q, new_err = compress(g, e, None, cfg)
-        return decompress(P, Q, g.shape).astype(g.dtype), new_err
+    def one(g, e, qp):
+        if not _compressible(g, cfg):
+            return g, jnp.zeros_like(e), qp
+        P, Q, new_err = compress(g, e, qp if qp.size else None, cfg)
+        return decompress(P, Q, g.shape).astype(g.dtype), new_err, Q
 
-    flat = jax.tree_util.tree_map(one, grads, errors)
+    flat = jax.tree_util.tree_map(one, grads, state.err, state.q)
     istuple = lambda t: isinstance(t, tuple)
-    approx = jax.tree_util.tree_map(lambda t: t[0], flat, is_leaf=istuple)
-    errs = jax.tree_util.tree_map(lambda t: t[1], flat, is_leaf=istuple)
-    return approx, errs
+    pick = lambda i: jax.tree_util.tree_map(lambda t: t[i], flat,
+                                            is_leaf=istuple)
+    return pick(0), CompressState(err=pick(1), q=pick(2))
 
 
 def init_errors(params):

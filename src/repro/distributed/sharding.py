@@ -131,7 +131,8 @@ def params_sharding_fsdp(params, mesh: Mesh):
     return jax.tree_util.tree_map_with_path(one, params)
 
 
-def kfac_state_sharding(opt_state, mesh: Mesh, curvature_axis=None):
+def kfac_state_sharding(opt_state, mesh: Mesh, curvature_axis=None,
+                        row_axis=None):
     """K-FAC optimizer state: factor U/M rows on "model", D replicated;
     AdamW fallback mirrors the param sharding; scalars replicated.
 
@@ -140,7 +141,13 @@ def kfac_state_sharding(opt_state, mesh: Mesh, curvature_axis=None):
     that axis along the leading stack dim — the round-robin slot → device
     assignment means each device only ever *reads* the M rows of its own
     slots, so the O(d²) factors need not be replicated between steps.
-    Non-divisible stacks fall back to replication (fit_spec)."""
+
+    ``row_axis`` (the 2D engine's second axis) is the row rule: the
+    dense M of every factor — live and in-flight snapshot alike — is
+    additionally sharded by rows over that axis (rows dim = -2), so
+    per-device K-factor memory is O(d²/(N_curv·N_rows)).  Non-divisible
+    stacks / factor sides fall back to replication (fit_spec), matching
+    the engine's per-bucket row-block eligibility."""
     tp = "model" if "model" in mesh.axis_names else None
 
     def one(kp, leaf):
@@ -149,12 +156,14 @@ def kfac_state_sharding(opt_state, mesh: Mesh, curvature_axis=None):
             # async in-flight buffers (bucket-slot-major): the dense M
             # snapshot follows the live M onto the curvature axis (only
             # the slot's owning device ever reads it — same round-robin
-            # assignment); U/D/keys/panels replicate like the live
-            # low-rank rep, which is all-gathered at every landing.
+            # assignment) and its rows onto the row axis; U/D/keys/
+            # panels replicate like the live low-rank rep, which is
+            # all-gathered at every landing.
             field = path.rsplit("/", 1)[-1]
             if field == "M" and curvature_axis is not None and \
                     leaf.ndim >= 3 and leaf.shape[-1] > 1:
-                spec = P(*((curvature_axis,) + (None,) * (leaf.ndim - 1)))
+                spec = P(*((curvature_axis, row_axis)
+                           + (None,) * (leaf.ndim - 2)))
                 return NamedSharding(mesh, fit_spec(spec, leaf.shape, mesh))
             return NamedSharding(mesh, P())
         if "/factors/" in "/" + path + "/" or path.startswith("factors"):
@@ -163,10 +172,14 @@ def kfac_state_sharding(opt_state, mesh: Mesh, curvature_axis=None):
             if field in ("U", "M") and leaf.ndim >= 2 and \
                     leaf.shape[-1] > 1:
                 lead = (None,) * (leaf.ndim - 2)
-                if curvature_axis is not None and field == "M" and \
-                        leaf.ndim >= 3:
-                    lead = (curvature_axis,) + (None,) * (leaf.ndim - 3)
-                spec = P(*(lead + (tp, None)))
+                rows = tp
+                if field == "M":
+                    if curvature_axis is not None and leaf.ndim >= 3:
+                        lead = (curvature_axis,) + \
+                            (None,) * (leaf.ndim - 3)
+                    if row_axis is not None:
+                        rows = row_axis
+                spec = P(*(lead + (rows, None)))
                 return NamedSharding(mesh, fit_spec(spec, leaf.shape, mesh))
             return NamedSharding(mesh, P())
         if path.startswith("fallback") or path.startswith("momentum"):

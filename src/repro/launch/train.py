@@ -51,12 +51,22 @@ def main():
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--mesh", default="none",
                     help="none | 16x16 | 2x16x16 | AxB (custom)")
+    ap.add_argument("--mesh-axes", default="",
+                    help="comma-separated axis names for a custom --mesh "
+                         "AxB, e.g. 'data,curv' for the 2D "
+                         "data × curvature mesh (default: data,model)")
     ap.add_argument("--reduced", action="store_true",
                     help="CPU-scale config of the same family")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=10)
     ap.add_argument("--compress", action="store_true",
-                    help="PowerSGD-style DP gradient compression")
+                    help="PowerSGD-style DP gradient compression (error "
+                         "feedback + warm-started power iteration)")
+    ap.add_argument("--curvature-compress", type=int, default=0,
+                    help="rank-q compression of the curvature engine's "
+                         "(U, λ) cross-axis gathers (0 = raw gathers); "
+                         "lossy — trades a little factor accuracy for "
+                         "O(d·q) instead of O(d·r) bytes on the wire")
     ap.add_argument("--stagger", dest="stagger", action="store_true",
                     default=True,
                     help="phase heavy factor work across the T_inv window "
@@ -120,7 +130,13 @@ def main():
         mesh = make_production_mesh(multi_pod=True)
     elif args.mesh not in ("none", ""):
         dims = tuple(int(x) for x in args.mesh.split("x"))
-        names = ("data", "model")[: len(dims)]
+        if args.mesh_axes:
+            names = tuple(a.strip() for a in args.mesh_axes.split(","))
+            if len(names) != len(dims):
+                raise SystemExit(f"--mesh-axes {names} does not match "
+                                 f"--mesh {args.mesh}")
+        else:
+            names = ("data", "model")[: len(dims)]
         mesh = make_mesh(dims, names)
 
     sp = steps_lib.shard_policy_for(mesh)
@@ -140,18 +156,34 @@ def main():
                                else 0)
     opt = kfac_lib.Kfac(kcfg, lm.taps)
     curv_axis = None
+    row_axis = None
     if args.curvature == "auto" and mesh is not None:
         dp = [a for a in mesh.axis_names if a != "model"]
         sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-        if dp and sizes[dp[0]] > 1:
+        if "curv" in sizes and sizes["curv"] > 1:
+            # 2D data × curvature mesh: factor *slots* shard over the
+            # dedicated curv axis; the dense M *rows* (and the heavy
+            # FLOPs on them) shard over the remaining data axis.
+            curv_axis = "curv"
+            rows = [a for a in dp if a != "curv" and sizes[a] > 1]
+            row_axis = rows[0] if rows else None
+        elif dp and sizes[dp[0]] > 1:
             curv_axis = dp[0]
     if curv_axis is not None:
         from repro.distributed import curvature as curvature_lib
-        eng = curvature_lib.CurvatureEngine.for_kfac(opt, mesh, curv_axis)
+        eng = curvature_lib.CurvatureEngine.for_kfac(
+            opt, mesh, curv_axis, row_axis=row_axis,
+            compress_rank=args.curvature_compress or None)
         rep, dev = eng.job_counts()
         writer.log(f"curvature sharded on '{curv_axis}': "
                    f"{rep} factor slots replicated -> {dev}/device "
                    f"({eng.describe()})")
+        m_rep, m_dev = eng.m_bytes()
+        cb = eng.collective_bytes()
+        writer.log(f"dense-M memory: {m_rep / 1e6:.2f} MB replicated -> "
+                   f"{m_dev / 1e6:.2f} MB/device; (U, lambda) gather "
+                   f"bytes/round: {cb['uncompressed'] / 1e6:.3f} MB raw, "
+                   f"{cb['on_wire'] / 1e6:.3f} MB on wire")
     sched = opt.scheduler()
     if args.stagger or args.async_heavy:
         writer.emit("sched",
@@ -171,16 +203,27 @@ def main():
     if mesh is not None:
         p_sh = shd.params_sharding(params, mesh)
         o_sh = shd.kfac_state_sharding(state.opt, mesh,
-                                       curvature_axis=curv_axis)
+                                       curvature_axis=curv_axis,
+                                       row_axis=row_axis)
         state = loop_lib.TrainState(
             params=jax.device_put(params, p_sh),
             opt=jax.device_put(state.opt, o_sh), rng=state.rng)
 
-    errors = compress_lib.init_errors(params) if args.compress else None
-    ccfg = compress_lib.CompressConfig(rank=8)
-
-    def loss_with_compress(p, probes, batch):
-        return lm.loss_fn(p, probes, batch)
+    # DP gradient compression rides as a grad_transform inside the jitted
+    # step; its CompressState (error feedback + warm-start Q) is a
+    # separate carry, deliberately *outside* TrainState so the checkpoint
+    # schema is untouched (a restore simply cold-starts the compressor).
+    grad_transform = None
+    cstate = None
+    if args.compress:
+        ccfg = compress_lib.CompressConfig(rank=8)
+        cstate = compress_lib.init_state(params, ccfg)
+        grad_transform = lambda gp, cs: compress_lib.compress_tree(
+            gp, cs, ccfg)
+        if args.health:
+            writer.log("--compress ignored with --health: the resilient "
+                       "step has no gradient-transform hook")
+            grad_transform = cstate = None
 
     meter = None
     if args.metrics_every > 0 and jsonl is not None:
@@ -193,14 +236,15 @@ def main():
     if args.health:
         policy = health_lib.RemediationPolicy(writer=writer)
         step_fn = jax.jit(health_lib.make_resilient_kfac_step(
-            loss_with_compress, opt, n_tokens, meter=meter),
+            lm.loss_fn, opt, n_tokens, meter=meter),
             static_argnames=("work",))
         writer.log("health guards on: staged remediation ladder armed"
                    + ("" if args.ckpt_dir
                       else " (no --ckpt-dir: rollback stage disabled)"))
     else:
         step_fn = jax.jit(loop_lib.make_scheduled_kfac_step(
-            loss_with_compress, opt, n_tokens, meter=meter),
+            lm.loss_fn, opt, n_tokens, meter=meter,
+            grad_transform=grad_transform),
             static_argnames=("work",))
 
     checkpointer = (ckpt.AsyncCheckpointer(args.ckpt_dir, keep=3)
@@ -211,7 +255,10 @@ def main():
         writer.emit("ckpt_restore", step=start, path=args.ckpt_dir)
     k0 = 0 if start is None else start + 1
 
-    det = strag_lib.StragglerDetector(writer=writer)
+    mesh_txt = ("×".join(f"{a}={s}" for a, s in
+                              zip(mesh.axis_names, mesh.devices.shape))
+                if mesh is not None else "")
+    det = strag_lib.StragglerDetector(writer=writer, mesh_desc=mesh_txt)
     profiler = obs_trace.StepProfiler(args.profile_dir or None,
                                       first=k0 + 1,
                                       steps=args.profile_steps)
@@ -224,7 +271,7 @@ def main():
         run_steps(args, sched, det, stream, step_fn, state,
                   checkpointer, k0, t_start, losses, runner=runner,
                   writer=writer, meter=meter, profiler=profiler,
-                  policy=policy, opt=opt)
+                  policy=policy, opt=opt, cstate=cstate)
     profiler.close()
     if runner is not None:
         runner.close()
@@ -238,7 +285,7 @@ def main():
 
 def run_steps(args, sched, det, stream, step_fn, state, checkpointer,
               k0, t_start, losses, runner=None, writer=None, meter=None,
-              profiler=None, policy=None, opt=None):
+              profiler=None, policy=None, opt=None, cstate=None):
     mbuf = meter.init() if meter is not None else None
     last_k = k0
     k_off = 0          # rollback re-anchor: schedule runs at k_off + k
@@ -272,6 +319,15 @@ def run_steps(args, sched, det, stream, step_fn, state, checkpointer,
             else:
                 state, loss, report, mbuf = step_fn(state, batch, work,
                                                     landing, mbuf, scale)
+        elif cstate is not None:
+            # compressed-DP step: the CompressState carry trails the
+            # outputs (after mbuf when a meter is on)
+            if meter is None:
+                state, loss, cstate = step_fn(state, batch, work, landing,
+                                              None, cstate)
+            else:
+                state, loss, mbuf, cstate = step_fn(state, batch, work,
+                                                    landing, mbuf, cstate)
         elif meter is None:
             state, loss = step_fn(state, batch, work, landing)
         else:

@@ -27,25 +27,45 @@ from repro.train import checkpoint as ckpt_lib
 
 
 def device_ladder(n_devices: Optional[int] = None,
-                  axes: Tuple[str, ...] = ("data",)
+                  axes: Tuple[str, ...] = ("data",),
+                  shape: Optional[Tuple[int, ...]] = None
                   ) -> Tuple[Tuple[Tuple[int, ...], Tuple[str, ...]], ...]:
     """The recovery ladder derived from the devices that actually exist:
-    full capacity, then successive halvings down to a single device
-    (first extra axis absorbs the count; trailing axes get 1).  This
-    replaces the old hardcoded pod-scale table, which never matched the
-    process's real topology — on an 8-device host every rung of that
+    full capacity, then successive halvings down to a single device.
+    This replaces the old hardcoded pod-scale table, which never matched
+    the process's real topology — on an 8-device host every rung of that
     table failed ``make_mesh`` and collapsed straight to ``(1,)``,
-    skipping the surviving-capacity meshes entirely."""
+    skipping the surviving-capacity meshes entirely.
+
+    Without ``shape``, the first axis absorbs the device count and
+    trailing axes get 1 (the 1D ladder).  With an explicit starting
+    ``shape`` (e.g. ``(4, 2)`` on a ``("data", "curv")`` mesh), each
+    rung halves the *largest* dimension (ties break leftmost), modelling
+    both 2D shrink paths — dropping a data row vs. dropping a curvature
+    column — until every axis is 1.  :func:`shrunk_axes` names which
+    axis a given rung-to-rung transition shrank (ElasticRunner emits it
+    in the ``repartition`` event)."""
     n = len(jax.devices()) if n_devices is None else int(n_devices)
-    ladder = []
-    k = max(1, n)
-    while True:
-        shape = (k,) + (1,) * (len(axes) - 1)
+    if shape is None:
+        shape = (max(1, n),) + (1,) * (len(axes) - 1)
+    shape = tuple(max(1, int(x)) for x in shape)
+    if len(shape) != len(axes):
+        raise ValueError(f"shape {shape} does not match axes {axes}")
+    ladder = [(shape, tuple(axes))]
+    while any(x > 1 for x in shape):
+        i = max(range(len(shape)), key=lambda j: shape[j])
+        shape = shape[:i] + (shape[i] // 2,) + shape[i + 1:]
         ladder.append((shape, tuple(axes)))
-        if k == 1:
-            break
-        k //= 2
     return tuple(ladder)
+
+
+def shrunk_axes(prev: Tuple[int, ...], cur: Tuple[int, ...],
+                axes: Tuple[str, ...]) -> Tuple[str, ...]:
+    """Names of the mesh axes that shrank between two ladder rungs —
+    which dimension of capacity was dropped (a data row, a curvature
+    column, …).  Empty when nothing shrank (e.g. a restart on the same
+    rung)."""
+    return tuple(a for a, p, c in zip(axes, prev, cur) if c < p)
 
 
 #: (mesh shape, axis names), largest first — the recovery ladder.
@@ -117,10 +137,19 @@ class ElasticRunner:
             start = ckpt_lib.latest_step(self.ckpt_dir)
             k0 = 0 if start is None else start + 1
             mesh_desc = dict(zip(mesh.axis_names, mesh.devices.shape))
+            extra = {}
+            if 0 < mesh_idx < len(ladder):
+                p_shape, p_axes = ladder[mesh_idx - 1]
+                c_shape, c_axes = ladder[mesh_idx]
+                if p_axes == c_axes and len(p_shape) == len(c_shape):
+                    ax = shrunk_axes(tuple(p_shape), tuple(c_shape),
+                                     tuple(c_axes))
+                    if ax:
+                        extra["axis"] = ",".join(ax)
             self._emit("repartition",
                        detail=f"mesh {mesh_desc} "
                               f"({mesh.devices.size} devices), resuming "
-                              f"at step {k0}")
+                              f"at step {k0}", **extra)
             ck = ckpt_lib.AsyncCheckpointer(self.ckpt_dir, keep=self.keep)
             try:
                 for k in range(k0, n_steps):

@@ -76,7 +76,8 @@ def make_kfac_step(loss_fn: Callable, opt: kfac_lib.Kfac,
 
 def make_scheduled_kfac_step(loss_fn: Callable, opt: kfac_lib.Kfac,
                              n_tokens: int, probe_dtype=jnp.float32,
-                             meter: Optional[obs_metrics.Meter] = None):
+                             meter: Optional[obs_metrics.Meter] = None,
+                             grad_transform: Optional[Callable] = None):
     """Returns step(state, batch, work, landing=None) with ``work`` a
     static :class:`repro.core.schedule.StepWork` mask — jit with
     ``static_argnames=("work",)``.  The mask is hashable, so each distinct
@@ -91,13 +92,22 @@ def make_scheduled_kfac_step(loss_fn: Callable, opt: kfac_lib.Kfac,
     mbuf)``: the optimizer runs under the meter's collector, the metric
     buffer is merged/flushed in-graph, and the params/loss outputs are
     bit-identical to the meter-less step (asserted in
-    tests/test_obs.py)."""
+    tests/test_obs.py).
 
-    def step(state: TrainState, batch, work, landing=None, mbuf=None):
+    ``grad_transform`` — ``(grads, carry) -> (grads, carry)`` — rewrites
+    the parameter gradients before the optimizer sees them (the DP
+    gradient-compression path: ``compress_tree`` with its
+    :class:`~repro.distributed.compress.CompressState` carry); the step
+    then takes/returns that carry as a trailing argument/output."""
+
+    def step(state: TrainState, batch, work, landing=None, mbuf=None,
+             cstate=None):
         rng, sub = jax.random.split(state.rng)
         probes = layers.make_probes(opt.taps, probe_dtype)
         loss, acts, gp, gprobe = kfac_grads(loss_fn, state.params, probes,
                                             batch)
+        if grad_transform is not None:
+            gp, cstate = grad_transform(gp, cstate)
         if meter is None:
             updates, opt_state = opt.update(
                 gp, state.opt, state.params, acts=acts,
@@ -113,7 +123,12 @@ def make_scheduled_kfac_step(loss_fn: Callable, opt: kfac_lib.Kfac,
                                      opt_state.step)
         params = optbase.apply_updates(state.params, updates)
         out = TrainState(params=params, opt=opt_state, rng=rng)
-        return (out, loss) if meter is None else (out, loss, mbuf)
+        outs = (out, loss)
+        if meter is not None:
+            outs += (mbuf,)
+        if grad_transform is not None:
+            outs += (cstate,)
+        return outs if len(outs) > 2 else (out, loss)
 
     return step
 
@@ -320,6 +335,7 @@ def make_baseline_step(loss_fn: Callable, opt: optbase.Optimizer):
 def run_kfac_training(loss_fn, opt: kfac_lib.Kfac, params, batches,
                       n_tokens: int, seed: int = 0, jit: bool = True,
                       callback=None, mesh=None, curvature_axis=None,
+                      row_axis=None, curvature_compress=None,
                       state: Optional[TrainState] = None,
                       overlap: bool = False, writer=None,
                       metrics_every: int = 0, health=None, policy=None,
@@ -329,7 +345,10 @@ def run_kfac_training(loss_fn, opt: kfac_lib.Kfac, params, batches,
     per the paper's T_* schedules (work scheduler; ``cfg.stagger`` phases
     heavy work; ``cfg.async_heavy``/``heavy_lag`` pipeline it).  ``mesh``
     + ``curvature_axis`` attach the distributed curvature engine so
-    factor work shards across that mesh axis.  ``overlap=True``
+    factor work shards across that mesh axis; ``row_axis`` adds the 2D
+    path (dense M row-sharded over it, heavy FLOPs split across both
+    axes) and ``curvature_compress`` routes the engine's U gathers
+    through rank-q PowerSGD factors (lossy, opt-in).  ``overlap=True``
     additionally dispatches launched heavy work through an
     :class:`AsyncInverseRunner` (replicated async configs only);
     otherwise landings compute in-graph — same result either way.
@@ -364,7 +383,9 @@ def run_kfac_training(loss_fn, opt: kfac_lib.Kfac, params, batches,
     Returns (final TrainState, losses)."""
     if mesh is not None and curvature_axis is not None:
         from repro.distributed import curvature as curvature_lib
-        curvature_lib.CurvatureEngine.for_kfac(opt, mesh, curvature_axis)
+        curvature_lib.CurvatureEngine.for_kfac(
+            opt, mesh, curvature_axis, row_axis=row_axis,
+            compress_rank=curvature_compress)
     from repro.train import checkpoint as ckpt_lib
     from repro.train import health as health_lib
     sched = opt.scheduler()

@@ -43,6 +43,10 @@ class StragglerDetector:
     rebalance_after: int = 8     # consecutive slow steps → REBALANCE
     warmup: int = 3              # steps before any flagging
     writer: object = None
+    mesh_desc: str = ""          # e.g. "data=4×curv=2": a REBALANCE on a
+                                 # 2D mesh repartitions both axes' slot /
+                                 # row ranges, so the remediation event
+                                 # names the topology being rebuilt
 
     def __post_init__(self):
         self._streaks: Dict[str, int] = {}
@@ -55,10 +59,11 @@ class StragglerDetector:
         self.events.append({"step": step, "host": host,
                             "action": action, "dt": dt})
         if self.writer is not None:
+            mesh = f" on mesh {self.mesh_desc}" if self.mesh_desc else ""
             self.writer.emit(
                 "remediation", step=int(step), stage=4, action=action,
                 detail=f"straggler {host}: {dt * 1e3:.0f}ms vs fleet "
-                       f"median {med * 1e3:.0f}ms")
+                       f"median {med * 1e3:.0f}ms{mesh}")
 
     def observe_step(self, step: int, times: Dict[str, float]
                      ) -> Dict[str, Action]:

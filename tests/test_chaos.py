@@ -42,7 +42,8 @@ from test_obs import (N_BS, _batches, _cfg, _make_mlp, _marked_variants,
 
 
 def _train(variant, steps=9, health=None, policy_obj=None, overlap=False,
-           mesh=None, curvature_axis=None, writer=None, metrics_every=0,
+           mesh=None, curvature_axis=None, row_axis=None,
+           curvature_compress=None, writer=None, metrics_every=0,
            chaos=None, ckpt_dir=None, ckpt_every=5, state=None,
            batches=None, **cfg_kw):
     params, taps = _make_mlp()
@@ -51,6 +52,7 @@ def _train(variant, steps=9, health=None, policy_obj=None, overlap=False,
         _mlp_loss, opt, None if state is not None else params,
         batches if batches is not None else _batches(steps),
         n_tokens=N_BS, seed=0, mesh=mesh, curvature_axis=curvature_axis,
+        row_axis=row_axis, curvature_compress=curvature_compress,
         state=state, overlap=overlap, writer=writer,
         metrics_every=metrics_every, health=health, policy=policy_obj,
         chaos=chaos, ckpt_dir=ckpt_dir, ckpt_every=ckpt_every)
@@ -592,6 +594,65 @@ def test_host_loss_mid_cycle_resumes_phase_on_shrunk_mesh(tmp_path):
     # cadence resumes mid-cycle: label-for-label the uninterrupted tail,
     # and NOT a from-scratch restart (whose first step is the warmup
     # heavy spike)
+    assert res_labels == ref_labels[man["step"] + 1:]
+    warm_label = opt.scheduler().work(0).label
+    assert res_labels[0] != warm_label
+    assert _all_finite(state.params)
+    np.testing.assert_allclose(tail, ref_losses[man["step"] + 1:],
+                               rtol=5e-3, atol=1e-5)
+
+@pytest.mark.slow
+def test_host_loss_mid_cycle_2d_mesh_compressed_collectives(tmp_path):
+    """The 2D-mesh variant of the host-loss drill, with the curvature
+    engine's (U, λ) gathers riding rank-q PowerSGD factors: kill the
+    host mid-stagger-cycle on a 4×2 data × curv mesh, resume on the 2×2
+    rung (a dropped data row).  Compression is per-slot with a
+    deterministic seeded basis, so it is mesh-shape-invariant: the
+    resumed compressed run must track the uninterrupted compressed 4×2
+    reference, cadence resuming from ``KfacState.phase`` (no warmup
+    spike), losses and params finite."""
+    if len(jax.devices()) < 8:
+        pytest.skip("needs 8 host devices")
+    steps, fail_at, ckpt_dir = 12, 7, str(tmp_path / "ckpt")
+    kw = dict(stagger=True, stagger_splits=1)
+    mesh42 = mesh_lib.make_mesh((4, 2), ("data", "curv"))
+    ref_path = str(tmp_path / "ref.jsonl")
+    with ev_lib.TelemetryWriter(ref_path, console=False) as w:
+        _, ref_losses = _train("rkfac", steps=steps, mesh=mesh42,
+                               curvature_axis="curv", row_axis="data",
+                               curvature_compress=6, writer=w, **kw)
+    ref_labels = [e["phase"] for e in ev_lib.read_events(ref_path)
+                  if e["type"] == "step"]
+
+    chaos = ChaosMonkey((Fault(fail_at, "host_loss"),))
+    with pytest.raises(RuntimeError, match="injected node failure"):
+        _train("rkfac", steps=steps, mesh=mesh42, curvature_axis="curv",
+               row_axis="data", curvature_compress=6, chaos=chaos,
+               ckpt_dir=ckpt_dir, ckpt_every=2, **kw)
+    assert ckpt_lib.latest_step(ckpt_dir) == 6
+
+    # survivors: the 2×2 ladder rung — the data axis shrank
+    ladder = elastic.device_ladder(8, axes=("data", "curv"),
+                                   shape=(4, 2))
+    assert ladder[1][0] == (2, 2)
+    assert elastic.shrunk_axes(ladder[0][0], ladder[1][0],
+                               ("data", "curv")) == ("data",)
+    mesh22 = mesh_lib.make_mesh((2, 2), ("data", "curv"))
+    params, taps = _make_mlp()
+    opt = kfac_lib.Kfac(_cfg("rkfac", **kw), taps)
+    template = loop.TrainState(params=params, opt=opt.init(params),
+                               rng=jax.random.PRNGKey(0))
+    restored, man = ckpt_lib.restore_latest_healthy(ckpt_dir, template)
+    assert man["step"] == 6 and man["skipped_corrupt"] == []
+    res_path = str(tmp_path / "resumed.jsonl")
+    with ev_lib.TelemetryWriter(res_path, console=False) as w:
+        state, tail = loop.run_kfac_training(
+            _mlp_loss, opt, None, _batches(steps)[man["step"] + 1:],
+            n_tokens=N_BS, state=restored, mesh=mesh22,
+            curvature_axis="curv", row_axis="data",
+            curvature_compress=6, writer=w)
+    res_labels = [e["phase"] for e in ev_lib.read_events(res_path)
+                  if e["type"] == "step"]
     assert res_labels == ref_labels[man["step"] + 1:]
     warm_label = opt.scheduler().work(0).label
     assert res_labels[0] != warm_label

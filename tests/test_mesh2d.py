@@ -1,0 +1,602 @@
+"""2D data × curvature mesh (distributed/curvature.py ``row_axis`` path):
+replicated ≡ 1D-sharded (1×8) ≡ 2D-sharded (4×2) parity for sync and
+async-lag0 pipelines, row-sharded dense M bookkeeping, compressed (U, λ)
+collectives, warm-started gradient compression, 2D elastic ladder
+shapes, and mixed-mesh checkpoint restores (save 4×2 → resume 2×2 /
+replicated).
+"""
+import os
+
+import numpy as np
+import pytest
+
+# must precede backend init in THIS process; harmless if jax was already
+# initialized with one device (the mesh tests then skip)
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kfac as kfac_lib, policy
+from synthdata import tap_data
+from repro.distributed import compress as compress_lib
+from repro.distributed import curvature as curv
+from repro.launch import mesh as mesh_lib
+from repro.optim import base as optbase
+from repro.train import elastic
+
+N_STAT = 16
+
+#: fast-tier variant subset for the expensive 8-device parity tests; the
+#: slow-marked rest still run per-PR in the 2d-mesh-parity CI job, which
+#: runs this file with no marker filter.
+_FAST_VARIANTS = {"bkfac"}
+
+
+def _marked_variants():
+    return [v if v in _FAST_VARIANTS
+            else pytest.param(v, marks=pytest.mark.slow)
+            for v in policy.VARIANTS]
+
+
+def _mixed_taps():
+    """Same mixed FC + scanned + MoE model as the 1D parity suite — every
+    factor side (48, 32) divides the 4-member row axis, so each bucket's
+    dense M row-shards."""
+    return {
+        "fc":   kfac_lib.TapInfo("fc/w", 48, 32, n_stat=N_STAT),
+        "fc2":  kfac_lib.TapInfo("fc2/w", 48, 32, n_stat=N_STAT),
+        "scan": kfac_lib.TapInfo("scan/w", 48, 48, stack=(3,),
+                                 n_stat=N_STAT),
+        "moe":  kfac_lib.TapInfo("moe/w", 48, 32, stack=(2, 2),
+                                 n_stat=N_STAT),
+    }
+
+
+def _need8():
+    if len(jax.devices()) < 8:
+        pytest.skip("needs 8 host devices")
+
+
+def _attach(opt, mode, compress_rank=None):
+    """mode: 'rep' (no engine) | '1d' (1×8 curv) | '2d' (4×2 data×curv)."""
+    if mode == "1d":
+        mesh = mesh_lib.make_mesh((8,), ("curv",))
+        curv.CurvatureEngine.for_kfac(opt, mesh, "curv",
+                                      compress_rank=compress_rank)
+    elif mode == "2d":
+        mesh = mesh_lib.make_mesh((4, 2), ("data", "curv"))
+        curv.CurvatureEngine.for_kfac(opt, mesh, "curv", row_axis="data",
+                                      compress_rank=compress_rank)
+    else:
+        assert mode == "rep"
+
+
+def _run(taps, variant, mode, *, stagger=False, steps=4,
+         compress_rank=None):
+    pol = policy.PolicyConfig(variant=variant, r=8, max_dense_dim=8192)
+    cfg = kfac_lib.KfacConfig(policy=pol, lr=optbase.constant(0.05),
+                              momentum=0.9, T_updt=1, T_brand=1, T_inv=3,
+                              T_rsvd=3, T_corct=3, stagger=stagger,
+                              stagger_splits=4)
+    opt = kfac_lib.Kfac(cfg, taps)
+    _attach(opt, mode, compress_rank)
+    # identical masks on all sides: align to the full mesh either way
+    # (an engine-attached scheduler would pick align=8 automatically)
+    sched = opt.scheduler(align=8)
+    params, grads, acts, pgs = tap_data(taps)
+    st = opt.init(params)
+
+    def step(grads, st, rng, work):
+        return opt.update(grads, st, params, acts=acts, probe_grads=pgs,
+                          n_tokens=N_STAT, rng=rng, work=work)
+    step = jax.jit(step, static_argnames=("work",))
+
+    outs = []
+    for s in range(steps):
+        upd, st = step(grads, st,
+                       jax.random.fold_in(jax.random.PRNGKey(7), s),
+                       sched.work(s))
+        outs.append(upd)
+    return outs, st
+
+
+def _run_async(taps, variant, mode, *, lag, steps=5):
+    pol = policy.PolicyConfig(variant=variant, r=8, max_dense_dim=8192)
+    cfg = kfac_lib.KfacConfig(policy=pol, lr=optbase.constant(0.05),
+                              T_updt=1, T_brand=1, T_inv=3, T_rsvd=3,
+                              T_corct=3, stagger=True, stagger_splits=2,
+                              async_heavy=True, heavy_lag=lag)
+    opt = kfac_lib.Kfac(cfg, taps)
+    _attach(opt, mode)
+    sched = opt.scheduler(align=8)
+    params = tap_data(taps)[0]
+    st = opt.init(params)
+
+    def step(grads, st, acts, pgs, rng, work):
+        return opt.update(grads, st, params, acts=acts, probe_grads=pgs,
+                          n_tokens=N_STAT, rng=rng, work=work)
+    step = jax.jit(step, static_argnames=("work",))
+    outs = []
+    for s in range(steps):
+        _, grads, acts, pgs = tap_data(taps, jax.random.PRNGKey(200 + s))
+        upd, st = step(grads, st, acts, pgs,
+                       jax.random.fold_in(jax.random.PRNGKey(7), s),
+                       sched.work(s))
+        outs.append(upd)
+    return outs, st
+
+
+def _assert_close(a, b, taps, atol):
+    for n in taps:
+        x, y = np.asarray(a[n]["w"]), np.asarray(b[n]["w"])
+        assert np.isfinite(x).all() and np.isfinite(y).all()
+        np.testing.assert_allclose(x, y, atol=atol, rtol=1e-4)
+
+
+def _assert_factors_close(sta, stb, taps):
+    """Factor parity up to the eigenbasis: M and U diag(D) Uᵀ (raw U
+    columns of a degenerate eigenpair may rotate under fp-level input
+    perturbations)."""
+    for name in taps:
+        for fa, fb in ((sta.factors[name].A, stb.factors[name].A),
+                       (sta.factors[name].G, stb.factors[name].G)):
+            np.testing.assert_allclose(np.asarray(fa.M), np.asarray(fb.M),
+                                       atol=1e-5, rtol=1e-4)
+            ra = np.asarray(fa.U * fa.D[..., None, :]) @ \
+                np.swapaxes(np.asarray(fa.U), -1, -2)
+            rb = np.asarray(fb.U * fb.D[..., None, :]) @ \
+                np.swapaxes(np.asarray(fb.U), -1, -2)
+            np.testing.assert_allclose(ra, rb, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# engine bookkeeping (metadata only — no parity steps)
+# ---------------------------------------------------------------------------
+
+class TestEngine2DMetadata:
+    def _opt(self):
+        return kfac_lib.Kfac(kfac_lib.KfacConfig(
+            policy=policy.PolicyConfig(variant="bkfacc", r=8)),
+            _mixed_taps())
+
+    def test_row_blocks_and_align(self):
+        _need8()
+        mesh = mesh_lib.make_mesh((4, 2), ("data", "curv"))
+        eng = curv.CurvatureEngine(mesh, "curv", self._opt().factor_buckets,
+                                   row_axis="data")
+        assert eng.n_devices == 2 and eng.n_rows == 4
+        assert eng.align == 8
+        for spec, rb in zip(eng.specs, eng.row_blocks):
+            if spec.needs_m:
+                assert rb == spec.d // 4
+            else:
+                assert rb is None
+        assert "rows=data" in eng.describe()
+
+    def test_m_bytes_per_device_fraction(self):
+        """Per-device dense-M memory is ~1/N of replicated across the
+        WHOLE 4×2 mesh (slots /2, rows /4) — the tentpole memory claim."""
+        _need8()
+        mesh = mesh_lib.make_mesh((4, 2), ("data", "curv"))
+        eng = curv.CurvatureEngine(mesh, "curv", self._opt().factor_buckets,
+                                   row_axis="data")
+        rep, dev = eng.m_bytes()
+        assert rep > 0
+        # padding of B up to N_curv keeps the ratio ≤ padded/B / 8
+        assert dev <= rep / 8 * 2   # generous: tiny buckets pad B 2→2
+        mesh1 = mesh_lib.make_mesh((8,), ("curv",))
+        eng1 = curv.CurvatureEngine(mesh1, "curv",
+                                    self._opt().factor_buckets)
+        _, dev1 = eng1.m_bytes()
+        # 2D holds strictly less dense M per device than 1D at equal
+        # device count: the row axis divides what slot-sharding cannot
+        assert dev < dev1
+
+    def test_collective_bytes_compression_ratio(self):
+        _need8()
+        mesh = mesh_lib.make_mesh((4, 2), ("data", "curv"))
+        fb = self._opt().factor_buckets
+        raw = curv.CurvatureEngine(mesh, "curv", fb, row_axis="data")
+        cmp4 = curv.CurvatureEngine(mesh, "curv", fb, row_axis="data",
+                                    compress_rank=4)
+        b_raw = raw.collective_bytes()
+        b_cmp = cmp4.collective_bytes()
+        assert b_raw["on_wire"] == b_raw["uncompressed"]
+        assert b_cmp["uncompressed"] == b_raw["uncompressed"]
+        assert b_cmp["on_wire"] < b_raw["on_wire"]
+
+    def test_row_axis_must_differ(self):
+        _need8()
+        mesh = mesh_lib.make_mesh((4, 2), ("data", "curv"))
+        with pytest.raises(ValueError):
+            curv.CurvatureEngine(mesh, "curv", self._opt().factor_buckets,
+                                 row_axis="curv")
+
+
+# ---------------------------------------------------------------------------
+# replicated ≡ 1×8 ≡ 4×2 parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("variant", _marked_variants())
+def test_2d_sync_matches_replicated_and_1d(variant):
+    """The three-way exactness contract, synchronous path: same per-slot
+    programs, same per-slot keys, row-block-deterministic stats — so the
+    4×2 run matches both the 1×8 and the replicated run allclose."""
+    _need8()
+    taps = _mixed_taps()
+    a, _ = _run(taps, variant, "2d")
+    b, _ = _run(taps, variant, "rep")
+    c, _ = _run(taps, variant, "1d")
+    for ua, ub, uc in zip(a, b, c):
+        _assert_close(ua, ub, taps, atol=1e-5)
+        _assert_close(ua, uc, taps, atol=1e-5)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("variant", ["kfac", "bkfacc", "nskfac"])
+def test_2d_staggered_matches_replicated(variant):
+    """Staggered masks (align=8) localize to the curv axis AND split
+    across the 4 row members; factor states agree including the
+    row-sharded → re-gathered dense M."""
+    _need8()
+    taps = _mixed_taps()
+    a, sta = _run(taps, variant, "2d", stagger=True)
+    b, stb = _run(taps, variant, "rep", stagger=True)
+    for ua, ub in zip(a, b):
+        _assert_close(ua, ub, taps, atol=1e-5)
+    _assert_factors_close(sta, stb, taps)
+
+
+@pytest.mark.parametrize("variant", _marked_variants())
+def test_async_lag0_2d_matches_sync_and_1d(variant):
+    """Async launch/land at lag=0 on the 2D mesh: the transient row
+    gathers around the launch/land phases reproduce the synchronous
+    replicated numerics exactly, across all policy variants."""
+    _need8()
+    taps = _mixed_taps()
+    a, _ = _run_async(taps, variant, "2d", lag=0)
+    b, _ = _run_async(taps, variant, "rep", lag=0)
+    c, _ = _run_async(taps, variant, "1d", lag=0)
+    for ua, ub, uc in zip(a, b, c):
+        _assert_close(ua, ub, taps, atol=1e-5)
+        _assert_close(ua, uc, taps, atol=1e-5)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("variant", ["kfac", "bkfacc"])
+def test_async_lag_2d_matches_replicated(variant):
+    """lag>0 on the 2D mesh: the in-flight snapshot's dense M rides
+    row-sharded between pipeline phases and gathers transiently at
+    launch/land — per-device pipeline ≡ replicated pipeline."""
+    _need8()
+    taps = _mixed_taps()
+    a, sta = _run_async(taps, variant, "2d", lag=2, steps=6)
+    b, stb = _run_async(taps, variant, "rep", lag=2, steps=6)
+    for ua, ub in zip(a, b):
+        _assert_close(ua, ub, taps, atol=1e-5)
+    for bi in sta.inflight:
+        np.testing.assert_allclose(np.asarray(sta.inflight[bi].M),
+                                   np.asarray(stb.inflight[bi].M),
+                                   atol=1e-5, rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(sta.inflight[bi].panels),
+                                   np.asarray(stb.inflight[bi].panels),
+                                   atol=1e-5, rtol=1e-4)
+
+
+def test_2d_row_split_heavy_matches_replicated():
+    """An 8-slot stacked bucket: the local heavy range (4 slots per curv
+    member) divides the 4-member row axis, so the engine's row-split
+    branch fires — each row member computes 1 slot's EVD and the chunks
+    re-gather.  The small buckets of the mixed model only exercise the
+    row-replicated fallback."""
+    _need8()
+    taps = {"scan": kfac_lib.TapInfo("scan/w", 48, 48, stack=(8,),
+                                     n_stat=N_STAT)}
+    a, sta = _run(taps, "kfac", "2d", steps=4)
+    b, stb = _run(taps, "kfac", "rep", steps=4)
+    for ua, ub in zip(a, b):
+        _assert_close(ua, ub, taps, atol=1e-5)
+    _assert_factors_close(sta, stb, taps)
+
+
+# ---------------------------------------------------------------------------
+# mixed-axis checkpoint restore: save on 4×2, resume on 2×2 / replicated
+# ---------------------------------------------------------------------------
+
+def _ckpt_model():
+    from repro.models import layers
+    taps = {"fc": kfac_lib.TapInfo("fc/w", 48, 32, n_stat=N_STAT)}
+    key = jax.random.PRNGKey(0)
+    params = {"fc": {"w": jax.random.normal(key, (48, 32)) * 0.1}}
+
+    def loss_fn(p, probes, batch):
+        x, y = batch
+        h, act = layers.tapped_matmul(p["fc"]["w"], x,
+                                      probes.get("fc"), N_STAT)
+        return jnp.mean((h - y) ** 2), {"fc": act}
+
+    batches = [(jax.random.normal(jax.random.fold_in(key, i), (16, 48)),
+                jax.random.normal(jax.random.fold_in(key, 50 + i),
+                                  (16, 32)))
+               for i in range(8)]
+    return taps, params, loss_fn, batches
+
+
+def _ckpt_opt(taps, *, async_heavy=False):
+    cfg = kfac_lib.KfacConfig(
+        policy=policy.PolicyConfig(variant="kfac", r=4,
+                                   max_dense_dim=8192),
+        lr=optbase.constant(0.05), T_updt=1, T_inv=4, stagger=True,
+        stagger_splits=2, async_heavy=async_heavy,
+        heavy_lag=2 if async_heavy else 0)
+    return kfac_lib.Kfac(cfg, taps)
+
+
+def _drive(loss_fn, opt, params, batches, state=None):
+    """Minimal schedule-resuming driver with align pinned to 8 so every
+    mesh shape (4×2, 2×2, replicated) runs the identical work masks —
+    the cross-mesh parity premise."""
+    from repro.train import loop
+    sched = opt.scheduler(align=8)
+    k_off = 0
+    if state is None:
+        state = loop.TrainState(params=params, opt=opt.init(params),
+                                rng=jax.random.PRNGKey(5))
+    else:
+        k_off = int(jax.device_get(state.opt.phase))
+    step = jax.jit(loop.make_scheduled_kfac_step(loss_fn, opt, N_STAT),
+                   static_argnames=("work",))
+    losses = []
+    for i, batch in enumerate(batches):
+        state, loss = step(state, batch, sched.work(k_off + i))
+        losses.append(float(loss))
+    return state, losses
+
+
+def _mesh2d(shape):
+    return mesh_lib.make_mesh(shape, ("data", "curv"))
+
+
+@pytest.mark.slow
+def test_save_4x2_restore_2x2_matches_uninterrupted(tmp_path):
+    """Schema is mesh-agnostic: a checkpoint from a 4×2 run (row-sharded
+    M re-gathered at save) restores onto a 2×2 mesh and the resumed run
+    matches the uninterrupted 4×2 one."""
+    _need8()
+    from repro.train import checkpoint as ckpt_lib
+    from repro.train import loop
+    taps, params, loss_fn, batches = _ckpt_model()
+
+    opt_a = _ckpt_opt(taps)
+    curv.CurvatureEngine.for_kfac(opt_a, _mesh2d((4, 2)), "curv",
+                                  row_axis="data")
+    _, ref_losses = _drive(loss_fn, opt_a, params, batches)
+
+    opt_b = _ckpt_opt(taps)
+    curv.CurvatureEngine.for_kfac(opt_b, _mesh2d((4, 2)), "curv",
+                                  row_axis="data")
+    mid, head = _drive(loss_fn, opt_b, params, batches[:3])
+    ckpt_lib.save(str(tmp_path), 3, mid)
+
+    opt_c = _ckpt_opt(taps)
+    curv.CurvatureEngine.for_kfac(opt_c, _mesh2d((2, 2)), "curv",
+                                  row_axis="data")
+    template = loop.TrainState(params=params, opt=opt_c.init(params),
+                               rng=mid.rng)
+    restored, man = ckpt_lib.restore(str(tmp_path), template)
+    assert man["schema"] == ckpt_lib.SCHEMA_VERSION
+    _, tail = _drive(loss_fn, opt_c, None, batches[3:], state=restored)
+    np.testing.assert_allclose(head + tail, ref_losses, rtol=1e-5,
+                               atol=1e-7)
+
+
+@pytest.mark.slow
+def test_save_4x2_midlag_restore_replicated_matches(tmp_path):
+    """Async pipeline, checkpoint taken mid-lag (heavy launched on the
+    2D mesh, not yet landed): the in-flight buffers — including the
+    row-sharded snapshot M, re-gathered at save — restore onto a
+    replicated run and the landing still fires on schedule."""
+    _need8()
+    from repro.train import checkpoint as ckpt_lib
+    from repro.train import loop
+    taps, params, loss_fn, batches = _ckpt_model()
+
+    opt_a = _ckpt_opt(taps, async_heavy=True)
+    curv.CurvatureEngine.for_kfac(opt_a, _mesh2d((4, 2)), "curv",
+                                  row_axis="data")
+    _, ref_losses = _drive(loss_fn, opt_a, params, batches)
+
+    opt_b = _ckpt_opt(taps, async_heavy=True)
+    curv.CurvatureEngine.for_kfac(opt_b, _mesh2d((4, 2)), "curv",
+                                  row_axis="data")
+    sched = opt_b.scheduler(align=8)
+    launch_k = next(k for k in range(6)
+                    if any(r for r in sched.work(k).launch))
+    assert any(r for k in range(launch_k + 1, 8)
+               for r in sched.work(k).land), "test premise: landing later"
+    mid, head = _drive(loss_fn, opt_b, params, batches[:launch_k + 1])
+    assert any(x.size and float(jnp.abs(x).max()) > 0
+               for x in jax.tree_util.tree_leaves(mid.opt.inflight)), \
+        "test premise: snapshot actually in flight at the save"
+    ckpt_lib.save(str(tmp_path), launch_k, mid)
+
+    opt_c = _ckpt_opt(taps, async_heavy=True)     # replicated resume
+    template = loop.TrainState(params=params, opt=opt_c.init(params),
+                               rng=mid.rng)
+    restored, _ = ckpt_lib.restore(str(tmp_path), template)
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), atol=1e-6),
+        mid.opt.inflight, restored.opt.inflight)
+    _, tail = _drive(loss_fn, opt_c, None, batches[launch_k + 1:],
+                     state=restored)
+    np.testing.assert_allclose(head + tail, ref_losses, rtol=1e-5,
+                               atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# compressed (U, λ) collectives — lossy, so no strict parity: the
+# contract is finite, close-to-raw preconditioning + fewer bytes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_compressed_gather_stays_close_to_raw():
+    _need8()
+    taps = _mixed_taps()
+    a, _ = _run(taps, "bkfac", "2d", steps=3)
+    c, _ = _run(taps, "bkfac", "2d", steps=3, compress_rank=8)
+    for ua, uc in zip(a, c):
+        for n in taps:
+            x, y = np.asarray(ua[n]["w"]), np.asarray(uc[n]["w"])
+            assert np.isfinite(y).all()
+            # rank-8 covers the full Brand basis width on slots this
+            # small only approximately; demand the right scale, not bits
+            assert np.linalg.norm(x - y) <= 0.5 * np.linalg.norm(x) + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# warm-started gradient compression (compress_tree + CompressState)
+# ---------------------------------------------------------------------------
+
+class TestWarmStartCompression:
+    def test_round1_matches_stateless_cold_start(self):
+        """Round 1 of the stateful path is exactly the old stateless
+        cold start (the carry is initialized to the same seeded basis)."""
+        G = jax.random.normal(jax.random.PRNGKey(0), (64, 32))
+        cfg = compress_lib.CompressConfig(rank=4, min_size=1)
+        cstate = compress_lib.init_state({"w": G}, cfg)
+        approx, _ = compress_lib.compress_tree({"w": G}, cstate, cfg)
+        P, Q, _ = compress_lib.compress(G, jnp.zeros_like(G), None, cfg)
+        ref = compress_lib.decompress(P, Q, G.shape)
+        np.testing.assert_allclose(np.asarray(approx["w"]),
+                                   np.asarray(ref), atol=1e-6)
+
+    def test_state_carries_q_and_error(self):
+        G = jax.random.normal(jax.random.PRNGKey(1), (64, 32))
+        cfg = compress_lib.CompressConfig(rank=4, min_size=1)
+        cstate = compress_lib.init_state({"w": G}, cfg)
+        _, s1 = compress_lib.compress_tree({"w": G}, cstate, cfg)
+        assert s1.q["w"].shape == (32, 4)
+        # the carried Q is the data-dependent factor, not the seed
+        assert float(jnp.abs(s1.q["w"] - cstate.q["w"]).max()) > 1e-3
+        assert float(jnp.linalg.norm(s1.err["w"])) > 0
+
+    def test_warm_start_sharpens_basis_across_rounds(self):
+        """The mechanism the carry exists for: on a fixed matrix,
+        re-entering the previous round's Q makes each round another
+        power iteration — the rank-q approximation error falls toward
+        the best-rank-q floor, while cold restarts stay pinned at
+        single-iteration quality (EF is zeroed to isolate the basis)."""
+        k1, k2 = jax.random.split(jax.random.PRNGKey(9))
+        # decaying spectrum so rank-4 truncation has signal to find
+        s = jnp.diag(2.0 ** -jnp.arange(32, dtype=jnp.float32))
+        G = jax.random.normal(k1, (64, 32)) @ s
+        cfg = compress_lib.CompressConfig(rank=4, min_size=1)
+        zero = jnp.zeros_like(G)
+
+        def rounds(warm, n=6):
+            qc, errs = None, []
+            for _ in range(n):
+                P, Q, _ = compress_lib.compress(
+                    G, zero, qc if warm else None, cfg)
+                if warm:
+                    qc = Q
+                A = compress_lib.decompress(P, Q, G.shape)
+                errs.append(float(jnp.linalg.norm(G - A) /
+                                  jnp.linalg.norm(G)))
+            return errs
+
+        warm, cold = rounds(True), rounds(False)
+        assert all(abs(c - cold[0]) < 1e-5 for c in cold)   # pinned
+        assert warm[-1] < cold[-1] - 1e-6, (warm, cold)
+        assert warm[-1] <= min(warm) + 1e-6                 # monotone-ish
+
+    @pytest.mark.slow
+    def test_warm_start_convergence_parity_with_cold(self):
+        """Least-squares EF-SGD, warm-started power iteration (the fixed
+        ``compress_tree``) vs. cold restarts every round (the old
+        behavior): both converge.  Warm is not strictly tighter here —
+        on a rank-deficient toy the persistent basis locks a subspace
+        and EF carries the rest, a tail-convergence quirk the per-round
+        error test above shows is not a compression-quality regression."""
+        X = jax.random.normal(jax.random.PRNGKey(3), (128, 16))
+        Wt = jax.random.normal(jax.random.PRNGKey(4), (16, 8))
+        Y = X @ Wt
+        cfg = compress_lib.CompressConfig(rank=2, min_size=1)
+
+        def run(warm):
+            W = jnp.zeros((16, 8))
+            cstate = compress_lib.init_state({"w": W}, cfg)
+            for _ in range(300):
+                G = X.T @ (X @ W - Y) / 128
+                if warm:
+                    approx, cstate = compress_lib.compress_tree(
+                        {"w": G}, cstate, cfg)
+                    g = approx["w"]
+                else:
+                    P, Q, err = compress_lib.compress(
+                        G, cstate.err["w"], None, cfg)
+                    cstate = compress_lib.CompressState(
+                        err={"w": err}, q=cstate.q)
+                    g = compress_lib.decompress(P, Q, G.shape)
+                W = W - 0.05 * g
+            return float(jnp.linalg.norm(X @ W - Y) / jnp.linalg.norm(Y))
+
+        warm, cold = run(True), run(False)
+        assert warm < 0.1, warm
+        assert cold < 0.1, cold
+        assert warm <= cold * 3, (warm, cold)
+
+
+# ---------------------------------------------------------------------------
+# 2D elastic ladder (train/elastic.py)
+# ---------------------------------------------------------------------------
+
+class TestLadder2D:
+    def test_2d_ladder_halves_largest_dim(self):
+        rungs = elastic.device_ladder(8, axes=("data", "curv"),
+                                      shape=(4, 2))
+        assert rungs == (((4, 2), ("data", "curv")),
+                         ((2, 2), ("data", "curv")),
+                         ((1, 2), ("data", "curv")),
+                         ((1, 1), ("data", "curv")))
+
+    def test_1d_ladder_unchanged(self):
+        # the pinned 1D shapes (test_chaos.py) must not move
+        assert elastic.device_ladder(8) == (
+            ((8,), ("data",)), ((4,), ("data",)),
+            ((2,), ("data",)), ((1,), ("data",)))
+
+    def test_shrunk_axes_names_the_dropped_dimension(self):
+        axes = ("data", "curv")
+        assert elastic.shrunk_axes((4, 2), (2, 2), axes) == ("data",)
+        assert elastic.shrunk_axes((1, 2), (1, 1), axes) == ("curv",)
+        assert elastic.shrunk_axes((2, 2), (2, 2), axes) == ()
+
+    def test_runner_emits_axis_on_2d_shrink(self, tmp_path):
+        """A rung-to-rung shrink on a 2D ladder names the dropped axis
+        in the repartition event (which capacity dimension was lost)."""
+        _need8()
+        events = []
+
+        class W:
+            def emit(self, etype, **fields):
+                events.append((etype, fields))
+
+        def make_state(mesh):
+            return {"x": jnp.zeros((4,))}
+
+        def make_step(mesh):
+            return lambda st, k: {"x": st["x"] + 1}
+
+        ladder = elastic.device_ladder(8, axes=("data", "curv"),
+                                       shape=(4, 2))
+        runner = elastic.ElasticRunner(
+            ckpt_dir=str(tmp_path), make_state=make_state,
+            make_step=make_step, meshes=ladder,
+            injector=elastic.FailureInjector(fail_at=[2]),
+            writer=W())
+        runner.run(5)
+        reps = [f for e, f in events if e == "repartition"]
+        assert any(f.get("axis") == "data" for f in reps), reps
