@@ -72,6 +72,7 @@ REPO = os.path.dirname(HERE)
 BENCHES = {
     "step": ("step_bench.py", "BENCH_step.json"),
     "kernels": ("kernels_bench.py", "BENCH_kernels.json"),
+    "serve": ("serve_bench.py", "BENCH_serve.json"),
 }
 
 _FALSE_MARK = re.compile(r"\b\w+=False\b")
@@ -293,7 +294,15 @@ def main() -> int:
                     help="cap on the per-row observed-noise multiplier "
                          "(keeps the gate meaningful for very jittery "
                          "rows)")
+    ap.add_argument("--only", action="append", choices=sorted(BENCHES),
+                    default=None, metavar="BENCH",
+                    help="gate only the named bench(es) (repeatable); "
+                         "default: all of them.  Baseline updates honor "
+                         "it too, so one bench's baseline can be "
+                         "refreshed without re-timing the others")
     args = ap.parse_args()
+    benches = {k: v for k, v in BENCHES.items()
+               if args.only is None or k in args.only}
 
     fresh_dir = args.fresh_dir or tempfile.mkdtemp(prefix="bench_fresh_")
     os.makedirs(fresh_dir, exist_ok=True)
@@ -306,7 +315,7 @@ def main() -> int:
         stamp_calibration(path, cal_us)
 
     failures: List[str] = []
-    for bench, (script, artifact) in BENCHES.items():
+    for bench, (script, artifact) in benches.items():
         fresh_path = os.path.join(fresh_dir, artifact)
         if not args.skip_run:
             run_and_stamp(script, fresh_path)

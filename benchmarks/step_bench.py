@@ -121,13 +121,12 @@ def _opt(taps, bucketed: bool, quick: bool, variant: str = "bkfac"):
 
 
 def _step_fn(opt, params, acts, pgs, n_tokens, flags):
-    do_stats, do_light, do_heavy = flags
+    work = opt.uniform_work(*flags)
 
     @jax.jit
     def step(grads, state, rng):
         return opt.update(grads, state, params, acts=acts, probe_grads=pgs,
-                          n_tokens=n_tokens, rng=rng, do_stats=do_stats,
-                          do_light=do_light, do_heavy=do_heavy)
+                          n_tokens=n_tokens, rng=rng, work=work)
     return step
 
 

@@ -6,18 +6,16 @@
 import jax
 import jax.numpy as jnp
 
-from repro.core import kfac as kfac_lib
-from repro.core import policy
+from repro import api
 from repro.models import layers
 from repro.optim import base as optbase
-from repro.train import loop
 
 D_IN, D_H, D_OUT, BATCH, N_STAT = 32, 256, 8, 64, 32
 
 # 1) a model with K-FAC taps: each tapped matmul gets a TapInfo
 taps = {
-    "fc0": kfac_lib.TapInfo("fc0/w", D_IN, D_H, n_stat=N_STAT),
-    "fc1": kfac_lib.TapInfo("fc1/w", D_H, D_OUT, n_stat=N_STAT),
+    "fc0": api.TapInfo("fc0/w", D_IN, D_H, n_stat=N_STAT),
+    "fc1": api.TapInfo("fc1/w", D_H, D_OUT, n_stat=N_STAT),
 }
 
 
@@ -39,11 +37,11 @@ def loss_fn(params, probes, batch):
 
 
 # 2) pick a paper variant: bkfac | brkfac | bkfacc | rkfac | kfac
-cfg = kfac_lib.KfacConfig(
-    policy=policy.PolicyConfig(variant="bkfac", r=32),
+cfg = api.KfacConfig(
+    policy=api.PolicyConfig(variant="bkfac", r=32),
     lr=optbase.constant(0.05), damping_phi=optbase.constant(0.1),
     clip=1.0, T_updt=1, T_brand=1)
-opt = kfac_lib.Kfac(cfg, taps)
+opt = api.Kfac(cfg, taps)
 
 # 3) train
 key = jax.random.PRNGKey(0)
@@ -54,8 +52,8 @@ for i in range(50):
     batches.append((x, jnp.tanh(x @ W_true)))
 
 params = init(jax.random.PRNGKey(1))
-state, losses = loop.run_kfac_training(loss_fn, opt, params, batches,
-                                       n_tokens=BATCH)
+state, losses = api.run_kfac_training(loss_fn, opt, params, batches,
+                                      n_tokens=BATCH)
 print(f"loss: {losses[0]:.4f} -> {losses[-1]:.4f} "
       f"({cfg.policy.variant}, {len(losses)} steps)")
 assert losses[-1] < 0.3 * losses[0]

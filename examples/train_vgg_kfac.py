@@ -55,8 +55,9 @@ def main():
         fallback_lr=optbase.constant(3e-3))
     opt = kfac_lib.Kfac(kcfg, taps)
     # run_kfac_training drives the work scheduler (staggered iff
-    # cfg.stagger); pass mesh=/curvature_axis= there to also shard the
-    # factor work across a device mesh (docs/distributed.md)
+    # cfg.stagger); pass dist=DistSpec(mesh=..., curvature_axis=...)
+    # there to also shard the factor work across a device mesh
+    # (docs/distributed.md, repro.specs)
 
     stream = ImageStream(batch=args.batch, seed=0)
     batches = [stream.batch_at(i) for i in range(args.steps)]

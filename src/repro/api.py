@@ -1,0 +1,62 @@
+"""Stable public API surface.
+
+Everything a downstream user needs rides this one module::
+
+    from repro import api
+
+    opt = api.Kfac(api.KfacConfig(...), taps)
+    params, state = api.run_kfac_training(
+        loss_fn, opt, params, batches, n_tokens=...,
+        dist=api.DistSpec(mesh=mesh, curvature_axis="curv"),
+        obs=api.ObsSpec(writer=api.TelemetryWriter("events.jsonl")),
+        ckpt=api.CkptSpec(dir="ckpt"))
+
+    bank = api.TenantBank(opt)              # stacked multi-tenant states
+    svc = api.TenantService(lm, opt, params, n_tenants=8)
+
+Internal module paths (``repro.core.*``, ``repro.train.*``, …) remain
+importable but are NOT covered by the deprecation policy; symbols listed
+in ``__all__`` here are.  Legacy loose kwargs on the training entry
+points keep working for one deprecation cycle (a ``DeprecationWarning``
+points at the spec replacement) — see docs/api.md for the mapping.
+"""
+from __future__ import annotations
+
+# optimizer core
+from repro.core.kfac import Kfac, KfacConfig, KfacState, TapInfo
+from repro.core.policy import PolicyConfig
+from repro.core.schedule import Scheduler, StepWork, group_by_work
+from repro.core.tenant import TenantBank, tree_stack, tree_unstack
+
+# typed option specs (PR 10 API consolidation)
+from repro.specs import CkptSpec, DistSpec, ObsSpec, ResilienceSpec
+
+# training entry points
+from repro.train.loop import (kfac_grads, make_scheduled_kfac_step,
+                              run_kfac_training)
+from repro.launch.steps import build_train_step, default_kfac_config
+
+# serving
+from repro.serve.engine import Engine, Request
+from repro.serve.service import FinetuneRequest, TenantService
+
+# observability
+from repro.obs import TelemetryWriter
+
+__all__ = [
+    # optimizer
+    "Kfac", "KfacConfig", "KfacState", "PolicyConfig", "TapInfo",
+    "Scheduler", "StepWork", "group_by_work",
+    # multi-tenant
+    "TenantBank", "tree_stack", "tree_unstack",
+    "TenantService", "FinetuneRequest",
+    # specs
+    "DistSpec", "ObsSpec", "CkptSpec", "ResilienceSpec",
+    # training
+    "run_kfac_training", "make_scheduled_kfac_step", "kfac_grads",
+    "build_train_step", "default_kfac_config",
+    # serving
+    "Engine", "Request",
+    # observability
+    "TelemetryWriter",
+]

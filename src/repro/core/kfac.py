@@ -23,8 +23,8 @@ are global booleans; heavy work is *per factor bucket* as static slot
 ranges, which is what lets the scheduler stagger heavy overwrites across
 the T_inv window (constant small per-step cost instead of a spike) and
 lets the distributed curvature engine shard them across the mesh.  The
-legacy three python bools are still accepted and are converted to a
-uniform mask:
+legacy three python bools are still accepted for one deprecation cycle
+(warn once, then converted to a uniform mask):
 
   do_stats  = k % T_updt == 0                      (EA absorb, all variants)
   do_light  = k % T_brand == 0   (B-variants: Brand update;   else no-op)
@@ -90,9 +90,17 @@ class KfacConfig:
     fallback_wd: float = 0.0
 
     def flags(self, step: int) -> Dict[str, bool]:
-        """Static step-variant flags for python-level dispatch (legacy
-        three-bool view; the variant → heavy-period mapping lives in one
-        table in core/policy.py, see schedule.legacy_flags)."""
+        """DEPRECATED legacy three-bool view of the step variant; the
+        scheduler's StepWork masks (``Kfac.scheduler().work(step)``)
+        subsumed it in PR 3.  Warns once, then delegates to
+        schedule.legacy_flags (the variant → heavy-period mapping lives
+        in one table in core/policy.py)."""
+        from repro import specs as specs_lib
+        specs_lib.warn_once(
+            "KfacConfig.flags",
+            "KfacConfig.flags(step) is deprecated; use "
+            "Kfac.scheduler().work(step) (a StepWork mask) or "
+            "Kfac.uniform_work(...)")
         return schedule.legacy_flags(self, step)
 
 
@@ -568,6 +576,12 @@ class Kfac:
         unguarded step's."""
         cfg = self.cfg
         if work is None:
+            from repro import specs as specs_lib
+            specs_lib.warn_once(
+                "Kfac.update:bools",
+                "Kfac.update(do_stats=, do_light=, do_heavy=) is "
+                "deprecated; pass work=Kfac.uniform_work(...) (a StepWork "
+                "mask, jit static_argnames=('work',))")
             work = self.uniform_work(bool(do_stats), bool(do_light),
                                      bool(do_heavy))
         first = state.n_stats == 0

@@ -343,10 +343,20 @@ class Scheduler:
     # -- phase assignment --------------------------------------------------
     def _assign_phases(self, splits: int, align: int) -> Tuple[Unit, ...]:
         T = self.T_heavy
-        if T is None:
-            return ()
-        chunks = []                      # (bucket_idx, lo, hi, snap)
         from repro.core import kfactor   # local: avoid import at module top
+        if T is None:
+            # Pure-Brand variants have no periodic heavy, but shape
+            # classes the policy demoted to dense modes (EVD/NS — dims
+            # too small for a low-rank Brand representation) populate
+            # their (U, D) ONLY through a heavy overwrite.  Give each a
+            # warmup-only unit (fires once at step 0, see work()) or its
+            # spectrum stays empty forever and every preconditioned
+            # update drowns in the 1/λ_eps off-span term.
+            return tuple(Unit(bucket=bi, lo=0, hi=b.total, phase=0,
+                              sync_only=True)
+                         for bi, b in enumerate(self.buckets)
+                         if kfactor.has_heavy_op(b.spec))
+        chunks = []                      # (bucket_idx, lo, hi, snap)
         for bi, b in enumerate(self.buckets):
             if not kfactor.has_heavy_op(b.spec):
                 continue                 # mode has no heavy op (pure BRAND)
@@ -398,7 +408,13 @@ class Scheduler:
         heavy = [[] for _ in self.buckets]
         launch = [[] for _ in self.buckets]
         land = [[] for _ in self.buckets]
-        if self.T_heavy is not None:
+        if self.T_heavy is None:
+            # warmup-only units (demoted dense buckets under a pure-Brand
+            # variant): one inline heavy at step 0, never again
+            if self.warmup and step == 0:
+                for u in self.units:
+                    heavy[u.bucket].append((u.lo, u.hi))
+        else:
             T, L = self.T_heavy, self.lag
             for u in self.units:
                 fires = step % T == u.phase
@@ -442,3 +458,21 @@ def _merge(ranges: Sequence[Tuple[int, int]]) -> Ranges:
         else:
             out.append((lo, hi))
     return tuple(out)
+
+
+def group_by_work(sched: "Scheduler", steps: Sequence[int]
+                  ) -> Dict[StepWork, Tuple[int, ...]]:
+    """Group per-tenant schedule positions by their StepWork mask.
+
+    ``steps[i]`` is tenant i's current step counter; the result maps each
+    distinct mask to the tuple of tenant indices that would execute it —
+    StepWork is hashable precisely so it can key this dict.  The
+    multi-tenant service issues one stacked ``TenantBank.update`` per
+    entry (with the indices as the ``active`` vector), so a tick costs
+    O(#distinct masks) stacked launches, and over a full schedule cycle
+    the number of distinct masks is bounded by the scheduler's own
+    variant count — independent of the number of tenants."""
+    groups: Dict[StepWork, list] = {}
+    for i, k in enumerate(steps):
+        groups.setdefault(sched.work(int(k)), []).append(i)
+    return {w: tuple(ix) for w, ix in groups.items()}

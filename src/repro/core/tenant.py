@@ -1,0 +1,213 @@
+"""TenantBank: N independent per-tenant K-FAC optimizer states in ONE
+stacked pytree.
+
+The multi-tenant fine-tuning service (serve/service.py) holds one adapter
++ optimizer state per tenant.  Running them as N separate ``Kfac.update``
+calls would cost N× the launch count; but every tenant shares the model
+architecture, so their K-factors share the same shape classes — and the
+same cross-layer bucketing argument that made per-step launches
+O(#shape-classes) instead of O(#layers) (core/buckets.py, PR 2) applies
+across tenants.  ``TenantBank`` stacks every ``KfacState`` leaf on a
+leading tenant axis and runs ``jax.vmap(Kfac.update)`` over it: the
+bucketed stats/light/heavy/precond kernels each appear ONCE in the
+program with an extra batch dimension, so the launch-group count stays
+O(#shape-classes), not O(#tenants) (asserted by counting decomposition
+call sites in the jaxpr — benchmarks/serve_bench.py).
+
+Semantics:
+
+* Per-tenant independence: each tenant's slice of the bank evolves
+  exactly as its own ``Kfac`` run would — N-tenant stacked ≡ N
+  sequential independent runs (allclose; batched ops may reassociate),
+  asserted for all 6 policy variants in tests/test_tenant.py.
+* N=1 is **bit-for-bit** the plain optimizer: a single-tenant bank
+  squeezes the tenant axis and calls ``Kfac.update`` directly — same
+  program, same bits.
+* Per-tenant step/phase: ``KfacState.step``/``n_stats``/``phase`` are
+  scalars per tenant, so the stacked bank carries an (N,) vector of each
+  — tenants admitted at different times keep their own schedule
+  positions.  The service groups tenants by their scheduler-derived
+  :class:`~repro.core.schedule.StepWork` mask
+  (:func:`repro.core.schedule.group_by_work`) and issues one stacked
+  update per distinct mask with an ``active`` vector: inactive tenants'
+  state and params are carried through **unchanged bitwise**
+  (``jnp.where`` on the tenant axis selects the old leaves exactly).
+
+The async launch/land pipeline is not threaded through the bank —
+tenant fine-tune ticks use sync masks (heavy work is already amortized
+across tenants by construction).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kfac as kfac_lib
+from repro.core import schedule
+from repro.optim import base as optbase
+
+Array = jax.Array
+
+tree_map = jax.tree_util.tree_map
+
+
+def _lead_dim(tree) -> int:
+    leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        raise ValueError("empty pytree has no tenant axis")
+    return int(leaves[0].shape[0])
+
+
+def _bcast(mask: Array, leaf: Array) -> Array:
+    """(N,) mask reshaped to broadcast against an (N, ...) leaf."""
+    return mask.reshape(mask.shape + (1,) * (leaf.ndim - 1))
+
+
+def tree_stack(trees: Sequence[Any]) -> Any:
+    """N per-tenant pytrees → one pytree with a leading tenant axis."""
+    return tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def tree_unstack(tree: Any, n: Optional[int] = None) -> list:
+    """Inverse of :func:`tree_stack`."""
+    n = _lead_dim(tree) if n is None else n
+    return [tree_map(lambda x: x[i], tree) for i in range(n)]
+
+
+def tree_select(mask: Array, new: Any, old: Any) -> Any:
+    """Per-tenant select: mask (N,) bool picks ``new``'s slice where True,
+    ``old``'s where False — bit-exact on both sides (jnp.where copies)."""
+    return tree_map(lambda a, b: jnp.where(_bcast(mask, a), a, b), new, old)
+
+
+def tree_insert(bank_tree: Any, i, one: Any) -> Any:
+    """Write one tenant's (unstacked) pytree into slot ``i`` of the bank
+    (functional: returns the updated bank tree).  ``i`` may be traced."""
+    return tree_map(lambda b, x: b.at[i].set(x.astype(b.dtype)),
+                    bank_tree, one)
+
+
+def tree_slot(bank_tree: Any, i) -> Any:
+    """Read one tenant's pytree out of slot ``i`` (leading axis dropped)."""
+    return tree_map(lambda b: b[i], bank_tree)
+
+
+class TenantBank:
+    """N stacked, independent optimizer states over one shared ``Kfac``.
+
+    The bank does not own tenant bookkeeping (admission, naming, request
+    queues — that is serve/service.py); it owns the stacked-state math:
+
+      ``init(stacked_params)``        → stacked KfacState (vmap of init)
+      ``update(grads, state, params, ..., rngs, work, active=None)``
+                                      → (stacked updates, stacked state)
+      ``apply_updates(params, updates, active=None)``
+                                      → stacked params, inactive slots
+                                        carried through bit-exactly
+    """
+
+    def __init__(self, opt: kfac_lib.Kfac):
+        self.opt = opt
+
+    # -- construction -------------------------------------------------------
+
+    def init(self, stacked_params) -> kfac_lib.KfacState:
+        """Stacked state from stacked params (leading tenant axis)."""
+        n = _lead_dim(stacked_params)
+        if n == 1:
+            one = self.opt.init(tree_slot(stacked_params, 0))
+            return tree_map(lambda x: x[None], one)
+        return jax.vmap(self.opt.init)(stacked_params)
+
+    @staticmethod
+    def n_tenants(stacked_state: kfac_lib.KfacState) -> int:
+        return int(stacked_state.step.shape[0])
+
+    # -- the stacked update -------------------------------------------------
+
+    def update(self, grads, state: kfac_lib.KfacState, params, *, acts,
+               probe_grads, n_tokens, rngs, work: schedule.StepWork,
+               active: Optional[Array] = None, damping_scale=None):
+        """One stacked optimizer step over the tenant axis.
+
+        Every array argument carries a leading tenant axis N (``rngs`` is
+        an (N, 2) key batch — independent streams per tenant); ``work``
+        is ONE static mask shared by the whole call (group tenants by
+        mask first — :func:`repro.core.schedule.group_by_work`);
+        ``active`` is an optional (N,) bool vector: inactive tenants
+        still ride the batched launches (vmap is dense) but their state
+        output is the input selected back bit-exactly, and
+        :meth:`apply_updates` drops their param delta the same way.
+        ``damping_scale`` may be an (N,) per-tenant vector.
+
+        N=1 with no mask bypasses vmap entirely and is bit-for-bit the
+        plain ``Kfac.update`` (tests/test_tenant.py)."""
+        n = _lead_dim(grads)
+        if n == 1 and active is None:
+            sq = lambda t: tree_slot(t, 0)
+            scale = None if damping_scale is None \
+                else jnp.asarray(damping_scale).reshape(-1)[0]
+            updates, new_state = self.opt.update(
+                sq(grads), sq(state), sq(params), acts=sq(acts),
+                probe_grads=sq(probe_grads), n_tokens=n_tokens,
+                rng=rngs[0], work=work, damping_scale=scale)
+            ex = lambda t: tree_map(lambda x: x[None], t)
+            return ex(updates), ex(new_state)
+
+        def one(g, s, p, a, pg, key, scale):
+            return self.opt.update(g, s, p, acts=a, probe_grads=pg,
+                                   n_tokens=n_tokens, rng=key, work=work,
+                                   damping_scale=scale)
+
+        if damping_scale is None:
+            scales = jnp.ones((n,), jnp.float32)
+        else:
+            scales = jnp.broadcast_to(
+                jnp.asarray(damping_scale, jnp.float32), (n,))
+        updates, new_state = jax.vmap(one)(grads, state, params, acts,
+                                           probe_grads, rngs, scales)
+        if active is not None:
+            mask = jnp.asarray(active, bool)
+            new_state = tree_select(mask, new_state, state)
+            updates = tree_map(
+                lambda u: jnp.where(_bcast(mask, u), u,
+                                    jnp.zeros_like(u)), updates)
+        return updates, new_state
+
+    @staticmethod
+    def apply_updates(params, updates, active: Optional[Array] = None):
+        """Stacked ``optbase.apply_updates``; with ``active``, inactive
+        tenants' params pass through bit-exactly (selected, not +0)."""
+        new = optbase.apply_updates(params, updates)
+        if active is None:
+            return new
+        return tree_select(jnp.asarray(active, bool), new, params)
+
+    # -- per-tenant access --------------------------------------------------
+
+    def checkout(self, state: kfac_lib.KfacState, i) -> kfac_lib.KfacState:
+        """One tenant's un-stacked KfacState (checkpointing a single
+        tenant, or migrating it to a plain ``Kfac`` run)."""
+        return tree_slot(state, i)
+
+    def checkin(self, state: kfac_lib.KfacState, i,
+                one: kfac_lib.KfacState) -> kfac_lib.KfacState:
+        """Write a plain per-tenant KfacState back into slot ``i``."""
+        return tree_insert(state, i, one)
+
+    def admit(self, state: kfac_lib.KfacState, i, params_i
+              ) -> kfac_lib.KfacState:
+        """(Re)initialize slot ``i`` from that tenant's params — a fresh
+        admission into a pre-allocated bank slot."""
+        return self.checkin(state, i, self.opt.init(params_i))
+
+    def steps(self, state: kfac_lib.KfacState) -> Array:
+        """(N,) per-tenant step counters (host-side schedule lookups)."""
+        return state.step
+
+    def launch_groups(self) -> int:
+        """Static launch-group count of one stacked step — by
+        construction independent of N (the O(#shape-classes) claim)."""
+        return len(self.opt.factor_buckets) + len(self.opt.precond_buckets)

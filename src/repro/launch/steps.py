@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import specs as specs_lib
 from repro.configs.base import ArchConfig, ShapeCell, SHAPES
 from repro.core import kfac as kfac_lib
 from repro.core import policy as policy_lib
@@ -94,14 +95,27 @@ def build_train_step(arch: ArchConfig, mesh: Optional[Mesh] = None,
                      work=None, curvature_axis: Optional[str] = None,
                      remat: bool = True, plan: str = "tp",
                      async_heavy: bool = False,
-                     heavy_lag: int = 0) -> BuiltTrain:
+                     heavy_lag: int = 0,
+                     dist: Optional[specs_lib.DistSpec] = None
+                     ) -> BuiltTrain:
     """``work`` (a schedule.StepWork) supersedes ``flags`` when given —
     the dry-run lowers the exact staggered step variant the scheduler
-    would dispatch.  ``curvature_axis`` shards the bucketed factor work
-    across that mesh axis via the distributed curvature engine.
-    ``async_heavy``/``heavy_lag`` enable the double-buffered heavy
-    pipeline (the dry-run then lowers launch/land step variants and the
-    optimizer state carries the in-flight buffers)."""
+    would dispatch.  ``dist`` (a :class:`repro.specs.DistSpec`) is the
+    spec-level spelling of the ``mesh``/``curvature_axis`` pair: its mesh
+    shards the model (plan-dependent) and its curvature_axis shards the
+    bucketed factor work via the distributed curvature engine
+    (row_axis/curvature_compress ride along).  The loose pair keeps
+    working but may not be mixed with ``dist``.  ``async_heavy``/
+    ``heavy_lag`` enable the double-buffered heavy pipeline (the dry-run
+    then lowers launch/land step variants and the optimizer state
+    carries the in-flight buffers)."""
+    if dist is not None:
+        if mesh is not None or curvature_axis is not None:
+            raise ValueError("build_train_step: pass dist= OR the loose "
+                             "mesh=/curvature_axis= pair, not both")
+        mesh, curvature_axis = dist.mesh, dist.curvature_axis
+    else:
+        dist = specs_lib.DistSpec(mesh=mesh, curvature_axis=curvature_axis)
     cell = cell or SHAPES["train_4k"]
     flags = flags or dict(do_stats=True, do_light=True, do_heavy=False)
     if plan == "fsdp" and mesh is not None:
@@ -116,9 +130,7 @@ def build_train_step(arch: ArchConfig, mesh: Optional[Mesh] = None,
         kcfg = dataclasses.replace(kcfg, async_heavy=True,
                                    heavy_lag=heavy_lag)
     opt = kfac_lib.Kfac(kcfg, lm.taps)
-    if curvature_axis is not None and mesh is not None:
-        from repro.distributed import curvature as curvature_lib
-        curvature_lib.CurvatureEngine.for_kfac(opt, mesh, curvature_axis)
+    dist.attach(opt)
     n_tokens = n_tokens_of(arch, cell)
     step_work = work if work is not None else opt.uniform_work(**flags)
 

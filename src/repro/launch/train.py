@@ -32,13 +32,13 @@ from repro.launch.mesh import make_production_mesh, make_mesh
 from repro.models import layers
 from repro.models.lm import LM
 from repro.obs import events as obs_events
-from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
 from repro.optim import base as optbase
 from repro.train import checkpoint as ckpt
 from repro.train import health as health_lib
 from repro.train import loop as loop_lib
 from repro.train import straggler as strag_lib
+from repro import specs as specs_lib
 
 
 def main():
@@ -169,11 +169,10 @@ def main():
             row_axis = rows[0] if rows else None
         elif dp and sizes[dp[0]] > 1:
             curv_axis = dp[0]
-    if curv_axis is not None:
-        from repro.distributed import curvature as curvature_lib
-        eng = curvature_lib.CurvatureEngine.for_kfac(
-            opt, mesh, curv_axis, row_axis=row_axis,
-            compress_rank=args.curvature_compress or None)
+    eng = specs_lib.DistSpec(
+        mesh=mesh, curvature_axis=curv_axis, row_axis=row_axis,
+        curvature_compress=args.curvature_compress or None).attach(opt)
+    if eng is not None:
         rep, dev = eng.job_counts()
         writer.log(f"curvature sharded on '{curv_axis}': "
                    f"{rep} factor slots replicated -> {dev}/device "
@@ -226,12 +225,10 @@ def main():
             grad_transform = cstate = None
 
     meter = None
-    if args.metrics_every > 0 and jsonl is not None:
-        catalog = obs_metrics.catalog_for(opt)
-        meter = obs_metrics.Meter(
-            catalog, writer.metrics_sink({s.name: s.kind
-                                          for s in catalog}),
-            every=args.metrics_every)
+    if jsonl is not None:
+        meter = specs_lib.ObsSpec(
+            writer=writer,
+            metrics_every=args.metrics_every).make_meter(opt)
     policy = None
     if args.health:
         policy = health_lib.RemediationPolicy(writer=writer)

@@ -51,8 +51,12 @@ EVENT_TYPES: Dict[str, frozenset] = {
     # field (timeout | crash | resume | dropped) — optional, so v1 logs
     # stay valid.
     "remediation": frozenset({"step", "stage", "action", "detail"}),
-    # serving
+    # serving.  ``serve_request`` optionally carries ``tenant`` (bank
+    # slot) and ``kind`` (infer | finetune) — optional, so v1 logs stay
+    # valid; ``tenant_update`` is one completed fine-tune step of one
+    # tenant's stacked optimizer state (multi-tenant service, PR 10).
     "serve_request": frozenset({"uid", "wait_s", "total_s", "n_new"}),
+    "tenant_update": frozenset({"tenant", "step", "loss", "phase"}),
 }
 
 

@@ -97,11 +97,35 @@ def summarize(path: str) -> dict:
         out["checkpoint"] = {"saves": len(saves), "restores": len(restores)}
 
     serve = [e for e in events if e["type"] == "serve_request"]
+    tenant_updates = [e for e in events if e["type"] == "tenant_update"]
     if serve:
         tot = [e["total_s"] for e in serve]
         out["serve"] = {"requests": len(serve),
                         "p50_ms": 1e3 * _pct(tot, 0.5),
                         "p99_ms": 1e3 * _pct(tot, 0.99)}
+        # per-tenant breakdown (multi-tenant service; events without a
+        # tenant field are the single-model engine and stay aggregate)
+        by_tenant: Dict[str, List[dict]] = {}
+        for e in serve:
+            if "tenant" in e:
+                by_tenant.setdefault(str(e["tenant"]), []).append(e)
+        if by_tenant:
+            out["serve"]["tenants"] = {
+                t: {"requests": len(es),
+                    "finetunes": sum(e.get("kind") == "finetune"
+                                     for e in es),
+                    "p50_ms": 1e3 * _pct([e["total_s"] for e in es], 0.5),
+                    "p99_ms": 1e3 * _pct([e["total_s"] for e in es], 0.99)}
+                for t, es in sorted(by_tenant.items(), key=lambda kv:
+                                    int(kv[0]))}
+    if tenant_updates:
+        by_t: Dict[str, List[dict]] = {}
+        for e in tenant_updates:
+            by_t.setdefault(str(e["tenant"]), []).append(e)
+        out["tenant_updates"] = {
+            t: {"steps": len(es), "last_step": es[-1]["step"],
+                "loss_first": es[0]["loss"], "loss_last": es[-1]["loss"]}
+            for t, es in sorted(by_t.items(), key=lambda kv: int(kv[0]))}
     return out
 
 
@@ -150,6 +174,19 @@ def render(s: dict) -> str:
     if sv:
         lines.append(f"serving: {sv['requests']} requests, "
                      f"p50 {sv['p50_ms']:.1f}ms p99 {sv['p99_ms']:.1f}ms")
+        for t, row in sv.get("tenants", {}).items():
+            lines.append(f"  tenant {t}: {row['requests']} requests "
+                         f"({row['finetunes']} finetune), "
+                         f"p50 {row['p50_ms']:.1f}ms "
+                         f"p99 {row['p99_ms']:.1f}ms")
+    tu = s.get("tenant_updates")
+    if tu:
+        lines.append(f"tenant fine-tuning: {len(tu)} tenants")
+        for t, row in tu.items():
+            lines.append(f"  tenant {t}: {row['steps']} steps "
+                         f"(-> step {row['last_step']}), loss "
+                         f"{row['loss_first']:.4f} -> "
+                         f"{row['loss_last']:.4f}")
     return "\n".join(lines)
 
 

@@ -1,18 +1,32 @@
 """Batched serving engine: continuous-batching decode loop over a KV-cache.
 
-Small-model demo quality (the 32k/500k serving paths are exercised by the
-dry-run): requests join a fixed-slot batch; prompts are fed token-by-token
-through ``decode_step`` (prefill == forced decode), then sampled greedily /
-by temperature until EOS or max_len; finished slots are refilled from the
+Requests join a fixed-slot batch; prompts are fed token-by-token through
+``decode_step`` (prefill == forced decode), then sampled greedily / by
+temperature until EOS or max_len; finished slots are refilled from the
 queue.  Slot state (per-slot position, done flags) lives host-side; the
 jitted step is shape-stable.
+
+Each slot is an independent **lane**: the KV-cache carries a leading lane
+axis (one B=1 cache per slot, stacked), and one jitted
+``vmap(decode_step)`` advances every lane at its OWN position per tick.
+That is what makes continuous batching correct — a request admitted into
+a drained slot starts at position 0 while its neighbors keep decoding at
+theirs, and produces exactly the tokens it would have produced alone
+(tests/test_serve.py).  It is also what the multi-tenant service builds
+on: with ``lane_params_fn`` set, the decoder maps params over the lane
+axis too, so each slot can decode under a *different tenant's* weights in
+the same batched launch (serve/service.py).
+
+Empty lanes decode a dummy token at position 0; their cache writes are
+overwritten position-by-position by the next admitted prompt before ever
+being attended (decode at position t attends only 0..t, all re-fed).
 """
 from __future__ import annotations
 
 import dataclasses
 import queue
 import time
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -21,12 +35,36 @@ import numpy as np
 from repro.models.lm import LM
 
 
+def init_lane_cache(lm: LM, lanes: int, max_len: int):
+    """A stacked per-lane KV-cache: ``lanes`` independent B=1 caches on a
+    NEW leading axis.  (``lm.init_cache(lanes, S)`` puts the batch dim
+    *inside* each leaf — (repeats, B, ...) — which is the layout the
+    shared-position decode wants, not the per-lane one.)"""
+    return jax.vmap(lambda _: lm.init_cache(1, max_len))(jnp.arange(lanes))
+
+
+def make_lane_decoder(lm: LM, batched_params: bool = False):
+    """jit(vmap(decode_step)) over the lane axis: (params, lane_caches,
+    tokens (L,), positions (L,)) → (logits (L, V), lane_caches) — every
+    lane advances at its own position.  ``batched_params`` additionally
+    maps params over the lane axis (per-tenant weights per slot)."""
+
+    def lane(params, cache, tok, t):
+        logits, cache = lm.decode_step(params, cache,
+                                       tok[None, None], t)
+        return logits[0, 0], cache
+
+    return jax.jit(jax.vmap(
+        lane, in_axes=(0 if batched_params else None, 0, 0, 0)))
+
+
 @dataclasses.dataclass
 class Request:
     uid: int
     prompt: List[int]
     max_new: int = 32
     temperature: float = 0.0
+    tenant: Optional[int] = None       # bank slot (multi-tenant service)
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     t_submit: float = 0.0
     t_done: float = 0.0
@@ -35,21 +73,27 @@ class Request:
 class Engine:
     def __init__(self, lm: LM, params, batch_slots: int = 4,
                  max_len: int = 256, eos_id: Optional[int] = None,
-                 seed: int = 0, writer=None):
+                 seed: int = 0, writer=None,
+                 lane_params_fn: Optional[Callable] = None):
         self.lm = lm
         self.params = params
         self.B = batch_slots
         self.S = max_len
         self.eos = eos_id
         self.writer = writer      # repro.obs TelemetryWriter (optional)
+        # lane_params_fn(slots) -> params stacked over the lane axis —
+        # the multi-tenant hook: each slot decodes under the weights of
+        # the tenant its request names.
+        self._lane_params_fn = lane_params_fn
         self._queue: "queue.Queue[Request]" = queue.Queue()
         self._slots: List[Optional[Request]] = [None] * batch_slots
         self._fed: List[int] = [0] * batch_slots      # prompt tokens fed
         self._pos: List[int] = [0] * batch_slots
         self._t_start: List[float] = [0.0] * batch_slots
-        self._cache = lm.init_cache(batch_slots, max_len)
+        self._cache = init_lane_cache(lm, batch_slots, max_len)
         self._key = jax.random.PRNGKey(seed)
-        self._step = jax.jit(lm.decode_step)
+        self._step = make_lane_decoder(
+            lm, batched_params=lane_params_fn is not None)
         self.completed: Dict[int, Request] = {}
 
     def submit(self, req: Request):
@@ -65,31 +109,30 @@ class Engine:
                 self._t_start[i] = time.time()
 
     def step(self):
-        """One engine tick: one decode_step for the whole batch."""
+        """One engine tick: one lane-vmapped decode_step for the batch."""
         self._fill_slots()
-        tokens = np.zeros((self.B, 1), np.int32)
+        tokens = np.zeros((self.B,), np.int32)
+        ts = np.zeros((self.B,), np.int32)
         for i, req in enumerate(self._slots):
             if req is None:
                 continue
+            ts[i] = self._pos[i]
             if self._fed[i] < len(req.prompt):
-                tokens[i, 0] = req.prompt[self._fed[i]]
+                tokens[i] = req.prompt[self._fed[i]]
             elif req.out_tokens:
-                tokens[i, 0] = req.out_tokens[-1]
+                tokens[i] = req.out_tokens[-1]
             else:
-                tokens[i, 0] = req.prompt[-1]
-        # NOTE: slots share a position counter per slot; the cache is
-        # per-slot so we step each active slot at its own position by
-        # batching the most common position (demo simplification: all
-        # slots advance together; empty slots decode garbage harmlessly)
-        t = max(self._pos) if any(s is not None for s in self._slots) else 0
-        logits, self._cache = self._step(self.params, self._cache,
+                tokens[i] = req.prompt[-1]
+        params = (self._lane_params_fn(self._slots)
+                  if self._lane_params_fn is not None else self.params)
+        logits, self._cache = self._step(params, self._cache,
                                          jnp.asarray(tokens),
-                                         jnp.asarray(t, jnp.int32))
-        logits = np.asarray(logits[:, 0], np.float32)
+                                         jnp.asarray(ts))
+        logits = np.asarray(logits, np.float32)
         for i, req in enumerate(self._slots):
             if req is None:
                 continue
-            self._pos[i] = t + 1
+            self._pos[i] += 1
             if self._fed[i] < len(req.prompt):
                 self._fed[i] += 1
                 continue                      # still prefill — no sampling
@@ -108,11 +151,13 @@ class Engine:
                 self.completed[req.uid] = req
                 self._slots[i] = None
                 if self.writer is not None:
+                    extra = {} if req.tenant is None \
+                        else {"tenant": int(req.tenant)}
                     self.writer.emit(
                         "serve_request", uid=req.uid,
                         wait_s=self._t_start[i] - req.t_submit,
                         total_s=req.t_done - req.t_submit,
-                        n_new=len(req.out_tokens))
+                        n_new=len(req.out_tokens), **extra)
 
     def latency_report(self) -> Dict[str, float]:
         """Request-latency percentiles over everything completed so far

@@ -1,0 +1,147 @@
+"""Synthetic mixed-traffic load generator for the multi-tenant service.
+
+Drives a :class:`~repro.serve.service.TenantService` over a reduced LM
+with N tenants and a mixed fine-tune/inference request stream submitted
+in waves, then publishes the latency report:
+
+    PYTHONPATH=src python -m repro.serve.load \\
+        --tenants 4 --waves 3 --infer-per-wave 4 --ft-per-wave 4 \\
+        --telemetry-dir telem-serve
+
+Outputs (CI's serve-tier job consumes both):
+  * ``<telemetry-dir>/events.jsonl``  — schema-validated ``serve_request``
+    / ``tenant_update`` / ``ckpt_save`` events
+    (``repro.obs.summary --validate`` gates them)
+  * ``<telemetry-dir>/latency.json``  — p50/p99 per stream + per-tenant
+    request counts (uploaded as the latency artifact)
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_arch
+from repro.launch.steps import default_kfac_config
+from repro.core import kfac as kfac_lib
+from repro.models.lm import LM
+from repro.obs import TelemetryWriter
+from repro.serve.engine import Request
+from repro.serve.service import FinetuneRequest, TenantService
+
+
+def build_service(tenants: int = 4, variant: str = "bkfac",
+                  arch_name: str = "gemma3_4b", seed: int = 0,
+                  writer=None, ckpt_dir=None, ckpt_every: int = 0,
+                  ft_batch: int = 2, ft_seq: int = 16,
+                  batch_slots: int = 4, max_len: int = 48):
+    arch = get_arch(arch_name).reduced()
+    lm = LM(arch, remat=False)
+    params = lm.init(jax.random.PRNGKey(seed))
+    # Fine-tune cadence: the pretrain defaults refresh decompositions
+    # every T_updt=25 steps, which leaves the warm-start spectrum empty
+    # (near-zero eigenvalues -> the global-norm clip zeroes the first
+    # T_updt updates entirely).  A fine-tune tenant takes few, precious
+    # steps, so refresh every step and keep heavy passes frequent.
+    cfg = dataclasses.replace(
+        default_kfac_config(arch, variant),
+        T_updt=1, T_brand=1, T_inv=2, T_rsvd=2, T_corct=4)
+    opt = kfac_lib.Kfac(cfg, lm.taps)
+    svc = TenantService(lm, opt, params, tenants, ft_batch=ft_batch,
+                        ft_seq=ft_seq, batch_slots=batch_slots,
+                        max_len=max_len, seed=seed, writer=writer,
+                        ckpt_dir=ckpt_dir, ckpt_every=ckpt_every)
+    return svc, arch
+
+
+def run_load(svc: TenantService, vocab: int, waves: int = 3,
+             infer_per_wave: int = 4, ft_per_wave: int = 4,
+             ticks_between: int = 4, seed: int = 0,
+             max_ticks: int = 2000) -> int:
+    """Submit ``waves`` rounds of mixed traffic (tenants round-robin),
+    ticking between rounds so requests overlap in flight — staggered
+    admission is exactly what the per-slot/per-tenant paths must get
+    right.  Returns total ticks run."""
+    rng = np.random.default_rng(seed)
+    B, T = svc.ft_shape
+    uid = 0
+    total = 0
+    for w in range(waves):
+        for i in range(infer_per_wave):
+            t = (w * infer_per_wave + i) % svc.n
+            prompt = rng.integers(1, vocab, size=rng.integers(2, 6)).tolist()
+            svc.submit(Request(uid=uid, prompt=prompt, max_new=4,
+                               tenant=t))
+            uid += 1
+        for i in range(ft_per_wave):
+            t = (w * ft_per_wave + i) % svc.n
+            batch = {
+                "tokens": rng.integers(0, vocab, size=(B, T),
+                                       dtype=np.int64).astype(np.int32),
+                "targets": rng.integers(0, vocab, size=(B, T),
+                                        dtype=np.int64).astype(np.int32),
+            }
+            svc.submit(FinetuneRequest(uid=uid, tenant=t, batch=batch))
+            uid += 1
+        for _ in range(ticks_between):
+            svc.tick()
+            total += 1
+    total += svc.run_until_drained(max_ticks=max_ticks - total)
+    return total
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--tenants", type=int, default=4)
+    ap.add_argument("--variant", default="bkfac")
+    ap.add_argument("--arch", default="gemma3_4b")
+    ap.add_argument("--waves", type=int, default=3)
+    ap.add_argument("--infer-per-wave", type=int, default=4)
+    ap.add_argument("--ft-per-wave", type=int, default=4)
+    ap.add_argument("--ticks-between", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--telemetry-dir", default="telem-serve")
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="stream a v6 tenant-table checkpoint every N "
+                         "ticks into <telemetry-dir>/ckpt (0 = off)")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.telemetry_dir, exist_ok=True)
+    events = os.path.join(args.telemetry_dir, "events.jsonl")
+    ckpt_dir = (os.path.join(args.telemetry_dir, "ckpt")
+                if args.ckpt_every > 0 else None)
+    with TelemetryWriter(events, console=False) as writer:
+        writer.emit("run_start", config={
+            "mode": "serve-load", "tenants": args.tenants,
+            "variant": args.variant, "arch": args.arch,
+            "waves": args.waves})
+        svc, arch = build_service(
+            args.tenants, variant=args.variant, arch_name=args.arch,
+            seed=args.seed, writer=writer, ckpt_dir=ckpt_dir,
+            ckpt_every=args.ckpt_every)
+        ticks = run_load(svc, arch.vocab, waves=args.waves,
+                         infer_per_wave=args.infer_per_wave,
+                         ft_per_wave=args.ft_per_wave,
+                         ticks_between=args.ticks_between,
+                         seed=args.seed)
+        report = svc.latency_report()
+        report["ticks"] = ticks
+        n_done = (report["infer"].get("requests", 0)
+                  + report["finetune"].get("requests", 0))
+        writer.emit("log", msg=f"serve load done: {n_done} requests over "
+                               f"{args.tenants} tenants in {ticks} ticks")
+    out = os.path.join(args.telemetry_dir, "latency.json")
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(json.dumps(report, indent=2))
+    expect = args.waves * (args.infer_per_wave + args.ft_per_wave)
+    assert n_done == expect, f"served {n_done}/{expect} requests"
+    return report
+
+
+if __name__ == "__main__":
+    main()

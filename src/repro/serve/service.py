@@ -1,0 +1,292 @@
+"""Multi-tenant continuous fine-tuning service.
+
+One :class:`~repro.core.tenant.TenantBank` holds N per-tenant adapter
+param sets + optimizer states as stacked pytrees; the service admits a
+mixed stream of **fine-tune** requests (a small training batch against
+one tenant's adapter) and **inference** requests (decode under one
+tenant's adapter), and batches both *across tenants* per tick:
+
+* Fine-tune: tenants with a pending batch are grouped by their
+  scheduler-derived :class:`~repro.core.schedule.StepWork` mask
+  (:func:`repro.core.schedule.group_by_work` — each tenant keeps its own
+  schedule position, so a freshly admitted tenant fires its warmup heavy
+  step while veterans ride their staggered cadence) and each group runs
+  as ONE stacked ``TenantBank.update`` with an ``active`` lane mask: the
+  launch-group count per tick is O(#distinct masks × #shape classes),
+  independent of the number of tenants.
+* Inference: requests ride the engine's per-slot decode lanes with
+  ``lane_params_fn`` gathering each slot's **tenant params** out of the
+  stacked tree — different tenants' decodes share one batched launch.
+
+Checkpoints stream through the schema-v6 manifest: the stacked
+{params, opt} tree plus a first-class ``tenants`` table mapping each
+tenant id to its bank slot and local step, so a restore re-seats every
+tenant at its own schedule position (``TenantService.restore``).
+
+Telemetry: ``serve_request`` events (with a ``tenant`` field) for both
+request kinds, ``tenant_update`` events per fine-tune step, and
+``latency_report()`` p50/p99 over each stream — the numbers the
+synthetic load generator (serve/load.py) publishes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import kfac as kfac_lib
+from repro.core import schedule
+from repro.core import tenant as tenant_lib
+from repro.models import layers
+from repro.models.lm import LM
+from repro.serve import engine as engine_lib
+from repro.train import checkpoint as ckpt_lib
+from repro.train import loop as loop_lib
+
+
+@dataclasses.dataclass
+class FinetuneRequest:
+    """One fine-tune step's worth of data for one tenant.  ``batch`` must
+    match the service's fixed fine-tune batch shapes (jit stability)."""
+    uid: int
+    tenant: int
+    batch: Dict[str, np.ndarray]
+    loss: float = float("nan")
+    step: int = -1                      # tenant-local step it executed as
+    t_submit: float = 0.0
+    t_done: float = 0.0
+
+
+class TenantService:
+    """N tenants, one stacked bank, mixed fine-tune/inference traffic.
+
+    ``submit`` takes either an :class:`repro.serve.engine.Request` (its
+    ``tenant`` field names the adapter to decode under) or a
+    :class:`FinetuneRequest`; ``tick()`` advances both streams one step;
+    ``run_until_drained()`` loops until all queues empty."""
+
+    def __init__(self, lm: LM, opt: kfac_lib.Kfac, base_params,
+                 n_tenants: int, ft_batch: int = 2, ft_seq: int = 16,
+                 batch_slots: int = 4, max_len: int = 64,
+                 eos_id: Optional[int] = None, seed: int = 0,
+                 writer=None, ckpt_dir: Optional[str] = None,
+                 ckpt_every: int = 0, ckpt_keep: int = 3):
+        self.lm = lm
+        self.opt = opt
+        self.n = n_tenants
+        self.ft_shape = (ft_batch, ft_seq)
+        self.n_tokens = ft_batch * ft_seq
+        self.writer = writer
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = ckpt_every
+        self.ckpt_keep = ckpt_keep
+        self.bank = tenant_lib.TenantBank(opt)
+        # every tenant starts from the shared base adapter; their stacks
+        # diverge as fine-tune traffic lands
+        self.params = tenant_lib.tree_stack([base_params] * n_tenants)
+        self.state = self.bank.init(self.params)
+        self.steps: List[int] = [0] * n_tenants   # per-tenant local step
+        self.sched = opt.scheduler()
+        self._key = jax.random.PRNGKey(seed)
+        self._ft_queue: "queue.Queue[FinetuneRequest]" = queue.Queue()
+        self.completed_ft: Dict[int, FinetuneRequest] = {}
+        self.ticks = 0
+        self.engine = engine_lib.Engine(
+            lm, None, batch_slots=batch_slots, max_len=max_len,
+            eos_id=eos_id, seed=seed + 1, writer=writer,
+            lane_params_fn=self._lane_params)
+        self._tick_fn = jax.jit(self._train_tick,
+                                static_argnames=("work",))
+
+    # -- jitted fine-tune tick ---------------------------------------------
+
+    def _train_tick(self, params, state, batch, rngs, active, work):
+        def grads_one(p, b):
+            probes = layers.make_probes(self.opt.taps, jnp.float32)
+            return loop_lib.kfac_grads(self.lm.loss_fn, p, probes, b)
+
+        loss, acts, gp, gprobe = jax.vmap(grads_one)(params, batch)
+        updates, state = self.bank.update(
+            gp, state, params, acts=acts, probe_grads=gprobe,
+            n_tokens=self.n_tokens, rngs=rngs, work=work, active=active)
+        params = self.bank.apply_updates(params, updates, active=active)
+        return params, state, loss
+
+    # -- inference lane params ---------------------------------------------
+
+    def _lane_params(self, slots):
+        idx = np.zeros((len(slots),), np.int32)
+        for i, req in enumerate(slots):
+            if req is not None and req.tenant is not None:
+                idx[i] = int(req.tenant)
+        gather = jnp.asarray(idx)
+        return jax.tree_util.tree_map(lambda x: x[gather], self.params)
+
+    # -- admission ----------------------------------------------------------
+
+    def submit(self, req):
+        if isinstance(req, FinetuneRequest):
+            if not 0 <= req.tenant < self.n:
+                raise ValueError(f"unknown tenant {req.tenant} "
+                                 f"(bank holds {self.n})")
+            req.t_submit = time.time()
+            self._ft_queue.put(req)
+        else:
+            if req.tenant is None:
+                req.tenant = 0
+            if not 0 <= req.tenant < self.n:
+                raise ValueError(f"unknown tenant {req.tenant} "
+                                 f"(bank holds {self.n})")
+            self.engine.submit(req)
+
+    def _admit_finetunes(self) -> Dict[int, FinetuneRequest]:
+        """Pop at most one pending fine-tune per tenant for this tick
+        (a tenant's later batches stay queued, FIFO — its optimizer
+        state must advance one step at a time)."""
+        picked: Dict[int, FinetuneRequest] = {}
+        requeue = []
+        while not self._ft_queue.empty():
+            req = self._ft_queue.get()
+            if req.tenant in picked:
+                requeue.append(req)
+            else:
+                picked[req.tenant] = req
+        for req in requeue:
+            self._ft_queue.put(req)
+        return picked
+
+    # -- the tick ------------------------------------------------------------
+
+    def tick(self):
+        """One service tick: all pending fine-tunes (grouped by work
+        mask, one stacked launch per distinct mask) + one decode step."""
+        picked = self._admit_finetunes()
+        if picked:
+            tenants = sorted(picked)
+            groups = schedule.group_by_work(
+                self.sched, [self.steps[t] for t in tenants])
+            batch = self._stack_batches(picked)
+            self._key, sub = jax.random.split(self._key)
+            rngs = jax.random.split(sub, self.n)
+            for work, idx in sorted(groups.items(),
+                                    key=lambda kv: kv[1]):
+                group = [tenants[i] for i in idx]
+                active = np.zeros((self.n,), bool)
+                active[group] = True
+                self.params, self.state, loss = self._tick_fn(
+                    self.params, self.state, batch, rngs,
+                    jnp.asarray(active), work)
+                loss = np.asarray(loss)
+                for t in group:
+                    req = picked[t]
+                    req.loss = float(loss[t])
+                    req.step = self.steps[t]
+                    req.t_done = time.time()
+                    self.steps[t] += 1
+                    self.completed_ft[req.uid] = req
+                    if self.writer is not None:
+                        self.writer.emit(
+                            "tenant_update", tenant=t, step=req.step,
+                            loss=req.loss, phase=work.label)
+                        self.writer.emit(
+                            "serve_request", uid=req.uid,
+                            wait_s=req.t_done - req.t_submit,
+                            total_s=req.t_done - req.t_submit,
+                            n_new=0, tenant=t, kind="finetune")
+        if (not self.engine._queue.empty()
+                or any(s is not None for s in self.engine._slots)):
+            self.engine.step()
+        self.ticks += 1
+        if (self.ckpt_dir is not None and self.ckpt_every > 0
+                and self.ticks % self.ckpt_every == 0):
+            self.save_checkpoint()
+
+    def _stack_batches(self, picked: Dict[int, FinetuneRequest]):
+        """(N, B_ft, T_ft) stacked batch — lanes without a request get
+        zeros (they are masked inactive; vmap is dense)."""
+        B, T = self.ft_shape
+        out = {"tokens": np.zeros((self.n, B, T), np.int32),
+               "targets": np.zeros((self.n, B, T), np.int32)}
+        for t, req in picked.items():
+            for k in out:
+                arr = np.asarray(req.batch[k])
+                if arr.shape != (B, T):
+                    raise ValueError(
+                        f"tenant {t} batch {k!r} has shape {arr.shape}; "
+                        f"the service's fine-tune cell is {(B, T)}")
+                out[k][t] = arr
+        return {k: jnp.asarray(v) for k, v in out.items()}
+
+    # -- draining / reporting ------------------------------------------------
+
+    def pending(self) -> bool:
+        return (not self._ft_queue.empty()
+                or not self.engine._queue.empty()
+                or any(s is not None for s in self.engine._slots))
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> int:
+        ticks = 0
+        while self.pending() and ticks < max_ticks:
+            self.tick()
+            ticks += 1
+        return ticks
+
+    def latency_report(self) -> Dict[str, Any]:
+        """p50/p99 per stream + per-tenant request counts."""
+        def pcts(xs):
+            xs = sorted(xs)
+            if not xs:
+                return {"requests": 0}
+            pct = lambda q: xs[min(len(xs) - 1,
+                                   int(round(q * (len(xs) - 1))))]
+            return {"requests": len(xs), "p50_s": pct(0.5),
+                    "p99_s": pct(0.99)}
+
+        per_tenant: Dict[int, int] = {}
+        for r in self.completed_ft.values():
+            per_tenant[r.tenant] = per_tenant.get(r.tenant, 0) + 1
+        for r in self.engine.completed.values():
+            t = r.tenant or 0
+            per_tenant[t] = per_tenant.get(t, 0) + 1
+        return {
+            "infer": self.engine.latency_report(),
+            "finetune": pcts([r.t_done - r.t_submit
+                              for r in self.completed_ft.values()]),
+            "tenants": {str(t): c for t, c in sorted(per_tenant.items())},
+            "steps": list(self.steps),
+        }
+
+    # -- checkpoint streaming ------------------------------------------------
+
+    def tenant_table(self) -> List[dict]:
+        return [{"tenant": t, "slot": t, "step": int(self.steps[t])}
+                for t in range(self.n)]
+
+    def save_checkpoint(self) -> Optional[str]:
+        if self.ckpt_dir is None:
+            return None
+        path = ckpt_lib.save(self.ckpt_dir, self.ticks,
+                             {"params": self.params, "opt": self.state},
+                             tenants=self.tenant_table())
+        ckpt_lib.prune(self.ckpt_dir, keep=self.ckpt_keep)
+        if self.writer is not None:
+            self.writer.emit("ckpt_save", step=self.ticks, path=path)
+        return path
+
+    def restore(self, directory: Optional[str] = None):
+        """Re-seat the bank from the newest healthy snapshot: stacked
+        params/state plus each tenant's local step out of the manifest's
+        v6 ``tenants`` table (absent in pre-v6 manifests → steps reset)."""
+        directory = directory or self.ckpt_dir
+        tree, manifest = ckpt_lib.restore_latest_healthy(
+            directory, {"params": self.params, "opt": self.state})
+        self.params, self.state = tree["params"], tree["opt"]
+        table = manifest.get("tenants") or []
+        for row in table:
+            self.steps[int(row["slot"])] = int(row["step"])
+        return manifest

@@ -44,10 +44,17 @@ SEP = "|"
 #:   v5  PR 8           (manifest gains per-array crc32 ``checksums``,
 #:                       verified on restore; pytree unchanged — v4
 #:                       checkpoints restore fine, just unverified)
+#:   v6  PR 10          (manifest gains a first-class ``tenants`` table —
+#:                       the multi-tenant service's per-tenant
+#:                       {tenant, slot, step} rows, mapping each tenant
+#:                       id onto its TenantBank slot and local schedule
+#:                       position; pytree unchanged for single-tenant
+#:                       states, stacked [N, ...] leaves for banks — v5
+#:                       checkpoints restore fine, tenants just absent)
 #: Leaf-compatible additions (e.g. inflight == {} when async is off)
 #: restore across versions; the schema is used to *explain* mismatches,
 #: not to reject compatible checkpoints.
-SCHEMA_VERSION = 5
+SCHEMA_VERSION = 6
 
 _SCHEMA_HISTORY = {
     1: "seed..PR2 pytree (KfacState without `phase`)",
@@ -55,6 +62,8 @@ _SCHEMA_HISTORY = {
     3: "PR5 pytree (added KfacState.inflight async buffers)",
     4: "PR7 pytree (added KFactorState.aux heavy-op diagnostics)",
     5: "PR8 manifest (per-array crc32 checksums; same pytree as v4)",
+    6: "PR10 manifest (per-tenant `tenants` table for TenantBank states; "
+       "same pytree rules as v5)",
 }
 
 
@@ -98,9 +107,16 @@ def _unflatten_into(template, arrays: Dict[str, np.ndarray]):
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
-def save(directory: str, step: int, tree, extra: Optional[dict] = None
-         ) -> str:
-    """Synchronous checkpoint write with atomic publish."""
+def save(directory: str, step: int, tree, extra: Optional[dict] = None,
+         tenants: Optional[List[dict]] = None) -> str:
+    """Synchronous checkpoint write with atomic publish.
+
+    ``tenants`` (schema v6) is the multi-tenant service's table — one
+    ``{"tenant": id, "slot": bank_slot, "step": local_step}`` row per
+    tenant in a stacked TenantBank state — recorded first-class in the
+    manifest so a restore can re-seat every tenant at its own schedule
+    position.  Omitted (the single-tenant trainer), the manifest carries
+    ``tenants: None`` and restores exactly as before."""
     os.makedirs(directory, exist_ok=True)
     name = _step_dir(step)
     tmp = os.path.join(directory, f".tmp_{name}_{os.getpid()}")
@@ -116,6 +132,7 @@ def save(directory: str, step: int, tree, extra: Optional[dict] = None
         "bytes": int(sum(a.nbytes for a in arrays.values())),
         "checksums": {k: _digest(a) for k, a in arrays.items()},
         "extra": extra or {},
+        "tenants": tenants,
         "done": True,
     }
     with open(os.path.join(tmp, "manifest.json"), "w") as f:

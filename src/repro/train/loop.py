@@ -27,6 +27,7 @@ from typing import Any, Callable, Dict, List, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import specs as specs_lib
 from repro.core import kfac as kfac_lib
 from repro.core import kfactor
 from repro.models import layers
@@ -53,23 +54,24 @@ def kfac_grads(loss_fn, params, probes, batch, rng=None):
 
 def make_kfac_step(loss_fn: Callable, opt: kfac_lib.Kfac,
                    n_tokens: int, probe_dtype=jnp.float32):
-    """Returns step(state, batch, *, do_stats, do_light, do_heavy) — flags
-    static; jit with static_argnames=("do_stats","do_light","do_heavy").
-    Legacy three-bool variant; see make_scheduled_kfac_step for the
-    work-mask (staggered / sharded) step."""
+    """DEPRECATED legacy three-bool step factory.  The scheduler's
+    :class:`~repro.core.schedule.StepWork` masks subsumed these flags in
+    PR 3; this wrapper converts them via ``opt.uniform_work`` and
+    delegates to :func:`make_scheduled_kfac_step`.  Jit the result with
+    ``static_argnames=("do_stats", "do_light", "do_heavy")`` as before —
+    identical numerics (the uniform mask compiles to the same HLO)."""
+    specs_lib.warn_once(
+        "make_kfac_step",
+        "make_kfac_step is deprecated; use make_scheduled_kfac_step with "
+        "a StepWork mask (opt.uniform_work / opt.scheduler().work)")
+    scheduled = make_scheduled_kfac_step(loss_fn, opt, n_tokens,
+                                         probe_dtype=probe_dtype)
 
     def step(state: TrainState, batch, do_stats: bool, do_light: bool,
              do_heavy: bool):
-        rng, sub = jax.random.split(state.rng)
-        probes = layers.make_probes(opt.taps, probe_dtype)
-        loss, acts, gp, gprobe = kfac_grads(loss_fn, state.params, probes,
-                                            batch)
-        updates, opt_state = opt.update(
-            gp, state.opt, state.params, acts=acts, probe_grads=gprobe,
-            n_tokens=n_tokens, rng=sub, do_stats=do_stats,
-            do_light=do_light, do_heavy=do_heavy)
-        params = optbase.apply_updates(state.params, updates)
-        return TrainState(params=params, opt=opt_state, rng=rng), loss
+        work = opt.uniform_work(bool(do_stats), bool(do_light),
+                                bool(do_heavy))
+        return scheduled(state, batch, work)
 
     return step
 
@@ -77,7 +79,8 @@ def make_kfac_step(loss_fn: Callable, opt: kfac_lib.Kfac,
 def make_scheduled_kfac_step(loss_fn: Callable, opt: kfac_lib.Kfac,
                              n_tokens: int, probe_dtype=jnp.float32,
                              meter: Optional[obs_metrics.Meter] = None,
-                             grad_transform: Optional[Callable] = None):
+                             grad_transform: Optional[Callable] = None,
+                             obs: Optional[specs_lib.ObsSpec] = None):
     """Returns step(state, batch, work, landing=None) with ``work`` a
     static :class:`repro.core.schedule.StepWork` mask — jit with
     ``static_argnames=("work",)``.  The mask is hashable, so each distinct
@@ -98,7 +101,13 @@ def make_scheduled_kfac_step(loss_fn: Callable, opt: kfac_lib.Kfac,
     the parameter gradients before the optimizer sees them (the DP
     gradient-compression path: ``compress_tree`` with its
     :class:`~repro.distributed.compress.CompressState` carry); the step
-    then takes/returns that carry as a trailing argument/output."""
+    then takes/returns that carry as a trailing argument/output.
+
+    ``obs`` (a :class:`repro.specs.ObsSpec`) is the spec-level spelling of
+    ``meter``: when given and no explicit meter is passed, the meter is
+    built from it (``obs.make_meter(opt)``)."""
+    if obs is not None and meter is None:
+        meter = obs.make_meter(opt)
 
     def step(state: TrainState, batch, work, landing=None, mbuf=None,
              cstate=None):
@@ -334,24 +343,28 @@ def make_baseline_step(loss_fn: Callable, opt: optbase.Optimizer):
 
 def run_kfac_training(loss_fn, opt: kfac_lib.Kfac, params, batches,
                       n_tokens: int, seed: int = 0, jit: bool = True,
-                      callback=None, mesh=None, curvature_axis=None,
-                      row_axis=None, curvature_compress=None,
+                      callback=None,
                       state: Optional[TrainState] = None,
-                      overlap: bool = False, writer=None,
-                      metrics_every: int = 0, health=None, policy=None,
-                      chaos=None, ckpt_dir: Optional[str] = None,
-                      ckpt_every: int = 5, ckpt_keep: int = 3):
+                      overlap: bool = False,
+                      dist: Optional[specs_lib.DistSpec] = None,
+                      obs: Optional[specs_lib.ObsSpec] = None,
+                      ckpt: Optional[specs_lib.CkptSpec] = None,
+                      resilience: Optional[specs_lib.ResilienceSpec] = None,
+                      **legacy):
     """Python-level driver: dispatches the statically-masked step variants
     per the paper's T_* schedules (work scheduler; ``cfg.stagger`` phases
-    heavy work; ``cfg.async_heavy``/``heavy_lag`` pipeline it).  ``mesh``
-    + ``curvature_axis`` attach the distributed curvature engine so
-    factor work shards across that mesh axis; ``row_axis`` adds the 2D
-    path (dense M row-sharded over it, heavy FLOPs split across both
-    axes) and ``curvature_compress`` routes the engine's U gathers
-    through rank-q PowerSGD factors (lossy, opt-in).  ``overlap=True``
-    additionally dispatches launched heavy work through an
-    :class:`AsyncInverseRunner` (replicated async configs only);
-    otherwise landings compute in-graph — same result either way.
+    heavy work; ``cfg.async_heavy``/``heavy_lag`` pipeline it).
+    Subsystems are configured by the four ``repro.specs`` dataclasses:
+
+    ``dist`` (:class:`~repro.specs.DistSpec`) — mesh + curvature_axis
+    attach the distributed curvature engine so factor work shards across
+    that mesh axis; row_axis adds the 2D path (dense M row-sharded over
+    it, heavy FLOPs split across both axes) and curvature_compress
+    routes the engine's U gathers through rank-q PowerSGD factors
+    (lossy, opt-in).  ``overlap=True`` additionally dispatches launched
+    heavy work through an :class:`AsyncInverseRunner` (replicated async
+    configs only); otherwise landings compute in-graph — same result
+    either way.
 
     Passing a restored ``state`` resumes: the schedule position is
     re-derived from ``state.opt.phase`` (step mod schedule cycle — kept
@@ -362,30 +375,41 @@ def run_kfac_training(loss_fn, opt: kfac_lib.Kfac, params, batches,
     ``state.opt.inflight``, so a landing scheduled before the save still
     fires on time after the restore.
 
-    ``writer`` (a :class:`repro.obs.TelemetryWriter`) receives per-step
-    ``step`` events and the async pipeline's launch/land/miss events;
-    ``metrics_every > 0`` additionally attaches an in-graph
+    ``obs`` (:class:`~repro.specs.ObsSpec`) — its writer receives
+    per-step ``step`` events and the async pipeline's launch/land/miss
+    events; metrics_every > 0 additionally attaches an in-graph
     :class:`repro.obs.Meter` flushing the curvature-health metric buffer
     to the writer every that many steps.  Both are numerically inert.
 
-    ``health`` (truthy, or a :class:`repro.train.health.HealthConfig`)
-    swaps in the guarded resilient step and drives the staged
-    remediation ladder: skip → damping escalation → forced heavy
-    refresh → rollback (the last needs ``ckpt_dir``).  A caller-built
-    :class:`~repro.train.health.RemediationPolicy` can be passed as
-    ``policy`` for inspection; otherwise one is created internally.  A
-    healthy run with health on is bit-for-bit identical to one with it
-    off (tests/test_chaos.py).  ``chaos`` (a
+    ``resilience`` (:class:`~repro.specs.ResilienceSpec`) — health
+    (truthy, or a :class:`repro.train.health.HealthConfig`) swaps in the
+    guarded resilient step and drives the staged remediation ladder:
+    skip → damping escalation → forced heavy refresh → rollback (the
+    last needs a ``ckpt`` spec).  A caller-built
+    :class:`~repro.train.health.RemediationPolicy` can ride as policy
+    for inspection; otherwise one is created internally.  A healthy run
+    with health on is bit-for-bit identical to one with it off
+    (tests/test_chaos.py).  chaos (a
     :class:`repro.train.chaos.ChaosMonkey`) injects its fault plan into
-    the loop's hooks.  ``ckpt_dir`` checkpoints every ``ckpt_every``
-    healthy steps (pruned to ``ckpt_keep``) and is where rollbacks
-    restore from, walking past corrupted snapshots.
+    the loop's hooks.
+
+    ``ckpt`` (:class:`~repro.specs.CkptSpec`) — checkpoints every
+    ``ckpt.every`` healthy steps into ``ckpt.dir`` (pruned to
+    ``ckpt.keep``) and is where rollbacks restore from, walking past
+    corrupted snapshots.
+
+    The pre-spec flat kwargs (``mesh=``, ``writer=``, ``ckpt_dir=``, …)
+    still work for one deprecation cycle — each warns once and folds
+    into its spec (see :func:`repro.specs.consolidate_training_kwargs`).
     Returns (final TrainState, losses)."""
-    if mesh is not None and curvature_axis is not None:
-        from repro.distributed import curvature as curvature_lib
-        curvature_lib.CurvatureEngine.for_kfac(
-            opt, mesh, curvature_axis, row_axis=row_axis,
-            compress_rank=curvature_compress)
+    dist, obs, ckpt, resilience = specs_lib.consolidate_training_kwargs(
+        legacy, dist=dist, obs=obs, ckpt=ckpt, resilience=resilience,
+        caller="run_kfac_training")
+    dist.attach(opt)
+    writer = obs.writer
+    health, policy, chaos = (resilience.health, resilience.policy,
+                             resilience.chaos)
+    ckpt_dir, ckpt_every, ckpt_keep = ckpt.dir, ckpt.every, ckpt.keep
     from repro.train import checkpoint as ckpt_lib
     from repro.train import health as health_lib
     sched = opt.scheduler()
@@ -397,12 +421,7 @@ def run_kfac_training(loss_fn, opt: kfac_lib.Kfac, params, batches,
         k_off = int(jax.device_get(state.opt.phase))
     runner = AsyncInverseRunner.for_opt(opt, writer=writer) \
         if overlap else None
-    meter = None
-    if metrics_every > 0 and writer is not None:
-        catalog = obs_metrics.catalog_for(opt)
-        kinds = {s.name: s.kind for s in catalog}
-        meter = obs_metrics.Meter(catalog, writer.metrics_sink(kinds),
-                                  every=metrics_every)
+    meter = obs.make_meter(opt)
     if health or policy is not None:
         hcfg = health if isinstance(health, health_lib.HealthConfig) \
             else None

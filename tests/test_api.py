@@ -1,0 +1,212 @@
+"""Public API surface (repro.api) + the one-cycle deprecation shims.
+
+The consolidation contract: every legacy loose kwarg / three-bool call
+still runs, warns exactly once, and produces BIT-IDENTICAL results to
+its spec-based replacement — the shim converts arguments, it never forks
+the code path.
+"""
+import warnings
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import api, specs
+from repro.core import kfac as kfac_lib
+from repro.models import layers
+from repro.optim import base as optbase
+from repro.train import loop
+
+
+# ---------------------------------------------------------------------------
+# repro.api surface
+# ---------------------------------------------------------------------------
+
+def test_api_all_importable():
+    for name in api.__all__:
+        assert hasattr(api, name), f"api.__all__ lists missing {name!r}"
+        assert getattr(api, name) is not None
+
+
+def test_api_covers_headline_symbols():
+    for name in ("Kfac", "KfacConfig", "TenantBank", "TenantService",
+                 "DistSpec", "ObsSpec", "CkptSpec", "ResilienceSpec",
+                 "run_kfac_training", "Engine", "TelemetryWriter"):
+        assert name in api.__all__
+
+
+# ---------------------------------------------------------------------------
+# tiny shared fixture: 2-layer tapped MLP
+# ---------------------------------------------------------------------------
+
+D_IN, D_H, D_OUT, N_BS, N_STAT = 12, 16, 8, 8, 4
+
+
+def _make():
+    ks = jax.random.split(jax.random.PRNGKey(0), 2)
+    params = {"fc0": {"w": layers.dense_init(ks[0], D_IN, D_H)},
+              "fc1": {"w": layers.dense_init(ks[1], D_H, D_OUT)}}
+    taps = {"fc0": kfac_lib.TapInfo("fc0/w", D_IN, D_H, n_stat=N_STAT),
+            "fc1": kfac_lib.TapInfo("fc1/w", D_H, D_OUT, n_stat=N_STAT)}
+    return params, taps
+
+
+def _loss(params, probes, batch):
+    x, y = batch
+    acts = {}
+    h, acts["fc0"] = layers.tapped_matmul(params["fc0"]["w"], x,
+                                          probes.get("fc0"), N_STAT)
+    h = jax.nn.relu(h)
+    h, acts["fc1"] = layers.tapped_matmul(params["fc1"]["w"], h,
+                                          probes.get("fc1"), N_STAT)
+    return jnp.mean(jnp.square(h - y)), acts
+
+
+def _batches(n):
+    key = jax.random.PRNGKey(3)
+    out = []
+    for i in range(n):
+        x = jax.random.normal(jax.random.fold_in(key, i + 1),
+                              (N_BS, D_IN))
+        out.append((x, jnp.tanh(x[:, :D_OUT])))
+    return out
+
+
+def _opt():
+    pol = api.PolicyConfig(variant="bkfac", r=4, max_dense_dim=512)
+    cfg = api.KfacConfig(policy=pol, lr=optbase.constant(0.05),
+                         damping_phi=optbase.constant(0.1),
+                         T_updt=1, T_inv=2, T_brand=1, T_rsvd=2,
+                         T_corct=2)
+    _, taps = _make()
+    return api.Kfac(cfg, taps)
+
+
+def _tree_eq(a, b):
+    jax.tree_util.tree_map(
+        lambda x, y: np.testing.assert_array_equal(np.asarray(x),
+                                                   np.asarray(y)), a, b)
+
+
+# ---------------------------------------------------------------------------
+# legacy kwargs -> spec objects (run_kfac_training)
+# ---------------------------------------------------------------------------
+
+def test_legacy_kwargs_equal_specs_and_warn(tmp_path):
+    params, _ = _make()
+    batches = _batches(4)
+
+    specs._WARNED.clear()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        s_old, l_old = loop.run_kfac_training(
+            _loss, _opt(), params, batches, n_tokens=N_BS, seed=0,
+            ckpt_dir=str(tmp_path / "old"), ckpt_every=2, ckpt_keep=2)
+    dep = [x for x in w if issubclass(x.category, DeprecationWarning)]
+    assert dep, "legacy kwargs must raise DeprecationWarning"
+    assert "CkptSpec" in str(dep[0].message)
+
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        s_new, l_new = loop.run_kfac_training(
+            _loss, _opt(), params, batches, n_tokens=N_BS, seed=0,
+            ckpt=api.CkptSpec(dir=str(tmp_path / "new"), every=2, keep=2))
+    assert not [x for x in w if issubclass(x.category,
+                                           DeprecationWarning)]
+
+    np.testing.assert_array_equal(np.asarray(l_old), np.asarray(l_new))
+    _tree_eq(s_old.params, s_new.params)
+    _tree_eq(s_old.opt.factors, s_new.opt.factors)
+
+
+def test_legacy_kwarg_warns_once_per_process():
+    specs._WARNED.clear()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        for _ in range(3):
+            specs.warn_once("k", "msg")
+    assert len(w) == 1
+
+
+def test_spec_plus_legacy_conflict_raises():
+    params, _ = _make()
+    with pytest.raises(ValueError, match="conflicts"):
+        loop.run_kfac_training(
+            _loss, _opt(), params, _batches(1), n_tokens=N_BS,
+            ckpt=api.CkptSpec(dir="x"), ckpt_dir="y")
+
+
+def test_unknown_kwarg_raises():
+    params, _ = _make()
+    with pytest.raises(TypeError, match="unexpected keyword"):
+        loop.run_kfac_training(_loss, _opt(), params, _batches(1),
+                               n_tokens=N_BS, no_such_option=1)
+
+
+# ---------------------------------------------------------------------------
+# three-bool shims (Kfac.update / KfacConfig.flags / make_kfac_step)
+# ---------------------------------------------------------------------------
+
+def test_update_bool_shim_matches_work_mask():
+    params, _ = _make()
+    opt = _opt()
+    state = opt.init(params)
+    probes = layers.make_probes(opt.taps, jnp.float32)
+    loss, acts, gp, gprobe = loop.kfac_grads(_loss, params, probes,
+                                             _batches(1)[0])
+    rng = jax.random.PRNGKey(7)
+    specs._WARNED.clear()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        u_old, s_old = opt.update(gp, state, params, acts=acts,
+                                  probe_grads=gprobe, n_tokens=N_BS,
+                                  rng=rng, do_stats=True, do_light=True,
+                                  do_heavy=True)
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    u_new, s_new = opt.update(gp, state, params, acts=acts,
+                              probe_grads=gprobe, n_tokens=N_BS, rng=rng,
+                              work=opt.uniform_work(True, True, True))
+    _tree_eq(u_old, u_new)
+    _tree_eq(s_old.factors, s_new.factors)
+
+
+def test_flags_shim_warns_and_delegates():
+    opt = _opt()
+    specs._WARNED.clear()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        flags = opt.cfg.flags(0)
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    assert flags == {"do_stats": True, "do_light": True,
+                     "do_heavy": False}
+
+
+def test_make_kfac_step_shim_matches_scheduled():
+    params, _ = _make()
+    batch = _batches(1)[0]
+    opt = _opt()
+    specs._WARNED.clear()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        legacy = loop.make_kfac_step(_loss, opt, n_tokens=N_BS)
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    scheduled = loop.make_scheduled_kfac_step(_loss, opt, n_tokens=N_BS)
+    st0 = loop.TrainState(params=params, opt=opt.init(params),
+                          rng=jax.random.PRNGKey(0))
+    s_old, loss_old = legacy(st0, batch, True, True, False)
+    s_new, loss_new = scheduled(st0, batch,
+                                opt.uniform_work(True, True, False))
+    np.testing.assert_array_equal(np.asarray(loss_old),
+                                  np.asarray(loss_new))
+    _tree_eq(s_old.params, s_new.params)
+
+
+def test_build_train_step_rejects_mixed_dist_and_loose():
+    from repro.configs.base import get_arch
+    from repro.launch import steps as steps_lib
+    with pytest.raises(ValueError, match="not both"):
+        steps_lib.build_train_step(
+            get_arch("gemma3_4b").reduced(),
+            dist=api.DistSpec(curvature_axis="curv"),
+            curvature_axis="curv")

@@ -56,8 +56,8 @@ def _run(taps, variant, bucketed, steps=2, heavy_every=2, r=8,
         upd, st = opt.update(grads, st, params, acts=acts, probe_grads=pgs,
                              n_tokens=list(taps.values())[0].n_stat,
                              rng=jax.random.fold_in(key, s),
-                             do_stats=True, do_light=True,
-                             do_heavy=(s % heavy_every == 0))
+                             work=opt.uniform_work(
+                                 True, True, s % heavy_every == 0))
         outs.append(upd)
     return opt, outs
 

@@ -36,6 +36,7 @@ from repro.train import elastic, loop, straggler
 from repro.train.chaos import ChaosMonkey, Fault
 from repro.train.health import (HealthConfig, RemediationPolicy,
                                 STAGE_ELASTIC)
+from repro import specs
 
 from test_obs import (N_BS, _batches, _cfg, _make_mlp, _marked_variants,
                       _mlp_loss, _assert_identical)
@@ -51,11 +52,14 @@ def _train(variant, steps=9, health=None, policy_obj=None, overlap=False,
     out = loop.run_kfac_training(
         _mlp_loss, opt, None if state is not None else params,
         batches if batches is not None else _batches(steps),
-        n_tokens=N_BS, seed=0, mesh=mesh, curvature_axis=curvature_axis,
-        row_axis=row_axis, curvature_compress=curvature_compress,
-        state=state, overlap=overlap, writer=writer,
-        metrics_every=metrics_every, health=health, policy=policy_obj,
-        chaos=chaos, ckpt_dir=ckpt_dir, ckpt_every=ckpt_every)
+        n_tokens=N_BS, seed=0, state=state, overlap=overlap,
+        dist=specs.DistSpec(mesh=mesh, curvature_axis=curvature_axis,
+                            row_axis=row_axis,
+                            curvature_compress=curvature_compress),
+        obs=specs.ObsSpec(writer=writer, metrics_every=metrics_every),
+        resilience=specs.ResilienceSpec(health=health, policy=policy_obj,
+                                        chaos=chaos),
+        ckpt=specs.CkptSpec(dir=ckpt_dir, every=ckpt_every))
     return out
 
 
@@ -587,8 +591,9 @@ def test_host_loss_mid_cycle_resumes_phase_on_shrunk_mesh(tmp_path):
     with ev_lib.TelemetryWriter(res_path, console=False) as w:
         state, tail = loop.run_kfac_training(
             _mlp_loss, opt, None, _batches(steps)[man["step"] + 1:],
-            n_tokens=N_BS, state=restored, mesh=mesh4,
-            curvature_axis="curv", writer=w)
+            n_tokens=N_BS, state=restored,
+            dist=specs.DistSpec(mesh=mesh4, curvature_axis="curv"),
+            obs=specs.ObsSpec(writer=w))
     res_labels = [e["phase"] for e in ev_lib.read_events(res_path)
                   if e["type"] == "step"]
     # cadence resumes mid-cycle: label-for-label the uninterrupted tail,
@@ -648,9 +653,10 @@ def test_host_loss_mid_cycle_2d_mesh_compressed_collectives(tmp_path):
     with ev_lib.TelemetryWriter(res_path, console=False) as w:
         state, tail = loop.run_kfac_training(
             _mlp_loss, opt, None, _batches(steps)[man["step"] + 1:],
-            n_tokens=N_BS, state=restored, mesh=mesh22,
-            curvature_axis="curv", row_axis="data",
-            curvature_compress=6, writer=w)
+            n_tokens=N_BS, state=restored,
+            dist=specs.DistSpec(mesh=mesh22, curvature_axis="curv",
+                                row_axis="data", curvature_compress=6),
+            obs=specs.ObsSpec(writer=w))
     res_labels = [e["phase"] for e in ev_lib.read_events(res_path)
                   if e["type"] == "step"]
     assert res_labels == ref_labels[man["step"] + 1:]

@@ -234,8 +234,7 @@ def test_stacked_optimizer_update_kernels_match_jnp(interpret_mode):
             upd, st = opt.update(grads, st, params, acts=acts,
                                  probe_grads=pgs, n_tokens=N,
                                  rng=jax.random.fold_in(key, 10 + step),
-                                 do_stats=True, do_light=True,
-                                 do_heavy=False)
+                                 work=opt.uniform_work(True, True, False))
         return upd["blk"]["w"]
 
     a, b = run(False), run(True)

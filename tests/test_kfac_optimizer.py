@@ -135,16 +135,20 @@ def test_momentum_and_schedules():
 
 
 def test_flags_schedule():
+    from repro.core import schedule
+    flags = schedule.legacy_flags
     cfg = _cfg("brkfac", T_updt=2, T_brand=2, T_rsvd=4)
-    assert cfg.flags(0) == dict(do_stats=True, do_light=True, do_heavy=True)
-    assert cfg.flags(3) == dict(do_stats=False, do_light=False,
-                                do_heavy=False)
-    assert cfg.flags(2) == dict(do_stats=True, do_light=True, do_heavy=False)
+    assert flags(cfg, 0) == dict(do_stats=True, do_light=True,
+                                 do_heavy=True)
+    assert flags(cfg, 3) == dict(do_stats=False, do_light=False,
+                                 do_heavy=False)
+    assert flags(cfg, 2) == dict(do_stats=True, do_light=True,
+                                 do_heavy=False)
     cfg_k = _cfg("kfac", T_updt=5, T_inv=5)
-    assert cfg_k.flags(5) == dict(do_stats=True, do_light=False,
-                                  do_heavy=True)
-    assert cfg_k.flags(3) == dict(do_stats=False, do_light=False,
-                                  do_heavy=False)
+    assert flags(cfg_k, 5) == dict(do_stats=True, do_light=False,
+                                   do_heavy=True)
+    assert flags(cfg_k, 3) == dict(do_stats=False, do_light=False,
+                                   do_heavy=False)
 
 
 @pytest.mark.slow

@@ -24,6 +24,7 @@ from repro.obs import metrics as m_lib
 from repro.obs import summary as sum_lib
 from repro.optim import base as optbase
 from repro.train import loop
+from repro import specs
 
 D_IN, D_H, D_OUT, N_BS, N_STAT = 12, 32, 4, 16, 16
 
@@ -60,7 +61,9 @@ _SAMPLE_EVENTS = {
     "repartition": dict(detail="8 -> 6 devices"),
     "remediation": dict(step=4, stage=1, action="escalate",
                         detail="damping scale 1 -> 8"),
-    "serve_request": dict(uid=1, wait_s=0.0, total_s=0.2, n_new=32),
+    "serve_request": dict(uid=1, wait_s=0.0, total_s=0.2, n_new=32,
+                          tenant=0, kind="infer"),
+    "tenant_update": dict(tenant=0, step=3, loss=1.5, phase="light"),
 }
 
 
@@ -243,8 +246,9 @@ def _train(variant, telemetry_path=None, steps=9, mesh=None,
               if telemetry_path else None)
     state, losses = loop.run_kfac_training(
         _mlp_loss, opt, params, _batches(steps), n_tokens=N_BS, seed=0,
-        mesh=mesh, curvature_axis=curvature_axis, writer=writer,
-        metrics_every=3 if writer else 0)
+        dist=specs.DistSpec(mesh=mesh, curvature_axis=curvature_axis),
+        obs=specs.ObsSpec(writer=writer,
+                          metrics_every=3 if writer else 0))
     if writer is not None:
         writer.close()
     return state, losses

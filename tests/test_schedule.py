@@ -64,7 +64,7 @@ def test_flags_exact_cadence_1000_steps(variant):
     has_light, heavy_attr = _EXPECTED[variant]
     T_heavy = None if heavy_attr is None else getattr(cfg, heavy_attr)
     for k in range(1000):
-        flags = cfg.flags(k)
+        flags = schedule.legacy_flags(cfg, k)
         assert flags["do_stats"] == (k % cfg.T_updt == 0), (variant, k)
         assert flags["do_light"] == (has_light and k % cfg.T_brand == 0), \
             (variant, k)
@@ -87,8 +87,8 @@ def test_corct_and_rsvd_cannot_shadow():
     cfg_b = _cfg("brkfac", T_rsvd=7, T_corct=11)
     cfg_c = _cfg("bkfacc", T_rsvd=7, T_corct=11)
     for k in range(1000):
-        assert cfg_b.flags(k)["do_heavy"] == (k % 7 == 0)
-        assert cfg_c.flags(k)["do_heavy"] == (k % 11 == 0)
+        assert schedule.legacy_flags(cfg_b, k)["do_heavy"] == (k % 7 == 0)
+        assert schedule.legacy_flags(cfg_c, k)["do_heavy"] == (k % 11 == 0)
 
 
 # ---------------------------------------------------------------------------
@@ -104,7 +104,7 @@ def test_unstaggered_work_equals_legacy_flags(variant):
     opt = _opt(variant)
     sched = opt.scheduler()
     for k in range(2 * sched.cycle):
-        flags = opt.cfg.flags(k)
+        flags = schedule.legacy_flags(opt.cfg, k)
         assert sched.work(k) == opt.uniform_work(**flags), (variant, k)
 
 

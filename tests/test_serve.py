@@ -1,0 +1,177 @@
+"""Serving path: per-slot decode lanes (engine.py) and the multi-tenant
+fine-tuning service (service.py + load.py).
+
+The headline regression: two requests admitted STAGGERED (the second
+joins while the first is mid-decode) must produce exactly the tokens each
+would produce alone — the seed engine's shared position counter
+(`max(self._pos)`) broke this, decoding late joiners at their neighbor's
+position.
+"""
+import glob
+import json
+import os
+
+import numpy as np
+import jax
+import pytest
+
+from repro.configs.base import get_arch
+from repro.models.lm import LM
+from repro.serve import load as load_lib
+from repro.serve.engine import Engine, Request
+from repro.serve.service import FinetuneRequest
+from repro.train import checkpoint as ckpt_lib
+
+
+@pytest.fixture(scope="module")
+def small_lm():
+    arch = get_arch("gemma3_4b").reduced()
+    lm = LM(arch, remat=False)
+    params = lm.init(jax.random.PRNGKey(0))
+    return arch, lm, params
+
+
+def _serve_one(lm, params, req, **kw):
+    eng = Engine(lm, params, **kw)
+    eng.submit(req)
+    eng.run_until_drained()
+    return eng.completed[req.uid].out_tokens
+
+
+# ---------------------------------------------------------------------------
+# per-slot positions
+# ---------------------------------------------------------------------------
+
+def test_staggered_requests_match_sequential(small_lm):
+    """Admit request B while A is mid-decode: both must emit exactly the
+    tokens they emit when served alone."""
+    _, lm, params = small_lm
+    ra = lambda: Request(uid=0, prompt=[3, 1, 4, 1, 5], max_new=6)
+    rb = lambda: Request(uid=1, prompt=[2, 7], max_new=6)
+    alone_a = _serve_one(lm, params, ra(), batch_slots=2, max_len=32)
+    alone_b = _serve_one(lm, params, rb(), batch_slots=2, max_len=32)
+
+    eng = Engine(lm, params, batch_slots=2, max_len=32)
+    a, b = ra(), rb()
+    eng.submit(a)
+    for _ in range(4):          # A is 4 positions in when B arrives
+        eng.step()
+    eng.submit(b)
+    eng.run_until_drained()
+    assert eng.completed[0].out_tokens == alone_a
+    assert eng.completed[1].out_tokens == alone_b
+
+
+def test_slot_reuse_after_drain_matches_alone(small_lm):
+    """A request admitted into a slot whose previous occupant finished
+    (stale cache entries beyond its horizon) decodes as if alone."""
+    _, lm, params = small_lm
+    first = Request(uid=0, prompt=[9, 9, 9, 9, 9, 9], max_new=4)
+    second = lambda: Request(uid=1, prompt=[5, 3], max_new=5)
+    alone = _serve_one(lm, params, second(), batch_slots=1, max_len=32)
+    eng = Engine(lm, params, batch_slots=1, max_len=32)
+    eng.submit(first)
+    eng.run_until_drained()
+    r = second()
+    eng.submit(r)
+    eng.run_until_drained()
+    assert eng.completed[1].out_tokens == alone
+
+
+# ---------------------------------------------------------------------------
+# checkpoint schema v6: tenant table
+# ---------------------------------------------------------------------------
+
+def test_ckpt_v6_tenant_table_roundtrip(tmp_path):
+    tree = {"w": np.arange(6.0).reshape(2, 3)}
+    table = [{"tenant": 0, "slot": 0, "step": 7},
+             {"tenant": 1, "slot": 1, "step": 3}]
+    ckpt_lib.save(str(tmp_path), 5, tree, tenants=table)
+    out, manifest = ckpt_lib.restore(str(tmp_path), tree)
+    assert manifest["schema"] == ckpt_lib.SCHEMA_VERSION == 6
+    assert manifest["tenants"] == table
+    np.testing.assert_array_equal(out["w"], tree["w"])
+
+
+def test_ckpt_without_tenants_stays_compatible(tmp_path):
+    """Single-tenant saves (and pre-v6 manifests, which lack the key
+    entirely) read back with tenants absent — additive change."""
+    tree = {"w": np.ones((2,))}
+    ckpt_lib.save(str(tmp_path), 1, tree)
+    _, manifest = ckpt_lib.restore(str(tmp_path), tree)
+    assert manifest.get("tenants") is None
+    # a v5-era manifest (no "tenants" key at all) behaves the same
+    man_path = glob.glob(str(tmp_path / "step_*/manifest.json"))[0]
+    with open(man_path) as f:
+        man = json.load(f)
+    del man["tenants"]
+    man["schema"] = 5
+    with open(man_path, "w") as f:
+        json.dump(man, f)
+    _, manifest = ckpt_lib.restore(str(tmp_path), tree)
+    assert manifest.get("tenants") is None
+
+
+# ---------------------------------------------------------------------------
+# multi-tenant service under mixed load (slow: compiles train + decode)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_mixed_load_smoke(tmp_path):
+    from repro.obs import TelemetryWriter
+    events = str(tmp_path / "events.jsonl")
+    with TelemetryWriter(events, console=False) as writer:
+        svc, arch = load_lib.build_service(tenants=3, writer=writer,
+                                           max_len=32)
+        ticks = load_lib.run_load(svc, arch.vocab, waves=2,
+                                  infer_per_wave=2, ft_per_wave=3,
+                                  ticks_between=2)
+    report = svc.latency_report()
+    assert report["infer"]["requests"] == 4
+    assert report["finetune"]["requests"] == 6
+    # every tenant that got fine-tune traffic advanced its own step
+    assert sum(report["steps"]) == 6
+    assert ticks < 200
+    # emitted events validate and carry the per-tenant fields
+    from repro.obs import events as ev_lib
+    evs = list(ev_lib.read_events(events))
+    kinds = {e["type"] for e in evs}
+    assert "tenant_update" in kinds and "serve_request" in kinds
+    assert all("tenant" in e for e in evs
+               if e["type"] == "serve_request")
+
+
+@pytest.mark.slow
+def test_service_tenant_isolation_and_restore(tmp_path):
+    """Fine-tuning tenant 0 must not move tenant 1's params; a restored
+    service re-seats per-tenant steps from the v6 tenant table."""
+    ckpt_dir = str(tmp_path / "ckpt")
+    svc, arch = load_lib.build_service(tenants=2, max_len=32,
+                                       ckpt_dir=ckpt_dir)
+    rng = np.random.default_rng(0)
+    B, T = svc.ft_shape
+    batch = {"tokens": rng.integers(0, arch.vocab, (B, T)).astype(np.int32),
+             "targets": rng.integers(0, arch.vocab, (B, T)).astype(np.int32)}
+    before = jax.tree_util.tree_map(np.asarray, svc.params)
+    for k in range(3):
+        svc.submit(FinetuneRequest(uid=k, tenant=0, batch=batch))
+    svc.run_until_drained()
+    after = jax.tree_util.tree_map(np.asarray, svc.params)
+    moved = any(not np.array_equal(a[0], b[0]) for a, b in
+                zip(jax.tree_util.tree_leaves(after),
+                    jax.tree_util.tree_leaves(before)))
+    assert moved                      # tenant 0 learned
+    for a, b in zip(jax.tree_util.tree_leaves(after),
+                    jax.tree_util.tree_leaves(before)):
+        np.testing.assert_array_equal(a[1], b[1])   # tenant 1 untouched
+    assert svc.steps == [3, 0]
+    svc.save_checkpoint()
+
+    fresh, _ = load_lib.build_service(tenants=2, max_len=32,
+                                      ckpt_dir=ckpt_dir)
+    manifest = fresh.restore()
+    assert fresh.steps == [3, 0]
+    assert manifest["tenants"][0]["step"] == 3
+    for a, b in zip(jax.tree_util.tree_leaves(fresh.params),
+                    jax.tree_util.tree_leaves(after)):
+        np.testing.assert_array_equal(np.asarray(a), b)

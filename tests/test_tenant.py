@@ -1,0 +1,281 @@
+"""TenantBank (core/tenant.py): N independent optimizer states stacked on
+a leading tenant axis.
+
+Correctness anchors (ISSUE 10):
+  * N=1 bank  ≡ plain Kfac, bit-for-bit (the squeeze fast path IS the
+    plain program);
+  * N-tenant stacked ≡ N sequential independent runs (allclose; batched
+    linalg may reassociate) — across all 6 policy variants;
+  * active-masked tenants are carried through bit-exactly (state AND
+    params), and active lanes are unaffected by who else is masked;
+  * schedule.group_by_work partitions tenants into O(#distinct-mask)
+    stacked launches.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import kfac as kfac_lib, policy, schedule, tenant
+from repro.optim import base as optbase
+
+VARIANTS = ["kfac", "rkfac", "bkfac", "brkfac", "bkfacc", "nskfac"]
+
+
+def _taps(N=8):
+    """Two shape classes (24→16 pair + 24-wide scan) so buckets stay
+    non-trivial while the arrays stay tiny."""
+    return {
+        "fc":   kfac_lib.TapInfo("fc/w", 24, 16, n_stat=N),
+        "fc2":  kfac_lib.TapInfo("fc2/w", 24, 16, n_stat=N),
+        "scan": kfac_lib.TapInfo("scan/w", 24, 24, stack=(2,), n_stat=N),
+    }
+
+
+def _opt(variant, taps):
+    pol = policy.PolicyConfig(variant=variant, r=4, max_dense_dim=8192)
+    cfg = kfac_lib.KfacConfig(policy=pol, lr=optbase.constant(0.05),
+                              momentum=0.9, T_updt=1, T_brand=1,
+                              bucketed=True)
+    return kfac_lib.Kfac(cfg, taps)
+
+
+def _tenant_data(taps, key, t):
+    k = jax.random.fold_in(key, t)
+    params, grads, acts, pgs = {}, {}, {}, {}
+    for i, (n, tap) in enumerate(taps.items()):
+        shp = tap.stack + (tap.d_in, tap.d_out)
+        params[n] = {"w": jax.random.normal(jax.random.fold_in(k, i),
+                                            shp) * 0.05}
+        grads[n] = {"w": jax.random.normal(jax.random.fold_in(k, 10 + i),
+                                           shp)}
+        acts[n] = jax.random.normal(jax.random.fold_in(k, 20 + i),
+                                    tap.stack + (tap.n_stat, tap.d_in))
+        pgs[n] = jax.random.normal(jax.random.fold_in(k, 30 + i),
+                                   tap.stack + (tap.n_stat, tap.d_out)) * 1e-3
+    return params, grads, acts, pgs
+
+
+def _work(opt, s, heavy_every=2):
+    return opt.uniform_work(True, True, s % heavy_every == 0)
+
+
+def _run_sequential(opt, taps, n, steps=3):
+    """n independent plain-Kfac runs; returns per-tenant update/state
+    histories."""
+    key = jax.random.PRNGKey(0)
+    rkey = jax.random.PRNGKey(7)
+    outs, states = [], []
+    for t in range(n):
+        params, grads, acts, pgs = _tenant_data(taps, key, t)
+        st = opt.init(params)
+        ups = []
+        for s in range(steps):
+            upd, st = opt.update(
+                grads, st, params, acts=acts, probe_grads=pgs,
+                n_tokens=list(taps.values())[0].n_stat,
+                rng=jax.random.fold_in(jax.random.fold_in(rkey, t), s),
+                work=_work(opt, s))
+            ups.append(upd)
+        outs.append(ups)
+        states.append(st)
+    return outs, states
+
+
+def _run_stacked(opt, taps, n, steps=3, active=None):
+    key = jax.random.PRNGKey(0)
+    rkey = jax.random.PRNGKey(7)
+    per = [_tenant_data(taps, key, t) for t in range(n)]
+    params = tenant.tree_stack([p[0] for p in per])
+    grads = tenant.tree_stack([p[1] for p in per])
+    acts = tenant.tree_stack([p[2] for p in per])
+    pgs = tenant.tree_stack([p[3] for p in per])
+    bank = tenant.TenantBank(opt)
+    st = bank.init(params)
+    ups = []
+    for s in range(steps):
+        rngs = jnp.stack([jax.random.fold_in(jax.random.fold_in(rkey, t), s)
+                          for t in range(n)])
+        upd, st = bank.update(grads, st, params, acts=acts, probe_grads=pgs,
+                              n_tokens=list(taps.values())[0].n_stat,
+                              rngs=rngs, work=_work(opt, s), active=active)
+        ups.append(upd)
+    return bank, ups, st
+
+
+def _leaves_equal(a, b):
+    for x, y in zip(jax.tree_util.tree_leaves(a),
+                    jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# N=1 ≡ plain Kfac, bit-for-bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("variant", ["bkfac", "kfac"])
+def test_single_tenant_bank_is_bitwise_plain_kfac(variant):
+    taps = _taps()
+    opt = _opt(variant, taps)
+    seq, seq_states = _run_sequential(opt, taps, n=1)
+    _, stk, stk_state = _run_stacked(opt, taps, n=1)
+    for s_up, b_up in zip(seq[0], stk):
+        _leaves_equal(s_up, tenant.tree_slot(b_up, 0))
+    _leaves_equal(seq_states[0], tenant.tree_slot(stk_state, 0))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_single_tenant_bitwise_all_variants(variant):
+    taps = _taps()
+    opt = _opt(variant, taps)
+    seq, seq_states = _run_sequential(opt, taps, n=1)
+    _, stk, stk_state = _run_stacked(opt, taps, n=1)
+    for s_up, b_up in zip(seq[0], stk):
+        _leaves_equal(s_up, tenant.tree_slot(b_up, 0))
+    _leaves_equal(seq_states[0], tenant.tree_slot(stk_state, 0))
+
+
+# ---------------------------------------------------------------------------
+# N-tenant stacked ≡ N sequential (allclose)
+# ---------------------------------------------------------------------------
+
+def _assert_stacked_matches_sequential(variant, n=3, steps=3, atol=3e-4):
+    # vmap changes the lowering of the batched matmul/Cholesky chains
+    # (reduction order), so the comparison is absolute-dominated: lane
+    # values are O(5e-3) and the batched-vs-unbatched drift stays under
+    # ~1e-4 after 3 Brand steps (bitwise lane-independence — identical
+    # inputs → identical lanes — is asserted separately below).
+    taps = _taps()
+    opt = _opt(variant, taps)
+    seq, _ = _run_sequential(opt, taps, n=n, steps=steps)
+    _, stk, _ = _run_stacked(opt, taps, n=n, steps=steps)
+    for s in range(steps):
+        for t in range(n):
+            one = tenant.tree_slot(stk[s], t)
+            for name in taps:
+                x = np.asarray(seq[t][s][name]["w"])
+                y = np.asarray(one[name]["w"])
+                assert np.isfinite(x).all() and np.isfinite(y).all()
+                np.testing.assert_allclose(y, x, atol=atol, rtol=1e-2)
+
+
+def test_stacked_matches_sequential_bkfac():
+    _assert_stacked_matches_sequential("bkfac")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_stacked_matches_sequential_all_variants(variant):
+    _assert_stacked_matches_sequential(variant)
+
+
+def test_identical_inputs_give_bitwise_identical_lanes():
+    """The lane-independence half of the allclose claim: tenants with
+    identical inputs produce identical slices, bit for bit — any
+    cross-tenant contamination in the stacked program would break it."""
+    taps = _taps()
+    opt = _opt("bkfac", taps)
+    key = jax.random.PRNGKey(0)
+    p, g, a, pg = _tenant_data(taps, key, 0)
+    stack3 = lambda t: tenant.tree_stack([t, t, t])
+    params = stack3(p)
+    bank = tenant.TenantBank(opt)
+    st = bank.init(params)
+    for s in range(2):
+        rngs = jnp.stack([jax.random.fold_in(key, 100 + s)] * 3)
+        upd, st = bank.update(stack3(g), st, params, acts=stack3(a),
+                              probe_grads=stack3(pg), n_tokens=8,
+                              rngs=rngs, work=_work(opt, s))
+    for tree in (upd, st):
+        for leaf in jax.tree_util.tree_leaves(tree):
+            x = np.asarray(leaf)
+            np.testing.assert_array_equal(x[0], x[1])
+            np.testing.assert_array_equal(x[0], x[2])
+
+
+# ---------------------------------------------------------------------------
+# active masking
+# ---------------------------------------------------------------------------
+
+def test_inactive_tenants_are_bitwise_inert():
+    taps = _taps()
+    opt = _opt("bkfac", taps)
+    n = 3
+    active = jnp.array([True, False, True])
+    bank, ups_m, st_m = _run_stacked(opt, taps, n=n, active=active)
+    _, ups_f, st_f = _run_stacked(opt, taps, n=n, active=None)
+    st0 = bank.init(tenant.tree_stack(
+        [_tenant_data(taps, jax.random.PRNGKey(0), t)[0] for t in range(n)]))
+    # masked tenant 1: state identical to its init, updates exactly zero
+    _leaves_equal(tenant.tree_slot(st_m, 1), tenant.tree_slot(st0, 1))
+    for up in ups_m:
+        for leaf in jax.tree_util.tree_leaves(tenant.tree_slot(up, 1)):
+            np.testing.assert_array_equal(np.asarray(leaf), 0.0)
+    # active tenants: identical to the all-active run, step by step
+    for t in (0, 2):
+        _leaves_equal(tenant.tree_slot(st_m, t), tenant.tree_slot(st_f, t))
+        for um, uf in zip(ups_m, ups_f):
+            _leaves_equal(tenant.tree_slot(um, t), tenant.tree_slot(uf, t))
+
+
+def test_apply_updates_masks_params_bitwise():
+    taps = _taps()
+    opt = _opt("bkfac", taps)
+    _, ups, _ = _run_stacked(opt, taps, n=2)
+    params = tenant.tree_stack(
+        [_tenant_data(taps, jax.random.PRNGKey(0), t)[0] for t in range(2)])
+    active = jnp.array([True, False])
+    new = tenant.TenantBank.apply_updates(params, ups[0], active=active)
+    _leaves_equal(tenant.tree_slot(new, 1), tenant.tree_slot(params, 1))
+    full = tenant.TenantBank.apply_updates(params, ups[0])
+    _leaves_equal(tenant.tree_slot(new, 0), tenant.tree_slot(full, 0))
+
+
+# ---------------------------------------------------------------------------
+# bank plumbing: stack/unstack/checkout/admit, group_by_work
+# ---------------------------------------------------------------------------
+
+def test_checkout_checkin_roundtrip():
+    taps = _taps()
+    opt = _opt("bkfac", taps)
+    per = [_tenant_data(taps, jax.random.PRNGKey(0), t)[0] for t in range(2)]
+    bank = tenant.TenantBank(opt)
+    st = bank.init(tenant.tree_stack(per))
+    one = bank.checkout(st, 1)
+    _leaves_equal(bank.checkin(st, 1, one), st)
+    # admit re-inits a slot from fresh params
+    st2 = bank.admit(st, 0, per[1])
+    _leaves_equal(tenant.tree_slot(st2, 0), opt.init(per[1]))
+
+
+def test_tree_stack_unstack_roundtrip():
+    trees = [{"a": jnp.arange(3.0) + t} for t in range(4)]
+    back = tenant.tree_unstack(tenant.tree_stack(trees))
+    for a, b in zip(trees, back):
+        _leaves_equal(a, b)
+
+
+def test_group_by_work_partitions_tenants():
+    taps = _taps()
+    opt = _opt("bkfac", taps)
+    sched = opt.scheduler()
+    steps = [0, 1, 0, 7, 1]
+    groups = schedule.group_by_work(sched, steps)
+    seen = sorted(i for ix in groups.values() for i in ix)
+    assert seen == list(range(len(steps)))          # exact partition
+    for work, ix in groups.items():
+        for i in ix:
+            assert sched.work(steps[i]) == work     # mask-consistent
+    # tenants at the same schedule position always share a launch group
+    assert any(set(ix) >= {0, 2} for ix in groups.values())
+
+
+def test_launch_groups_static_in_tenant_count():
+    taps = _taps()
+    opt = _opt("bkfac", taps)
+    bank = tenant.TenantBank(opt)
+    g = bank.launch_groups()
+    assert g == len(opt.factor_buckets) + len(opt.precond_buckets)
+    # the stacked program has the same decomposition-site count at any N:
+    # measured in benchmarks/serve_bench.py by counting jaxpr call sites.
